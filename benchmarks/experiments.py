@@ -1,0 +1,101 @@
+"""Agentic experiment sweep (paper §5 protocol).
+
+For every (app × instance × pattern × deployment): run until 5 successes
+(≈5 runs per paper §5.3), computing success rate as 5/total-needed
+(§5.4.2). Results are cached in artifacts/agent_runs.json; every figure
+function reads from the cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+from typing import Dict, List
+
+from repro.apps.apps import APPS
+from repro.apps.runner import run_app, score_run
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+CACHE = os.path.join(ART, "agent_runs.json")
+
+PATTERNS = ["react", "agentx", "magentic"]
+DEPLOYMENTS = ["local", "faas"]
+N_SUCCESS = 5
+MAX_RUNS = 15
+
+
+def _summarize(r, score) -> Dict:
+    return {
+        "app": r.app, "instance": r.instance, "pattern": r.pattern,
+        "deployment": r.deployment, "success": r.success,
+        "total_latency": r.total_latency,
+        "llm_latency": r.trace.llm_latency,
+        "tool_latency": r.trace.tool_latency,
+        "framework_latency": r.trace.framework_latency,
+        "input_tokens": r.trace.input_tokens,
+        "output_tokens": r.trace.output_tokens,
+        "llm_cost": r.trace.llm_cost, "faas_cost": r.faas_cost,
+        "tool_invocations": r.trace.tool_invocations,
+        "agent_invocations": r.trace.agent_invocations,
+        "tool_breakdown": r.trace.tool_breakdown(),
+        "agent_breakdown": r.trace.agent_breakdown(),
+        "tool_latencies": [{"tool": e.tool, "latency": e.latency}
+                           for e in r.trace.tool_events],
+        "score": score.total, "score_attrs": score.attributes,
+        "failure": r.failure_reason,
+    }
+
+
+def run_sweep(full: bool = True, deployments=None, force: bool = False
+              ) -> List[Dict]:
+    if os.path.exists(CACHE) and not force:
+        return json.load(open(CACHE))
+    deployments = deployments or DEPLOYMENTS
+    records: List[Dict] = []
+    for app_name, app in APPS.items():
+        instances = list(app.instances) if full else list(app.instances)[:1]
+        for inst in instances:
+            for pattern in PATTERNS:
+                for dep in deployments:
+                    succ = 0
+                    seed = 0
+                    runs_needed = 0
+                    while succ < N_SUCCESS and runs_needed < MAX_RUNS:
+                        r = run_app(app_name, inst, pattern, dep, seed=seed)
+                        rec = _summarize(r, score_run(r))
+                        records.append(rec)
+                        runs_needed += 1
+                        seed += 1
+                        if r.success:
+                            succ += 1
+    os.makedirs(ART, exist_ok=True)
+    with open(CACHE, "w") as f:
+        json.dump(records, f)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# aggregation helpers
+
+
+def successes(records, **filt):
+    rows = [r for r in records if r["success"]
+            and all(r[k] == v for k, v in filt.items())]
+    return rows
+
+
+def all_runs(records, **filt):
+    return [r for r in records if all(r[k] == v for k, v in filt.items())]
+
+
+def mean_of(rows, key):
+    vals = [r[key] for r in rows]
+    return statistics.mean(vals) if vals else float("nan")
+
+
+def success_rate(records, **filt):
+    rows = all_runs(records, **filt)
+    if not rows:
+        return float("nan")
+    n_succ = sum(r["success"] for r in rows)
+    return n_succ / len(rows)

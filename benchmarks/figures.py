@@ -1,0 +1,195 @@
+"""One function per paper table/figure. Each emits CSV rows
+(name,value,derived) and returns the rows for run.py aggregation."""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List
+
+from repro.apps.apps import APPS
+from repro.faas.deployments import SERVER_FACTORIES
+
+from .experiments import (all_runs, mean_of, run_sweep, success_rate,
+                          successes)
+
+PATTERNS = ["react", "agentx", "magentic"]
+
+
+def table1_servers(records) -> List[str]:
+    """Table 1: MCP server descriptions."""
+    rows = ["table1.server,tools,origin,execution,memory_mb,storage_mb"]
+    for name, factory in sorted(SERVER_FACTORIES.items()):
+        s = factory()
+        r = s.describe_row()
+        rows.append(f"table1.{name},{r['tools']},{r['origin']},"
+                    f"{r['execution']},{r['memory_mb']},{r['storage_mb']}")
+    return rows
+
+
+def fig4_accuracy(records) -> List[str]:
+    rows = ["fig4.app.instance.pattern,score,attr_breakdown"]
+    for app in APPS:
+        for inst in APPS[app].instances:
+            for p in PATTERNS:
+                sel = successes(records, app=app, instance=inst, pattern=p,
+                                deployment="local")
+                if not sel:
+                    continue
+                score = mean_of(sel, "score")
+                attrs = {}
+                for r in sel:
+                    for k, v in r["score_attrs"].items():
+                        attrs.setdefault(k, []).append(v)
+                detail = ";".join(f"{k}={statistics.mean(v):.0f}"
+                                  for k, v in attrs.items())
+                rows.append(f"fig4.{app}.{inst}.{p},{score:.1f},{detail}")
+    return rows
+
+
+def _latency_rows(records, deployment: str, tag: str) -> List[str]:
+    rows = [f"{tag}.app.instance.pattern,total_s,llm_s;tool_s;framework_s"]
+    for app in APPS:
+        for inst in APPS[app].instances:
+            for p in PATTERNS:
+                sel = successes(records, app=app, instance=inst, pattern=p,
+                                deployment=deployment)
+                if not sel:
+                    continue
+                rows.append(
+                    f"{tag}.{app}.{inst}.{p},"
+                    f"{mean_of(sel, 'total_latency'):.1f},"
+                    f"{mean_of(sel, 'llm_latency'):.1f};"
+                    f"{mean_of(sel, 'tool_latency'):.1f};"
+                    f"{mean_of(sel, 'framework_latency'):.1f}")
+    return rows
+
+
+def fig5_latency_local(records) -> List[str]:
+    return _latency_rows(records, "local", "fig5")
+
+
+def fig6_latency_faas(records) -> List[str]:
+    return _latency_rows(records, "faas", "fig6")
+
+
+def fig7_tool_latency(records) -> List[str]:
+    rows = ["fig7.tool.deployment,mean_s,n"]
+    acc: Dict[tuple, List[float]] = {}
+    for r in records:
+        for e in r["tool_latencies"]:
+            acc.setdefault((e["tool"], r["deployment"]), []).append(
+                e["latency"])
+    for (tool, dep), vals in sorted(acc.items()):
+        rows.append(f"fig7.{tool}.{dep},{statistics.mean(vals):.2f},"
+                    f"{len(vals)}")
+    return rows
+
+
+def fig8_local_vs_faas(records) -> List[str]:
+    rows = ["fig8.app.pattern.deployment,total_s,success_rate"]
+    for app in APPS:
+        for p in PATTERNS:
+            for dep in ("local", "faas"):
+                sel = successes(records, app=app, pattern=p, deployment=dep)
+                sr = success_rate(records, app=app, pattern=p,
+                                  deployment=dep)
+                if not sel:
+                    continue
+                rows.append(f"fig8.{app}.{p}.{dep},"
+                            f"{mean_of(sel, 'total_latency'):.1f},{sr:.2f}")
+    return rows
+
+
+def _token_rows(records, dep, key, tag) -> List[str]:
+    rows = [f"{tag}.app.instance.pattern,{key},n_runs"]
+    for app in APPS:
+        for inst in APPS[app].instances:
+            for p in PATTERNS:
+                sel = successes(records, app=app, instance=inst, pattern=p,
+                                deployment=dep)
+                if not sel:
+                    continue
+                rows.append(f"{tag}.{app}.{inst}.{p},"
+                            f"{mean_of(sel, key):.0f},{len(sel)}")
+    return rows
+
+
+def fig9_input_tokens_local(records) -> List[str]:
+    return _token_rows(records, "local", "input_tokens", "fig9")
+
+
+def fig11_input_tokens_faas(records) -> List[str]:
+    return _token_rows(records, "faas", "input_tokens", "fig11")
+
+
+def fig12_output_tokens_local(records) -> List[str]:
+    return _token_rows(records, "local", "output_tokens", "fig12")
+
+
+def fig13_output_tokens_faas(records) -> List[str]:
+    return _token_rows(records, "faas", "output_tokens", "fig13")
+
+
+def fig14_cost_local(records) -> List[str]:
+    return _token_rows(records, "local", "llm_cost", "fig14")
+
+
+def fig15_cost_faas(records) -> List[str]:
+    return _token_rows(records, "faas", "llm_cost", "fig15")
+
+
+def fig16_lambda_cost(records) -> List[str]:
+    rows = ["fig16.app.instance.pattern,lambda_usd,ratio_vs_llm"]
+    for app in APPS:
+        for inst in APPS[app].instances:
+            for p in PATTERNS:
+                sel = successes(records, app=app, instance=inst, pattern=p,
+                                deployment="faas")
+                if not sel:
+                    continue
+                fc = mean_of(sel, "faas_cost")
+                lc = mean_of(sel, "llm_cost")
+                rows.append(f"fig16.{app}.{inst}.{p},{fc:.8f},"
+                            f"{fc / max(lc, 1e-12):.5f}")
+    return rows
+
+
+def fig17_tool_invokes_local(records) -> List[str]:
+    return _token_rows(records, "local", "tool_invocations", "fig17")
+
+
+def fig18_tool_invokes_faas(records) -> List[str]:
+    return _token_rows(records, "faas", "tool_invocations", "fig18")
+
+
+def fig19_agent_invokes_local(records) -> List[str]:
+    return _token_rows(records, "local", "agent_invocations", "fig19")
+
+
+def fig20_agent_invokes_faas(records) -> List[str]:
+    return _token_rows(records, "faas", "agent_invocations", "fig20")
+
+
+def fig10_fetch_counts(records) -> List[str]:
+    rows = ["fig10.instance.pattern,fetch_calls,search_calls"]
+    for inst in APPS["web_search"].instances:
+        for p in PATTERNS:
+            sel = successes(records, app="web_search", instance=inst,
+                            pattern=p, deployment="local")
+            if not sel:
+                continue
+            fetch = statistics.mean(
+                [r["tool_breakdown"].get("fetch", 0) for r in sel])
+            search = statistics.mean(
+                [r["tool_breakdown"].get("google_search", 0) for r in sel])
+            rows.append(f"fig10.{inst}.{p},{fetch:.1f},{search:.1f}")
+    return rows
+
+
+ALL_FIGURES = [
+    table1_servers, fig4_accuracy, fig5_latency_local, fig6_latency_faas,
+    fig7_tool_latency, fig8_local_vs_faas, fig9_input_tokens_local,
+    fig10_fetch_counts, fig11_input_tokens_faas, fig12_output_tokens_local,
+    fig13_output_tokens_faas, fig14_cost_local, fig15_cost_faas,
+    fig16_lambda_cost, fig17_tool_invokes_local, fig18_tool_invokes_faas,
+    fig19_agent_invokes_local, fig20_agent_invokes_faas,
+]

@@ -1,0 +1,124 @@
+"""Render EXPERIMENTS.md tables from artifacts (dry-run, roofline, perf,
+agent sweep). The narrative sections live in this file; tables auto-fill so
+the doc always matches the artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+import glob
+import json
+import os
+import statistics
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_table(mesh_tag: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, "dryrun",
+                                           f"*__{mesh_tag}.json"))):
+        d = _load(f)
+        if "error" in d:
+            rows.append(f"| {d['arch']} | {d['shape']} | FAILED | | | |")
+            continue
+        mem = d["memory_analysis"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | ok "
+            f"| {(mem.get('argument_bytes') or 0) / 1e9:.2f} "
+            f"| {(mem.get('peak_bytes') or 0) / 1e9:.2f} "
+            f"| {d['collective_bytes_per_chip']['total'] / 1e9:.2f} "
+            f"| {d['compile_s']:.0f} |")
+    hdr = ("| arch | shape | compile | args GB/dev | peak GB/dev "
+           "| coll GB/dev (scan-body once) | compile s |\n"
+           "|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    path = os.path.join(ART, "roofline.json")
+    if not os.path.exists(path):
+        return "_(run `python -m benchmarks.roofline --probe`)_"
+    rows = []
+    for r in _load(path):
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| {r['dominant'].replace('_s', '')} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['compute_s'] / max(total, 1e-30):.2f} "
+            f"| {r['next_step']} |")
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| 6ND/HLO | roofline frac | what would move it |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def perf_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, "perf", "*.json"))):
+        d = _load(f)
+        if "error" in d:
+            rows.append(f"| {d['arch']} | {d['shape']} | {d['variant']} "
+                        f"| FAILED | | | | |")
+            continue
+        t = d["terms"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['variant']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | {d['dominant'].replace('_s', '')} "
+            f"| {(d.get('peak_bytes') or 0) / 1e9:.1f} |")
+    hdr = ("| arch | shape | variant | compute s | memory s | collective s "
+           "| dominant | peak GB |\n|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def agent_summary() -> str:
+    path = os.path.join(ART, "agent_runs.json")
+    if not os.path.exists(path):
+        return "_(run `python -m benchmarks.run`)_"
+    recs = _load(path)
+    rows = []
+    for app in ("web_search", "stock_correlation", "research_report"):
+        for pat in ("react", "agentx", "magentic"):
+            for dep in ("local", "faas"):
+                sel = [r for r in recs if r["app"] == app
+                       and r["pattern"] == pat and r["deployment"] == dep]
+                succ = [r for r in sel if r["success"]]
+                if not sel:
+                    continue
+                sr = len(succ) / len(sel)
+                m = lambda k: statistics.mean(r[k] for r in succ) if succ else 0
+                rows.append(
+                    f"| {app} | {pat} | {dep} | {sr:.0%} "
+                    f"| {m('total_latency'):.1f} | {m('input_tokens'):.0f} "
+                    f"| {m('output_tokens'):.0f} | {m('llm_cost'):.4f} "
+                    f"| {m('score'):.1f} |")
+    hdr = ("| app | pattern | deploy | success | latency s | in tok "
+           "| out tok | LLM $ | accuracy |\n|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+TEMPLATE = open(os.path.join(os.path.dirname(__file__),
+                             "experiments_template.md")).read()
+
+
+def main():
+    out = (TEMPLATE
+           .replace("{{DRYRUN_SINGLE}}", dryrun_table("16x16"))
+           .replace("{{DRYRUN_MULTI}}", dryrun_table("2x16x16"))
+           .replace("{{ROOFLINE}}", roofline_table())
+           .replace("{{PERF}}", perf_table())
+           .replace("{{AGENTS}}", agent_summary()))
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(out)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

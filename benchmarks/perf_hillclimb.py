@@ -1,0 +1,81 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> measure.
+
+For a chosen (arch × shape), measures the probe-corrected roofline terms
+under each sharding variant (repro.launch.variants) plus the full-compile
+memory analysis, and writes one JSON per (combo × variant) into
+artifacts/perf/. EXPERIMENTS.md §Perf narrates the resulting
+hypothesis→before→after→verdict log.
+
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb \
+      --arch deepseek-v2-236b --shape train_4k --variants baseline,zero1
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "perf")
+
+
+def measure(arch: str, shape: str, variant: str) -> dict:
+    from repro.configs import get_config
+    from repro.launch.dryrun import HBM_BW, dryrun_one
+    from repro.launch.probe import corrected_roofline
+
+    t0 = time.time()
+    full = dryrun_one(arch, shape, variant=variant)
+    probe = corrected_roofline(get_config(arch), shape, variant=variant)
+    mem = full["memory_analysis"]
+    mem_bytes = ((mem.get("argument_bytes") or 0)
+                 + (mem.get("output_bytes") or 0)
+                 + 2 * (mem.get("temp_bytes") or 0))
+    terms = {
+        "compute_s": probe["roofline"]["compute_s"],
+        "memory_s": mem_bytes / HBM_BW,
+        "collective_s": probe["roofline"]["collective_s"],
+    }
+    return {
+        "arch": arch, "shape": shape, "variant": variant,
+        "terms": terms, "dominant": max(terms, key=terms.get),
+        "peak_bytes": mem.get("peak_bytes"),
+        "argument_bytes": mem.get("argument_bytes"),
+        "collective_bytes_per_chip": probe["per_chip"]["coll"],
+        "flops_per_chip": probe["per_chip"]["flops"],
+        "useful_flops_ratio": probe["useful_flops_ratio"],
+        "wall_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline,zero1")
+    args = ap.parse_args()
+
+    os.makedirs(ART, exist_ok=True)
+    for variant in args.variants.split(","):
+        tag = f"{args.arch}__{args.shape}__{variant}"
+        print(f"=== {tag} ===", flush=True)
+        try:
+            res = measure(args.arch, args.shape, variant)
+        except Exception as e:
+            res = {"arch": args.arch, "shape": args.shape,
+                   "variant": variant,
+                   "error": f"{type(e).__name__}: {e}"}
+            print("FAILED:", res["error"], flush=True)
+        else:
+            print(json.dumps({"terms": res["terms"],
+                              "dominant": res["dominant"],
+                              "peak_GB": (res["peak_bytes"] or 0) / 1e9},
+                             indent=None), flush=True)
+        with open(os.path.join(ART, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Roofline analysis (assignment §Roofline): per (arch × shape) on the
+single-pod 16×16 mesh, derive the three roofline terms from compiled
+artifacts.
+
+Term sources (see EXPERIMENTS.md §Roofline for the full rationale):
+  compute_s    = probe-corrected HLO FLOPs / 197 TF/s
+                 (probes: L=1 & L=2 unrolled compiles -> per-layer cost,
+                 extrapolated; needed because XLA cost_analysis counts
+                 lax.scan bodies once)
+  memory_s     = (argument + output + 2×temp bytes) / 819 GB/s
+                 from the FULL compile's buffer assignment (real HBM
+                 working set; raw HLO "bytes accessed" ignores fusion)
+  collective_s = probe-corrected collective bytes / 50 GB/s ICI
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--probe] [--arch A --shape S]
+
+--probe runs the 2 probe compiles per combo (slow, run once; cached in
+artifacts/probes/). Without it, the table is assembled from cached probes +
+dry-run artifacts.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse   # noqa: E402
+import glob       # noqa: E402
+import json       # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+DRYRUN_DIR = os.path.join(ART, "dryrun")
+PROBE_DIR = os.path.join(ART, "probes")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_probe(arch: str, shape: str) -> dict:
+    from repro.configs import get_config
+    from repro.launch.probe import corrected_roofline
+    return corrected_roofline(get_config(arch), shape)
+
+
+def load_artifacts():
+    full, probes = {}, {}
+    for f in glob.glob(os.path.join(DRYRUN_DIR, "*__16x16.json")):
+        d = json.load(open(f))
+        if "error" not in d:
+            full[(d["arch"], d["shape"])] = d
+    for f in glob.glob(os.path.join(PROBE_DIR, "*.json")):
+        d = json.load(open(f))
+        probes[(d["arch"], d["shape"])] = d
+    return full, probes
+
+
+def combined_row(arch: str, shape: str, full: dict, probe: dict) -> dict:
+    mem = full["memory_analysis"]
+    mem_bytes = ((mem.get("argument_bytes") or 0)
+                 + (mem.get("output_bytes") or 0)
+                 + 2 * (mem.get("temp_bytes") or 0))
+    flops = probe["per_chip"]["flops"] if probe else full["flops_per_chip"]
+    coll = (probe["per_chip"]["coll"] if probe
+            else full["collective_bytes_per_chip"]["total"])
+    terms = {"compute_s": flops / PEAK_FLOPS,
+             "memory_s": mem_bytes / HBM_BW,
+             "collective_s": coll / ICI_BW}
+    dominant = max(terms, key=terms.get)
+    n_chips = full["n_chips"]
+    ratio = (probe["useful_flops_ratio"] if probe
+             else full["useful_flops_ratio"])
+    total = sum(terms.values())
+    return {
+        "arch": arch, "shape": shape, "kind": full["kind"],
+        "flops_per_chip": flops, "hbm_bytes_per_chip": mem_bytes,
+        "collective_bytes_per_chip": coll,
+        "peak_bytes_per_chip": mem.get("peak_bytes"),
+        **terms, "dominant": dominant,
+        "model_flops": full["model_flops"],
+        "useful_flops_ratio": ratio,
+        "roofline_fraction": terms["compute_s"] / max(total, 1e-30),
+        "probe_corrected": probe is not None,
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute_s":
+        return ("compute-bound: raise MFU via larger per-chip batch or "
+                "fewer remat recomputes")
+    if d == "memory_s":
+        if row["kind"] == "decode":
+            return ("HBM-bound on weight/KV streaming: quantize cache, "
+                    "shrink per-chip cache via more model-parallel cache "
+                    "sharding, or batch more requests per chip")
+        return ("HBM-bound: fuse/remat fewer intermediates or shard "
+                "activations further so per-chip working set drops")
+    return ("collective-bound: reshard to cut all-gathers (e.g. kv-head or "
+            "expert placement), overlap collectives with compute, or move "
+            "traffic from ICI to intra-chip")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probe", action="store_true",
+                    help="run probe compiles for combos missing a cache")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(PROBE_DIR, exist_ok=True)
+    full, probes = load_artifacts()
+
+    combos = sorted(full) if not args.arch else [(args.arch, args.shape)]
+    if args.probe:
+        for arch, shape in combos:
+            if (arch, shape) in probes:
+                continue
+            tag = f"{arch}__{shape}"
+            print(f"probing {tag} ...", flush=True)
+            try:
+                res = run_probe(arch, shape)
+            except Exception as e:
+                print("  probe failed:", e, flush=True)
+                continue
+            with open(os.path.join(PROBE_DIR, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=2)
+            probes[(arch, shape)] = res
+
+    rows = []
+    for arch, shape in sorted(full):
+        row = combined_row(arch, shape, full[(arch, shape)],
+                           probes.get((arch, shape)))
+        row["next_step"] = suggestion(row)
+        rows.append(row)
+
+    with open(os.path.join(ART, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+
+    hdr = (f"{'arch':25s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dominant':>12s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:25s} {r['shape']:12s} {r['compute_s']:10.3e} "
+              f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+              f"{r['dominant'][:-2]:>12s} {r['useful_flops_ratio']:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per figure, plus kernel
+micro-benchmarks (name,us_per_call,derived) and the roofline table if
+dry-run artifacts exist.
+
+    PYTHONPATH=src python -m benchmarks.run            # full paper protocol
+    PYTHONPATH=src python -m benchmarks.run --quick    # 1 instance per app
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def kernel_microbench() -> list:
+    """Kernel wall-time micro-benchmarks (interpret mode on CPU: these are
+    correctness-path timings, not TPU perf — TPU numbers come from the
+    roofline analysis)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import (decode_attention_op, flash_attention_op,
+                               rmsnorm_op, ssd_scan_op)
+    rows = ["kernel.name,us_per_call,config"]
+    key = jax.random.key(0)
+
+    def time_it(fn, *args, n=3, **kw):
+        fn(*args, **kw)  # warm compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args, **kw))
+        return (time.perf_counter() - t0) / n * 1e6
+
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(key, (1, 256, 2, 64))
+    us = time_it(flash_attention_op, q, k, k, interpret=True, block_q=128,
+                 block_k=128)
+    rows.append(f"kernel.flash_attention,{us:.0f},b1_s256_h4_kv2_interp")
+
+    qd = jax.random.normal(key, (2, 8, 64))
+    kd = jax.random.normal(key, (2, 512, 2, 64))
+    lens = jnp.array([256, 512], jnp.int32)
+    us = time_it(decode_attention_op, qd, kd, kd, lens, interpret=True)
+    rows.append(f"kernel.decode_attention,{us:.0f},b2_c512_interp")
+
+    x = jax.random.normal(key, (1, 128, 2, 32))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 128, 2)))
+    A = -jnp.exp(jax.random.normal(key, (2,)))
+    B = jax.random.normal(key, (1, 128, 16))
+    us = time_it(ssd_scan_op, x, dt, A, B, B, chunk=64, interpret=True)
+    rows.append(f"kernel.ssd_scan,{us:.0f},b1_s128_interp")
+
+    xs = jax.random.normal(key, (512, 256))
+    sc = jnp.ones((256,))
+    us = time_it(rmsnorm_op, xs, sc, interpret=True)
+    rows.append(f"kernel.rmsnorm,{us:.0f},rows512_d256_interp")
+    return rows
+
+
+def roofline_rows() -> list:
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "roofline.json")
+    rows = ["roofline.arch.shape,dominant_term,compute_s;memory_s;coll_s"]
+    if not os.path.exists(art):
+        rows.append("roofline.missing,run `python -m benchmarks.roofline`,")
+        return rows
+    for r in json.load(open(art)):
+        rows.append(f"roofline.{r['arch']}.{r['shape']},{r['dominant']},"
+                    f"{r['compute_s']:.3e};{r['memory_s']:.3e};"
+                    f"{r['collective_s']:.3e}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="1 instance per app (CI)")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore the agent-run cache")
+    args = ap.parse_args()
+
+    from .experiments import run_sweep
+    from .figures import ALL_FIGURES
+
+    t0 = time.time()
+    records = run_sweep(full=not args.quick, force=args.force)
+    print(f"# agent sweep: {len(records)} runs "
+          f"({time.time() - t0:.0f}s wall, virtual-clock latencies)")
+    for fig in ALL_FIGURES:
+        print(f"\n# --- {fig.__name__} ---")
+        for row in fig(records):
+            print(row)
+
+    print("\n# --- kernel microbench ---")
+    for row in kernel_microbench():
+        print(row)
+
+    print("\n# --- roofline (from dry-run artifacts) ---")
+    for row in roofline_rows():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

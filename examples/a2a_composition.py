@@ -1,0 +1,44 @@
+"""A2A composition (paper §2.3/§7 future work): MCP gives one agent its
+tools; A2A gives agents each other. A coordinator discovers two remote
+agents by AgentCard and delegates whole sub-workflows to them.
+
+    PYTHONPATH=src python examples/a2a_composition.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.env.world import World  # noqa: E402
+from repro.mcp.a2a import A2AClient, expose_app_as_agent  # noqa: E402
+
+
+def main():
+    world = World(seed=3)
+    client = A2AClient(world)
+
+    researcher = expose_app_as_agent(
+        world, "research_report", "agentx", "faas",
+        url="https://agents.example/researcher")
+    analyst = expose_app_as_agent(
+        world, "stock_correlation", "react", "faas",
+        url="https://agents.example/analyst")
+
+    for server in (researcher, analyst):
+        card = client.discover(server)
+        print(f"discovered: {card.name} — skills: "
+              f"{[s.id for s in card.skills]}")
+
+    t1 = client.delegate(researcher.card.name, "research_report",
+                         "summarize the paper 'Why Do Multi-Agent LLM "
+                         "Systems Fail?'")
+    t2 = client.delegate(analyst.card.name, "stock_correlation",
+                         "plot apple / alphabet / microsoft")
+    print(f"\nresearcher task: {t1.status}, artifact "
+          f"{len(t1.artifacts[0]['text']) if t1.artifacts else 0} chars")
+    print(f"analyst task:    {t2.status}, artifact "
+          f"{len(t2.artifacts[0]['text']) if t2.artifacts else 0} chars")
+    print(f"coordinator wall time (virtual): {world.clock.now():.1f}s")
+
+
+if __name__ == "__main__":
+    main()

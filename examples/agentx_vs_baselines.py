@@ -1,0 +1,44 @@
+"""Compare AgentX against ReAct and Magentic-One on one application
+(paper §5): success, latency breakdown, tokens, cost, accuracy — local MCP
+vs FaaS-hosted MCP.
+
+    PYTHONPATH=src python examples/agentx_vs_baselines.py [app] [instance]
+"""
+import statistics
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.apps.runner import run_app, score_run  # noqa: E402
+
+N = 3
+
+
+def main():
+    app = sys.argv[1] if len(sys.argv) > 1 else "web_search"
+    inst = sys.argv[2] if len(sys.argv) > 2 else "quantum"
+    print(f"=== {app} / {inst} ({N} runs each) ===")
+    hdr = (f"{'pattern':9s} {'dep':5s} {'ok':>4s} {'lat_s':>7s} "
+           f"{'llm_s':>6s} {'tool_s':>6s} {'fw_s':>5s} {'in_tok':>7s} "
+           f"{'out':>5s} {'$llm':>7s} {'score':>5s}")
+    print(hdr)
+    for dep in ("local", "faas"):
+        for pattern in ("react", "agentx", "magentic"):
+            runs = [run_app(app, inst, pattern, dep, seed=s)
+                    for s in range(N)]
+            scores = [score_run(r).total for r in runs]
+            m = lambda f: statistics.mean(f(r) for r in runs)
+            print(f"{pattern:9s} {dep:5s} "
+                  f"{sum(r.success for r in runs)}/{N:<2d} "
+                  f"{m(lambda r: r.total_latency):7.1f} "
+                  f"{m(lambda r: r.trace.llm_latency):6.1f} "
+                  f"{m(lambda r: r.trace.tool_latency):6.1f} "
+                  f"{m(lambda r: r.trace.framework_latency):5.1f} "
+                  f"{m(lambda r: r.trace.input_tokens):7.0f} "
+                  f"{m(lambda r: r.trace.output_tokens):5.0f} "
+                  f"{m(lambda r: r.trace.llm_cost):7.4f} "
+                  f"{statistics.mean(scores):5.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""MCP deployment architectures head-to-head (paper Fig. 2 + §4; the
+monolithic-vs-distributed comparison the paper leaves to future work):
+
+  local (Fig. 2a) vs distributed FaaS (Fig. 2c) vs monolithic FaaS (Fig. 2b)
+
+reporting per-call latency, cold starts, and Lambda cost per Eq. 2.
+
+    PYTHONPATH=src python examples/faas_deployments.py
+"""
+import statistics
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.apps.runner import run_app  # noqa: E402
+
+N = 4
+APPS = [("web_search", "materials"), ("stock_correlation", "cola"),
+        ("research_report", "flow")]
+
+
+def main():
+    print(f"{'app':18s} {'deployment':10s} {'lat_s':>7s} {'tool_s':>7s} "
+          f"{'lambda_$':>10s} {'ok':>5s}")
+    for app, inst in APPS:
+        for dep in ("local", "faas", "faas-mono"):
+            runs = [run_app(app, inst, "react", dep, seed=s)
+                    for s in range(N)]
+            lat = statistics.mean(r.total_latency for r in runs)
+            tool = statistics.mean(r.trace.tool_latency for r in runs)
+            cost = statistics.mean(r.faas_cost for r in runs)
+            ok = sum(r.success for r in runs)
+            print(f"{app:18s} {dep:10s} {lat:7.1f} {tool:7.1f} "
+                  f"{cost:10.6f} {ok}/{N}")
+    print("\nmonolithic bills the summed memory footprint per call but "
+          "shares one warm container across servers (paper §4's predicted "
+          "trade-off).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the three layers of the framework in one script.
+
+1. Train a reduced model from the zoo for a few steps (JAX substrate).
+2. Serve it (prefill + decode with a KV cache).
+3. Run an AgentX workflow against FaaS-hosted MCP servers, powered by that
+   same serving engine (the full paper stack end-to-end).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.apps.runner import run_app, score_run  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.serving import Engine  # noqa: E402
+from repro.training import train  # noqa: E402
+
+
+def main():
+    # 1 -- train -------------------------------------------------------
+    cfg = get_config("tinyllama-1.1b").reduced()
+    print(f"[1/3] training {cfg.name} ({cfg.n_params() / 1e6:.2f}M params)")
+    out = train(cfg, steps=15, batch=2, seq_len=64, log_every=5)
+    print("      losses:", [round(h["loss"], 3) for h in out["history"]])
+
+    # 2 -- serve -------------------------------------------------------
+    print("[2/3] serving: prefill + decode")
+    engine = Engine(cfg, params=out["params"], temperature=0.8)
+    gen = engine.generate("agentic workflows on serverless clouds",
+                          max_new_tokens=12)
+    print(f"      prompt={gen.prompt_tokens} tok -> generated "
+          f"{gen.new_tokens} tok")
+
+    # 3 -- AgentX over FaaS MCP ----------------------------------------
+    print("[3/3] AgentX workflow, FaaS-hosted MCP (distributed, Fig. 2c)")
+    result = run_app("web_search", "quantum", "agentx", "faas", seed=0)
+    score = score_run(result)
+    t = result.trace
+    print(f"      success={result.success} latency={result.total_latency:.1f}s"
+          f" tokens={t.input_tokens}/{t.output_tokens}"
+          f" llm=${t.llm_cost:.4f} lambda=${result.faas_cost:.6f}"
+          f" accuracy={score.total:.1f}/100")
+    print(f"      artifact: {result.artifact_path}")
+
+
+if __name__ == "__main__":
+    main()

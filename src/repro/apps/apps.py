@@ -1,0 +1,76 @@
+"""The three templated applications (paper §5.3), each with three instances."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class AppSpec:
+    name: str
+    template: str
+    instances: Dict[str, str]          # instance key -> template variable(s)
+    servers: List[str]                 # MCP servers required (local names)
+
+    def prompt(self, instance: str, faas: bool) -> str:
+        var = self.instances[instance]
+        task = self.template.format(var=var)
+        if faas:
+            task += (" ...you can read/write from s3 from this location: "
+                     "'s3://dummy-bucket/agent/'")
+        return task
+
+
+WEB_SEARCH = AppSpec(
+    name="web_search",
+    template="Search for {var} and summarize the results in a text file",
+    instances={
+        "quantum": "Recent advancements in quantum computing hardware development",
+        "edge": "Edge devices and their real-world use cases in 2025",
+        "materials": "Latest trends in biodegradable materials for sustainable packaging",
+    },
+    servers=["serper", "fetch", "filesystem"],
+)
+
+STOCK_CORRELATION = AppSpec(
+    name="stock_correlation",
+    template="Generate a plot for the historic stock prices of {var}",
+    instances={
+        "apple": ("Apple, Alphabet (Google), and Microsoft, and save it as "
+                  "AppleAlphabetMicrosoft.png"),
+        "netflix": ("Netflix, Disney, and Amazon, and save it as "
+                    "NetflixDisneyAmazon.png"),
+        "cola": ("Coca-Cola, PepsiCo, and Mondelez, and save it as "
+                 "CocaColaPepsiCoMondelez.png"),
+    },
+    servers=["yfinance", "code-execution", "filesystem"],
+)
+
+RESEARCH_REPORT = AppSpec(
+    name="research_report",
+    template=("Generate a report on the Core Contributions, Methodology, "
+              "Experimental Results, and Limitations for the paper titled "
+              "{var} and save it as a text file."),
+    instances={
+        "why": "'Why Do Multi-Agent LLM Systems Fail?'",
+        "flow": "'Flow: Modularized Agentic Workflow Automation'",
+        "magentic": ("'Magentic-One: A Generalist Multi-Agent System for "
+                     "Solving Complex Tasks.'"),
+    },
+    servers=["arxiv", "rag", "filesystem"],
+)
+
+MULTI_TOPIC = AppSpec(
+    name="multi_topic_digest",
+    template="Search for {var} and write a combined digest to a text file",
+    instances={
+        "tech": ("'Recent advancements in quantum computing hardware "
+                 "development'; 'Edge devices and their real-world use "
+                 "cases in 2025'; 'Latest trends in biodegradable "
+                 "materials for sustainable packaging'"),
+    },
+    servers=["serper", "filesystem"],
+)
+
+APPS = {a.name: a for a in (WEB_SEARCH, STOCK_CORRELATION, RESEARCH_REPORT,
+                            MULTI_TOPIC)}

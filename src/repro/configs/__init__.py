@@ -1,0 +1,23 @@
+"""Config registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from .base import ModelConfig, MoEConfig, MLAConfig, SSMConfig, InputShape, INPUT_SHAPES
+
+from . import (qwen2_72b, zamba2_7b, musicgen_large, tinyllama_1_1b,
+               mamba2_370m, phi3_5_moe, internvl2_1b, granite_34b,
+               deepseek_v2_236b, qwen1_5_4b)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen2_72b, zamba2_7b, musicgen_large, tinyllama_1_1b,
+              mamba2_370m, phi3_5_moe, internvl2_1b, granite_34b,
+              deepseek_v2_236b, qwen1_5_4b)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "InputShape",
+           "INPUT_SHAPES", "ARCHS", "get_config"]

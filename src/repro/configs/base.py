@@ -1,0 +1,246 @@
+"""Model configuration system.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The config is
+a plain frozen dataclass (no external deps) and fully determines:
+  - parameter shapes (via ``repro.models.params.init_params`` /
+    ``abstract_params``),
+  - the layer program (dense attention / MLA / MoE / SSD / hybrid schedule),
+  - cache kinds for serving,
+  - sharding rules (via ``repro.launch.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    top_k: int = 0
+    n_shared: int = 0             # shared (always-on) experts
+    d_ff_expert: int = 0          # hidden size per expert
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD config."""
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    conv_width: int = 4
+    chunk_size: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp_type: str = "swiglu"      # "swiglu" (3 mats) | "gelu" (2 mats)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    # attention variant: "gqa" | "mla" | "none" (attention-free)
+    attention: str = "gqa"
+    # sliding window (tokens); 0 = full attention. Used for long_500k.
+    sliding_window: int = 0
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid: a shared attention block is invoked after every
+    # ``hybrid_attn_every`` SSM layers (Zamba2-style shared block).
+    hybrid_attn_every: int = 0
+    # modality frontend stub: None | "audio" | "vision"
+    frontend: Optional[str] = None
+    # number of frontend embedding positions prepended in serve shapes
+    frontend_positions: int = 0
+    source: str = ""              # citation
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None and self.moe.n_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.arch_type in ("ssm", "hybrid")
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Logical layer schedule, e.g. ('attn', 'attn', ...) or hybrid mix."""
+        if self.arch_type == "ssm":
+            return tuple("ssm" for _ in range(self.n_layers))
+        if self.arch_type == "hybrid":
+            kinds = []
+            for i in range(self.n_layers):
+                if self.hybrid_attn_every and (i + 1) % self.hybrid_attn_every == 0:
+                    kinds.append("shared_attn")
+                else:
+                    kinds.append("ssm")
+            return tuple(kinds)
+        return tuple("attn" for _ in range(self.n_layers))
+
+    # ------------------------------------------------------------------
+    def n_params(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs roofline)."""
+        d, ff, V, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        total = V * d  # embedding
+        if not self.tie_embeddings:
+            total += V * d
+        per_layer_attn = 0
+        if self.attention == "mla" and self.mla is not None:
+            m = self.mla
+            per_layer_attn = (
+                d * m.q_lora_rank
+                + m.q_lora_rank * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                + d * (m.kv_lora_rank + m.qk_rope_dim)
+                + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                + self.n_heads * m.v_head_dim * d
+            )
+        elif self.attention == "gqa":
+            per_layer_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if self.qkv_bias:
+                per_layer_attn += self.q_dim + 2 * self.kv_dim
+        if self.is_moe:
+            moe = self.moe
+            per_layer_mlp = (
+                moe.n_experts * 3 * d * moe.d_ff_expert
+                + moe.n_shared * 3 * d * moe.d_ff_expert
+                + d * moe.n_experts  # router
+            )
+        else:
+            n_mats = 3 if self.mlp_type == "swiglu" else 2
+            per_layer_mlp = n_mats * d * ff
+        per_ssm = 0
+        if self.ssm is not None:
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            # in_proj (z, x, B, C, dt), conv, A, D, norm, out_proj
+            per_ssm = (
+                d * (2 * di + 2 * s.d_state + nh)
+                + s.conv_width * (di + 2 * s.d_state)
+                + 2 * nh
+                + di
+                + di * d
+            )
+        kinds = self.layer_kinds()
+        n_attn = sum(1 for k in kinds if k == "attn")
+        n_ssm = sum(1 for k in kinds if k == "ssm")
+        n_shared_attn = 1 if any(k == "shared_attn" for k in kinds) else 0
+        total += n_attn * (per_layer_attn + per_layer_mlp + 2 * d)
+        total += n_ssm * (per_ssm + d)
+        # shared attention block (counted once: weights are shared)
+        total += n_shared_attn * (per_layer_attn + (3 if self.mlp_type == "swiglu" else 2) * d * ff + 2 * d)
+        total += d  # final norm
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top-k + shared experts)."""
+        if not self.is_moe:
+            return self.n_params()
+        moe = self.moe
+        d = self.d_model
+        dense_like = dataclasses.replace(self, moe=None, d_ff=1)
+        base = dense_like.n_params() - self.n_layers * 3 * d  # strip d_ff=1 mlps
+        active_mlp = (moe.top_k + moe.n_shared) * 3 * d * moe.d_ff_expert + d * moe.n_experts
+        return base + self.n_layers * active_mlp
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: 2 layers, d_model<=512, <=4 experts."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        head_dim = max(d_model // n_heads, 32) if n_heads else 0
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        moe = None
+        if self.is_moe:
+            moe = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                n_shared=min(self.moe.n_shared, 1),
+                d_ff_expert=min(self.moe.d_ff_expert, 512),
+            )
+        mla = None
+        if self.mla is not None:
+            mla = MLAConfig(kv_lora_rank=64, q_lora_rank=96,
+                            qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32)
+        ssm = None
+        if self.ssm is not None:
+            ssm = dataclasses.replace(self.ssm, d_state=16, head_dim=32,
+                                      chunk_size=32)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=2 if self.hybrid_attn_every == 0 else 4,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            moe=moe,
+            mla=mla,
+            ssm=ssm,
+            hybrid_attn_every=2 if self.hybrid_attn_every else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            frontend_positions=min(self.frontend_positions, 8),
+        )
+
+    def with_sliding_window(self, window: int) -> "ModelConfig":
+        return dataclasses.replace(self, sliding_window=window)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,14 @@
+"""DeepSeek-V2 (236B total / 21B active): MLA (kv_lora=512) + MoE with
+2 shared + 160 routed experts, top-6 [arXiv:2405.04434]."""
+from .base import ModelConfig, MoEConfig, MLAConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", arch_type="moe",
+    n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128,
+    head_dim=128,
+    d_ff=1536, vocab_size=102400, attention="mla",
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                  qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=160, top_k=6, n_shared=2, d_ff_expert=1536),
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,9 @@
+"""Granite-34B-code: llama-arch with MQA (kv=1) [arXiv:2405.04324]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b", arch_type="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1, mlp_type="gelu",
+    d_ff=24576, vocab_size=49152,
+    source="arXiv:2405.04324",
+)

@@ -1,0 +1,13 @@
+"""InternVL2-1B: InternViT vision encoder + Qwen2-0.5B-style LM
+[arXiv:2404.16821]. Vision frontend (ViT + projector) is a stub per the
+assignment carve-out; we implement the language backbone consuming patch
+embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", arch_type="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab_size=151655, qkv_bias=True,
+    frontend="vision", frontend_positions=256,
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,11 @@
+"""Mamba2-370m: attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", arch_type="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=50280, attention="none",
+    ssm=SSMConfig(d_state=128, expand=2, head_dim=64),
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,12 @@
+"""MusicGen-large: decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284]. The EnCodec audio frontend is a stub per the assignment
+carve-out: input_specs() provides precomputed frame embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", arch_type="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=2048,
+    frontend="audio", frontend_positions=256,
+    source="arXiv:2306.05284",
+)

@@ -1,0 +1,15 @@
+"""Zamba2-7B: Mamba2 backbone with shared attention blocks [arXiv:2411.15242].
+
+The shared transformer block (attention + MLP, weights shared across all
+invocations) is interleaved after every 6th Mamba2 layer, Zamba2-style.
+"""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", arch_type="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm=SSMConfig(d_state=64, expand=2, head_dim=64),
+    hybrid_attn_every=6,
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,133 @@
+"""LLM backend abstraction.
+
+The paper's "brain" is OpenAI gpt-4o-mini. Offline we provide:
+
+  - ``OracleLLMBackend``: a deterministic, seeded stand-in. The agent
+    frameworks build *real prompt text* (system + history + tool
+    descriptions) exactly as they would for an API model — that text drives
+    token/cost/latency accounting — while the decision itself comes from an
+    application policy (``repro.core.policies``) with seeded anomaly
+    injection calibrated to §6 of the paper. The structured ``meta`` field
+    carries the same information as the prompt text in parsed form so the
+    policy does not have to NLP-parse its own prompt.
+
+  - ``JaxLLMBackend``: wraps the real JAX serving engine
+    (``repro.serving``): every completion actually runs prefill+decode for
+    the accounted token counts on a ModelConfig from the zoo, while
+    delegating decision content to the oracle policy. Used by integration
+    tests/examples to prove the full serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+from ..data.tokenizer import CountTokenizer
+from ..env.world import World
+from .metrics import LLMEvent, Trace
+from .schema import Schema
+
+
+@dataclasses.dataclass
+class ToolCall:
+    server: str
+    tool: str
+    args: Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Decision:
+    """What the model 'decided': exactly one of the fields is set."""
+    tool_call: Optional[ToolCall] = None
+    structured: Optional[Dict[str, Any]] = None
+    text: Optional[str] = None
+
+    def render(self) -> str:
+        if self.tool_call is not None:
+            return json.dumps({"tool": self.tool_call.tool,
+                               "arguments": self.tool_call.args})
+        if self.structured is not None:
+            return json.dumps(self.structured)
+        return self.text or ""
+
+
+@dataclasses.dataclass
+class LLMRequest:
+    agent: str
+    system: str
+    messages: List[Dict[str, str]]
+    tools: List[Any] = dataclasses.field(default_factory=list)  # ToolHandle
+    schema: Optional[Schema] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def prompt_tokens(self) -> int:
+        n = CountTokenizer.count(self.system)
+        for m in self.messages:
+            n += CountTokenizer.count(m.get("content", "")) + 4
+        for t in self.tools:
+            n += CountTokenizer.count(t.describe()) + 6
+        if self.schema is not None:
+            n += CountTokenizer.count(self.schema.describe())
+        return n
+
+
+@dataclasses.dataclass
+class LLMResponse:
+    decision: Decision
+    input_tokens: int
+    output_tokens: int
+    latency: float
+
+
+class LLMBackend:
+    def complete(self, request: LLMRequest) -> LLMResponse:
+        raise NotImplementedError
+
+
+class OracleLLMBackend(LLMBackend):
+    def __init__(self, world: World, policy, trace: Optional[Trace] = None):
+        self.world = world
+        self.policy = policy
+        self.trace = trace if trace is not None else Trace()
+
+    def complete(self, request: LLMRequest) -> LLMResponse:
+        tin = request.prompt_tokens()
+        decision = self.policy.decide(request)
+        out_text = decision.render()
+        tout = max(CountTokenizer.count(out_text), 1)
+        latency = self.world.latency.llm_latency(tin, tout)
+        self.world.clock.sleep(latency)
+        if decision.structured is not None and request.schema is not None:
+            request.schema.validate(decision.structured)
+        self.trace.llm_events.append(
+            LLMEvent(request.agent, tin, tout, latency, self.world.clock.now()))
+        return LLMResponse(decision, tin, tout, latency)
+
+
+class JaxLLMBackend(LLMBackend):
+    """Real JAX model in the loop: per completion, runs engine.generate for
+    the same output-token budget the oracle decision implies."""
+
+    def __init__(self, world: World, policy, engine,
+                 trace: Optional[Trace] = None, max_gen: int = 16):
+        self.world = world
+        self.policy = policy
+        self.engine = engine
+        self.max_gen = max_gen
+        self.trace = trace if trace is not None else Trace()
+
+    def complete(self, request: LLMRequest) -> LLMResponse:
+        tin = request.prompt_tokens()
+        decision = self.policy.decide(request)
+        out_text = decision.render()
+        tout = max(CountTokenizer.count(out_text), 1)
+        prompt = request.system + "\n" + "\n".join(
+            m.get("content", "") for m in request.messages)
+        # real forward passes (prefill + decode) on the JAX engine
+        self.engine.generate(prompt[-512:], max_new_tokens=min(tout, self.max_gen))
+        latency = self.world.latency.llm_latency(tin, tout)
+        self.world.clock.sleep(latency)
+        self.trace.llm_events.append(
+            LLMEvent(request.agent, tin, tout, latency, self.world.clock.now()))
+        return LLMResponse(decision, tin, tout, latency)

@@ -1,0 +1,179 @@
+"""Magentic-One baseline (paper §5.1, §6.3): an Orchestrator with a fact
+sheet + ledger plan delegating to per-MCP-server specialist agents (the
+paper replaces the stock WebSurfer/FileSurfer/Coder/Terminal team with one
+agent per MCP server, each with a hand-written description).
+
+Specialists receive the fact sheet + plan, call their server's tools, and
+pass only a *reflection* of the tool outputs onward (§6.4 — the source of
+the stock-data truncation anomaly). On specialist failure the Orchestrator
+updates the fact sheet and re-plans (2 extra inferences), capped.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from ..env.clock import Stopwatch
+from ..env.world import World
+from ..mcp.client import McpClient, ToolHandle
+from .llm import LLMBackend, LLMRequest, ToolCall
+from .metrics import FrameworkEvent, ToolEvent, Trace
+from .schema import FACT_SHEET_SCHEMA, LEDGER_PLAN_SCHEMA
+
+ORCH_SYSTEM = ("You are the Orchestrator of a team of specialized agents. "
+               "Maintain a fact sheet, create a plan delegating sub-tasks "
+               "to team members, track progress and re-plan on failure.")
+
+AGENT_DESCRIPTIONS = {
+    "arxiv": ("Agent for interacting with the arXiv API to retrieve article "
+              "URLs, download research papers as PDFs, load articles into "
+              "context, get article metadata, and perform search queries on "
+              "arXiv.org."),
+    "serper": ("Agent for web search via the Google Serper API: organic "
+               "search, news, scholar and more."),
+    "fetch": ("Remote AWS LAMBDA function MCP server for fetching web "
+              "content in various formats, including HTML, JSON, plain "
+              "text, and Markdown."),
+    "rag": ("Agent for retrieving relevant text snippets from ingested PDF "
+            "documents using embedding similarity search."),
+    "yfinance": ("Agent for Yahoo Finance market data: historical prices, "
+                 "quotes, fundamentals."),
+    "code-execution": ("Agent that writes and executes Python code in a "
+                       "sandbox with matplotlib/pandas preinstalled."),
+    "filesystem": ("Agent for reading and writing files on the local "
+                   "filesystem."),
+    "s3": ("Agent for reading and writing objects in S3."),
+}
+
+MAX_SPECIALIST_STEPS = 10
+MAX_REPLANS = 3
+# AutoGen + AgentOps observability overhead (paper: mean 30.1 s local,
+# ~15 s FaaS, with occasional network outliers)
+FRAMEWORK_OVERHEAD_S = {"local": 2.6, "faas": 1.35}
+
+
+class MagenticOneRunner:
+    pattern = "magentic"
+
+    def __init__(self, backend: LLMBackend, clients: Dict[str, McpClient],
+                 world: World, trace: Trace, deployment: str = "local"):
+        self.backend = backend
+        self.clients = clients
+        self.world = world
+        self.trace = trace
+        self.deployment = deployment
+        self._shared: List[str] = []
+        self.team: Dict[str, List[ToolHandle]] = {}
+        for server, client in clients.items():
+            self.team[server] = client.list_tools()
+
+    def _overhead(self, what: str):
+        dt = FRAMEWORK_OVERHEAD_S["faas" if self.deployment != "local" else "local"]
+        jitter = 0.6 + 0.8 * self.world.latency.rng.random()
+        self.world.clock.sleep(dt * jitter)
+        self.trace.framework_events.append(
+            FrameworkEvent(what, dt * jitter, self.world.clock.now()))
+
+    def _invoke(self, server: str, call: ToolCall) -> str:
+        client = self.clients.get(server)
+        with Stopwatch(self.world.clock) as sw:
+            if client is None:
+                result = f"<tool-error unknown server {server!r}>"
+            else:
+                result = client.call_tool(call.tool, call.args)
+        ok = not result.startswith("<tool-error")
+        self.trace.tool_events.append(ToolEvent(server, call.tool, sw.elapsed,
+                                                ok, self.world.clock.now()))
+        return result
+
+    def _orchestrate(self, task: str, phase: str, fact_sheet, plan, progress,
+                     replans: int, schema=None):
+        team_text = "\n".join(f"{s}: {AGENT_DESCRIPTIONS.get(s, s)}"
+                              for s in self.team)
+        self._overhead(f"orchestrator-{phase}")
+        return self.backend.complete(LLMRequest(
+            agent="orchestrator", system=ORCH_SYSTEM,
+            messages=[{"role": "user", "content":
+                       f"Task: {task}\nTeam:\n{team_text}\n"
+                       f"Fact sheet: {json.dumps(fact_sheet)}\n"
+                       f"Plan: {json.dumps(plan)}\n"
+                       f"Progress ledger: {json.dumps(progress)}\n"
+                       f"Team context:\n" + "\n".join(self._shared)}],
+            schema=schema,
+            meta={"task": task, "phase": phase, "team": list(self.team),
+                  "fact_sheet": fact_sheet, "plan": plan,
+                  "progress": progress, "replans": replans}))
+
+    def run(self, task: str) -> Dict:
+        progress: List[Dict] = []
+        self._shared: List[str] = []
+        facts = self._orchestrate(task, "facts", None, None, progress, 0,
+                                  schema=FACT_SHEET_SCHEMA).decision.structured
+        plan = self._orchestrate(task, "plan", facts, None, progress, 0,
+                                 schema=LEDGER_PLAN_SCHEMA
+                                 ).decision.structured["plan"]
+
+        replans = 0
+        step_idx = 0
+        shared_context = self._shared
+        while step_idx < len(plan):
+            step = plan[step_idx]
+            server = step.split(":", 1)[0].strip()
+            if server not in self.team:
+                step_idx += 1
+                continue
+            history: List[Dict] = []
+            outcome = None
+            for _ in range(MAX_SPECIALIST_STEPS):
+                self._overhead(f"{server}-dispatch")
+                resp = self.backend.complete(LLMRequest(
+                    agent=f"{server}_agent",
+                    system=AGENT_DESCRIPTIONS.get(server, server),
+                    messages=[{"role": "user", "content":
+                               f"Fact sheet: {json.dumps(facts)}\n"
+                               f"Plan: {json.dumps(plan)}\n"
+                               f"Your sub-task: {step}\n"
+                               f"Context from team:\n"
+                               + "\n".join(shared_context)
+                               + "\nYour tool results:\n"
+                               + "\n".join(h["result"][:4500] for h in history)}],
+                    tools=self.team[server],
+                    meta={"task": task, "server": server, "subtask": step,
+                          "history": history, "fact_sheet": facts,
+                          "shared_context": shared_context,
+                          "replans": replans}))
+                d = resp.decision
+                if d.tool_call is not None:
+                    result = self._invoke(server, d.tool_call)
+                    history.append({"tool": d.tool_call.tool,
+                                    "args": d.tool_call.args,
+                                    "result": result})
+                else:
+                    outcome = d.structured or {"result": d.text, "done": True}
+                    break
+            progress.append({"step": step, "outcome":
+                             (outcome or {}).get("result", "")[:500]})
+            if outcome and outcome.get("result"):
+                shared_context.append(outcome["result"])
+            if outcome and outcome.get("task_complete"):
+                # the orchestrator marks the task complete immediately —
+                # later plan steps (e.g. verification) never execute (§6.4)
+                break
+            if outcome and outcome.get("replan") and replans < MAX_REPLANS:
+                replans += 1
+                facts = self._orchestrate(task, "update-facts", facts, plan,
+                                          progress, replans,
+                                          schema=FACT_SHEET_SCHEMA
+                                          ).decision.structured
+                plan = self._orchestrate(task, "replan", facts, plan,
+                                         progress, replans,
+                                         schema=LEDGER_PLAN_SCHEMA
+                                         ).decision.structured["plan"]
+                step_idx = 0
+                continue
+            step_idx += 1
+
+        final = self._orchestrate(task, "final", facts, plan, progress,
+                                  replans).decision.text
+        return {"plan": plan, "final": final, "replans": replans,
+                "completed": final is not None}

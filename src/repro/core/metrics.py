@@ -1,0 +1,118 @@
+"""Run tracing + cost accounting (paper Eq. 1, §5.4).
+
+Every LLM inference and tool invocation is logged with virtual-time
+latency and token counts; figures are derived from these traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+# GPT-4o-mini pricing (paper Eq. 1)
+IN_USD_PER_M = 0.15
+OUT_USD_PER_M = 0.60
+
+
+def llm_cost(tin: int, tout: int) -> float:
+    return (tin * IN_USD_PER_M + tout * OUT_USD_PER_M) / 1e6
+
+
+@dataclasses.dataclass
+class LLMEvent:
+    agent: str
+    input_tokens: int
+    output_tokens: int
+    latency: float
+    t: float
+
+    @property
+    def cost(self) -> float:
+        return llm_cost(self.input_tokens, self.output_tokens)
+
+
+@dataclasses.dataclass
+class ToolEvent:
+    server: str
+    tool: str
+    latency: float
+    ok: bool
+    t: float
+
+
+@dataclasses.dataclass
+class FrameworkEvent:
+    what: str
+    latency: float
+    t: float
+
+
+@dataclasses.dataclass
+class Trace:
+    llm_events: List[LLMEvent] = dataclasses.field(default_factory=list)
+    tool_events: List[ToolEvent] = dataclasses.field(default_factory=list)
+    framework_events: List[FrameworkEvent] = dataclasses.field(default_factory=list)
+
+    # -- aggregates ---------------------------------------------------------
+    @property
+    def input_tokens(self) -> int:
+        return sum(e.input_tokens for e in self.llm_events)
+
+    @property
+    def output_tokens(self) -> int:
+        return sum(e.output_tokens for e in self.llm_events)
+
+    @property
+    def llm_cost(self) -> float:
+        return llm_cost(self.input_tokens, self.output_tokens)
+
+    @property
+    def llm_latency(self) -> float:
+        return sum(e.latency for e in self.llm_events)
+
+    @property
+    def tool_latency(self) -> float:
+        return sum(e.latency for e in self.tool_events)
+
+    @property
+    def framework_latency(self) -> float:
+        return sum(e.latency for e in self.framework_events)
+
+    @property
+    def agent_invocations(self) -> int:
+        return len(self.llm_events)
+
+    @property
+    def tool_invocations(self) -> int:
+        return len(self.tool_events)
+
+    def agent_breakdown(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.llm_events:
+            out[e.agent] = out.get(e.agent, 0) + 1
+        return out
+
+    def tool_breakdown(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.tool_events:
+            out[e.tool] = out.get(e.tool, 0) + 1
+        return out
+
+
+@dataclasses.dataclass
+class RunResult:
+    app: str
+    instance: str
+    pattern: str
+    deployment: str           # local | faas | faas-mono
+    success: bool
+    total_latency: float
+    trace: Trace
+    artifact_path: Optional[str] = None
+    artifact: Optional[str] = None
+    faas_cost: float = 0.0
+    failure_reason: str = ""
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_cost(self) -> float:
+        return self.trace.llm_cost + self.faas_cost

@@ -1,0 +1,920 @@
+"""Application policies for the oracle LLM backend.
+
+Each policy encodes how a gpt-4o-mini-class model *behaves* on one of the
+paper's three applications under each of the three patterns — including the
+anomalies catalogued in §6 (seeded, so success rates land in the paper's
+regimes). The agent frameworks (agentx/react/magentic) stay fully generic;
+everything app-specific lives here.
+"""
+from __future__ import annotations
+
+import json
+import random
+import re
+from typing import Dict, List, Optional
+
+from .llm import Decision, LLMRequest, ToolCall
+
+
+def _last(history: List[Dict], tool: str) -> Optional[str]:
+    for h in reversed(history):
+        if h["tool"] == tool:
+            return h["result"]
+    return None
+
+
+def _all(history: List[Dict], tool: str) -> List[Dict]:
+    return [h for h in history if h["tool"] == tool]
+
+
+class BasePolicy:
+    app = "base"
+
+    def __init__(self, world, task: str, deployment: str, seed: int):
+        self.world = world
+        self.task = task
+        self.deployment = deployment
+        self.faas = deployment != "local"
+        self.rng = random.Random(seed)
+        self._anom: Dict[str, bool] = {}
+
+    # -- anomaly sampling (one draw per run per key) ------------------------
+    def chance(self, key: str, p: float) -> bool:
+        if getattr(self, "saw_cot", False):
+            # CoT pre-reasoning (paper §7 future work) makes plans "more
+            # context-aware and logical": anomaly rates drop sharply
+            p *= 0.2
+        if key not in self._anom:
+            self._anom[key] = self.rng.random() < p
+        return self._anom[key]
+
+    # -- storage targets ----------------------------------------------------
+    def out_target(self, name: str) -> str:
+        return f"s3://dummy-bucket/agent/{name}" if self.faas else name
+
+    def write_call(self, name: str, content: str) -> ToolCall:
+        if self.faas:
+            return ToolCall("s3", "s3_write",
+                            {"uri": self.out_target(name), "content": content})
+        return ToolCall("filesystem", "write_file",
+                        {"path": self.out_target(name), "content": content})
+
+    @property
+    def write_tool_name(self) -> str:
+        return "s3_write" if self.faas else "write_file"
+
+    # -- dispatch -------------------------------------------------------
+    def decide(self, req: LLMRequest) -> Decision:
+        role = req.agent
+        if role == "cot_reasoner":
+            self.saw_cot = True
+            return Decision(text=(
+                "Goal: " + self.task[:120] + ". Required tools in order, "
+                "with explicit parameters for each step; avoid splitting "
+                "the final write into a separate stage; always pass the "
+                "document path explicitly; finish by writing the output "
+                "file."))
+        if role == "stage_generator":
+            return self.agentx_stages(req)
+        if role == "planner":
+            return self.agentx_plan(req)
+        if role == "executor":
+            return self.agentx_execute(req)
+        if role == "react":
+            return self.react(req)
+        if role == "orchestrator":
+            return self.magentic_orchestrate(req)
+        if role.endswith("_agent"):
+            return self.magentic_specialist(req)
+        raise ValueError(f"unknown agent role {role!r}")
+
+    # -- shared magentic orchestration ------------------------------------
+    def magentic_orchestrate(self, req: LLMRequest) -> Decision:
+        phase = req.meta["phase"]
+        if phase in ("facts", "update-facts"):
+            return Decision(structured={
+                "given_facts": [self.task[:160]],
+                "facts_to_lookup": self.facts_to_lookup(),
+                "facts_to_derive": ["the final artifact content"],
+                "guesses": ["the task is completable with the given team"]})
+        if phase in ("plan", "replan"):
+            return Decision(structured={"plan": self.magentic_plan(req)})
+        if phase == "final":
+            return Decision(text=self.final_answer(req))
+        raise ValueError(phase)
+
+    # -- overridables -------------------------------------------------------
+    def facts_to_lookup(self) -> List[str]:
+        return []
+
+    def magentic_plan(self, req: LLMRequest) -> List[str]:
+        raise NotImplementedError
+
+    def final_answer(self, req: LLMRequest) -> str:
+        return ("The task has been completed. " + self.task[:120])
+
+
+# ===========================================================================
+# Web Exploration (paper §5.3.1)
+
+
+class WebSearchPolicy(BasePolicy):
+    app = "web_search"
+
+    def __init__(self, world, task, deployment, seed):
+        super().__init__(world, task, deployment, seed)
+        m = re.search(r"Search for (.+?) and summarize", task)
+        self.query = m.group(1).strip("'\"") if m else task
+        self.artifact = "web_summary.txt"
+
+    # -- content helpers ----------------------------------------------------
+    def _urls_from(self, text: str) -> List[str]:
+        return re.findall(r"https?://\S+?(?=[\s,\"')\]]|$)", text)
+
+    def _summary_from_chunks(self, chunks: List[str]) -> str:
+        body = " ".join(c.replace("<error>", " ")[:620] for c in chunks)
+        return (f"Summary of web findings on '{self.query}':\n" + body[:1750])
+
+    def _summary_from_snippets(self, search_json: str) -> str:
+        try:
+            res = json.loads(search_json)["organic"]
+        except Exception:
+            res = []
+        body = " ".join(f"{r['title']}: {r['snippet']}" for r in res)
+        return f"Summary of search results for '{self.query}':\n{body[:1400]}"
+
+    # -- AgentX ---------------------------------------------------------
+    def agentx_stages(self, req: LLMRequest) -> Decision:
+        if self.faas:
+            subs = [f"Search the web for: {self.query}",
+                    "Summarize the search results and write them to storage"]
+            if self.chance("faas_split_write", 0.35):
+                subs = [subs[0], "Summarize the search results",
+                        "Write the summary to storage"]
+        else:
+            subs = [f"Search the web for: {self.query}",
+                    "Fetch content from the most relevant URLs",
+                    "Summarize the contents and write them into a text file"]
+            if self.chance("split_write", 0.3):
+                subs = subs[:2] + ["Summarize the fetched contents",
+                                   "Write the summary into a text file"]
+        return Decision(structured={"sub_tasks": subs})
+
+    def agentx_plan(self, req: LLMRequest) -> Decision:
+        stage = req.meta["stages"][req.meta["stage_idx"]].lower()
+        summaries = req.meta["summaries"]
+        if stage.startswith("search the web"):
+            steps = [{"description": "search the web", "tool": "google_search",
+                      "params": {"query": self.query, "num_results": 8}}]
+            return Decision(structured={"steps": steps,
+                                        "tools_needed": ["google_search"]})
+        if "fetch" in stage:
+            urls = self._urls_from(" ".join(summaries))
+            top = 5 if self.chance("fetch_top5", 0.25) else 3
+            steps = [{"description": f"fetch {u}", "tool": "fetch",
+                      "params": {"url": u}} for u in urls[:top]]
+            return Decision(structured={"steps": steps,
+                                        "tools_needed": ["fetch"]})
+        if "write" in stage and "summar" not in stage:
+            steps = [{"description": "write the summary",
+                      "tool": self.write_tool_name, "params": {}}]
+            return Decision(structured={"steps": steps,
+                                        "tools_needed": [self.write_tool_name]})
+        # summarize (+maybe write)
+        steps = [{"description": "summarize and save",
+                  "tool": self.write_tool_name, "params": {}}]
+        return Decision(structured={"steps": steps,
+                                    "tools_needed": [self.write_tool_name]})
+
+    def agentx_execute(self, req: LLMRequest) -> Decision:
+        stage = req.meta["stage"].lower()
+        hist = req.meta["stage_history"]
+        plan = req.meta["plan"]
+        summaries = req.meta["summaries"]
+        if stage.startswith("search the web"):
+            if not hist:
+                return Decision(tool_call=ToolCall(
+                    "serper", "google_search",
+                    {"query": self.query, "num_results": 8}))
+            try:
+                res = json.loads(hist[0]["result"])["organic"]
+            except Exception:
+                res = []
+            listing = "; ".join(f"{r['link']} — {r['snippet'][:300]}"
+                                for r in res[:8])
+            return Decision(structured={
+                "execution_results": "Search returned these relevant URLs: "
+                + listing, "success": True})
+        if "fetch" in stage:
+            steps = plan["steps"]
+            if len(hist) < len(steps):
+                url = steps[len(hist)]["params"]["url"]
+                return Decision(tool_call=ToolCall("fetch", "fetch",
+                                                   {"url": url}))
+            chunks = [h["result"] for h in hist]
+            return Decision(structured={
+                "execution_results": self._summary_from_chunks(chunks),
+                "success": True})
+        # summarize / write stages
+        summary = next((s for s in reversed(summaries)
+                        if "Summary of" in s), None)
+        if summary is None:
+            src = next((s for s in summaries if "URLs" in s), "")
+            body = src.split("URLs:", 1)[-1]
+            summary = (f"Summary of web findings on '{self.query}':\n"
+                       + body[:1500])
+        if "summar" in stage and "write" not in stage:
+            # separate-write anomaly: write tool is visible, executor writes
+            # anyway; the later write stage duplicates it (paper §6.1)
+            if not hist:
+                return Decision(tool_call=self.write_call(self.artifact, summary))
+            return Decision(structured={"execution_results": summary,
+                                        "success": True})
+        if self.chance("forget_write", 0.10):
+            return Decision(structured={
+                "execution_results": "Summarized the findings.",
+                "success": True})   # but never wrote the file -> failed run
+        if not hist:
+            return Decision(tool_call=self.write_call(self.artifact, summary))
+        return Decision(structured={
+            "execution_results": f"Wrote summary to {self.out_target(self.artifact)}",
+            "success": True})
+
+    # -- ReAct ----------------------------------------------------------
+    def react(self, req: LLMRequest) -> Decision:
+        hist = req.meta["history"]
+        search = _last(hist, "google_search")
+        if search is None:
+            return Decision(tool_call=ToolCall(
+                "serper", "google_search",
+                {"query": self.query, "num_results": 5}))
+        if not self.faas:
+            urls = self._urls_from(search)[:5]
+            fetches = _all(hist, "fetch")
+            per_url: Dict[str, List[Dict]] = {}
+            for f in fetches:
+                per_url.setdefault(f["args"]["url"], []).append(f)
+            for u in urls:
+                done = per_url.get(u, [])
+                if not done:
+                    return Decision(tool_call=ToolCall("fetch", "fetch",
+                                                       {"url": u}))
+                if "Content truncated" in done[-1]["result"]:
+                    return Decision(tool_call=ToolCall(
+                        "fetch", "fetch",
+                        {"url": u, "start_index": 5000 * len(done)}))
+            chunks = [f["result"] for f in fetches]
+            summary = self._summary_from_chunks(chunks)
+        else:
+            # FaaS: default fetch description -> never used (§5.4.2)
+            summary = self._summary_from_snippets(search)
+        if _last(hist, self.write_tool_name) is None:
+            return Decision(tool_call=self.write_call(self.artifact, summary))
+        return Decision(text="Final Answer: wrote the summary to "
+                        + self.out_target(self.artifact))
+
+    # -- Magentic-One -----------------------------------------------------
+    def facts_to_lookup(self) -> List[str]:
+        return [f"web content about {self.query}"]
+
+    def magentic_plan(self, req: LLMRequest) -> List[str]:
+        fs = "s3" if self.faas else "filesystem"
+        plan = [f"serper: search the web for {self.query}",
+                "fetch: fetch the most relevant content from the search "
+                "result URLs",
+                f"{fs}: write the summarized results to a text file"]
+        if self.chance("skip_fetch", 0.25):
+            plan.pop(1)   # completes without the fetch tool (§6.5)
+        return plan
+
+    def magentic_specialist(self, req: LLMRequest) -> Decision:
+        server = req.meta["server"]
+        hist = req.meta["history"]
+        ctx = req.meta["shared_context"]
+        if server == "serper":
+            if not hist:
+                return Decision(tool_call=ToolCall(
+                    "serper", "google_search",
+                    {"query": self.query, "num_results": 8}))
+            # near-raw reflection (minimal summarization, §5.4.4)
+            return Decision(structured={"result": hist[0]["result"][:3600],
+                                        "done": True})
+        if server == "fetch":
+            n_target = self.rng.randint(4, 8)
+            urls = self._urls_from(" ".join(ctx))[:n_target]
+            fetched = {h["args"]["url"] for h in hist}
+            for u in urls:
+                if u not in fetched:
+                    return Decision(tool_call=ToolCall("fetch", "fetch",
+                                                       {"url": u}))
+            body = " ".join(h["result"][:900] for h in hist)
+            return Decision(structured={"result": body[:4200], "done": True})
+        # file agent
+        if self.chance("mag_no_write", 0.18):
+            return Decision(structured={
+                "result": "Here is the summary: "
+                + self._summary_from_chunks(ctx)[:900],
+                "done": True, "task_complete": True})
+        if _last(hist, self.write_tool_name) is None:
+            summary = self._summary_from_chunks(ctx)
+            return Decision(tool_call=self.write_call(self.artifact, summary))
+        return Decision(structured={"result": "Summary written to file.",
+                                    "done": True, "task_complete": True})
+
+    def final_answer(self, req: LLMRequest) -> str:
+        return (f"I searched the web for '{self.query}', summarized the "
+                f"findings and saved them to {self.out_target(self.artifact)}.")
+
+
+# ===========================================================================
+# Stock Correlation (paper §5.3.2)
+
+
+class StockPolicy(BasePolicy):
+    app = "stock_correlation"
+
+    def __init__(self, world, task, deployment, seed):
+        super().__init__(world, task, deployment, seed)
+        m = re.search(r"stock prices of (.+?),? and save it as (\S+?\.png)",
+                      task)
+        names = m.group(1) if m else ""
+        self.filename = m.group(2) if m else "plot.png"
+        self.companies = [c.strip() for c in
+                          re.split(r",| and ", names) if c.strip()]
+        self.artifact = self.filename
+
+    # -- code generation ------------------------------------------------
+    def _plot_code(self, data: Dict[str, List[float]], broken: bool = False,
+                   dummy: bool = False, no_save: bool = False) -> str:
+        lines = ["import matplotlib.pyplot as plt", ""]
+        if dummy:
+            lines.append("# replace with actual data")
+            for tic in (list(data) or ["A", "B", "C"]):
+                lines.append(f"plt.plot([100, 101, 102], label='{tic}')")
+        else:
+            for tic, prices in data.items():
+                lines.append(f"{tic} = {json.dumps(prices)}")
+                lines.append(f"plt.plot({tic}, label='{tic}')")
+        lines += ["plt.title('Historical stock prices')",
+                  "plt.xlabel('day')", "plt.ylabel('close')",
+                  "plt.legend()", "plt.grid(True)"]
+        if not no_save:
+            lines.append(f"plt.savefig('{self.out_target(self.filename)}')")
+        code = "\n".join(lines)
+        if broken:
+            code = code.replace("plt.legend()", "plt.legend(")  # SyntaxError
+        return code
+
+    def _data_from(self, results: List[str], truncate: int = 0
+                   ) -> Dict[str, List[float]]:
+        out: Dict[str, List[float]] = {}
+        for r in results:
+            try:
+                d = json.loads(r)
+            except (ValueError, TypeError):
+                continue
+            if isinstance(d, dict) and "ticker" in d and "close" in d:
+                close = d["close"]
+                out[d["ticker"]] = close[:truncate] if truncate else close
+            elif isinstance(d, dict):
+                for k, v in d.items():
+                    if (isinstance(v, list) and v
+                            and all(isinstance(x, (int, float)) for x in v)):
+                        out[k] = v[:truncate] if truncate else v
+        return out
+
+    # -- AgentX ---------------------------------------------------------
+    def agentx_stages(self, req: LLMRequest) -> Decision:
+        subs = [f"Get historical stock prices for "
+                f"{', '.join(self.companies)}",
+                f"Generate a plot of the prices and save it as {self.filename}"]
+        if self.chance("extra_process_stage", 0.3):
+            subs.insert(1, "Process and consolidate the stock data")
+        if self.chance("extra_save_stage", 0.2):
+            subs.append(f"Save the plot as {self.filename}")
+        return Decision(structured={"sub_tasks": subs})
+
+    def agentx_plan(self, req: LLMRequest) -> Decision:
+        stage = req.meta["stages"][req.meta["stage_idx"]].lower()
+        if "get historical" in stage:
+            steps = [{"description": f"get history for {c}",
+                      "tool": "get_stock_history",
+                      "params": {"ticker": c}} for c in self.companies]
+            return Decision(structured={"steps": steps,
+                                        "tools_needed": ["get_stock_history"]})
+        if "process" in stage:
+            return Decision(structured={
+                "steps": [{"description": "consolidate the data", "tool": "",
+                           "params": {}}], "tools_needed": []})
+        steps = [{"description": "generate and run plotting code",
+                  "tool": "execute_python", "params": {}}]
+        return Decision(structured={"steps": steps,
+                                    "tools_needed": ["execute_python"]})
+
+    def agentx_execute(self, req: LLMRequest) -> Decision:
+        stage = req.meta["stage"].lower()
+        hist = req.meta["stage_history"]
+        summaries = req.meta["summaries"]
+        if "get historical" in stage:
+            if len(hist) < len(self.companies):
+                c = self.companies[len(hist)]
+                return Decision(tool_call=ToolCall(
+                    "yfinance", "get_stock_history", {"ticker": c}))
+            # execution results = the entire tool output (paper §6.1)
+            return Decision(structured={
+                "execution_results": "\n".join(h["result"] for h in hist),
+                "success": True})
+        if "process" in stage:
+            return Decision(structured={
+                "execution_results": "Consolidated the stock data: "
+                + " ".join(summaries)[:3000], "success": True})
+        if "save the plot" in stage and any("saved plot" in s.lower()
+                                            for s in summaries):
+            # duplicate save stage (§6.1): re-runs the save code
+            if not hist:
+                data = self._data_from(summaries[0].splitlines())
+                return Decision(tool_call=ToolCall(
+                    "code-execution", "execute_python",
+                    {"code": self._plot_code(data)}))
+            return Decision(structured={"execution_results":
+                                        "Plot saved again.", "success": True})
+        # plot stage
+        data = self._data_from(
+            [ln for s in summaries for ln in s.splitlines()])
+        attempts = _all(hist, "execute_python")
+        stuck = self.chance("stuck_error_loop", 0.18)
+        first_broken = self.chance("syntax_error_first", 0.25)
+        if not attempts:
+            return Decision(tool_call=ToolCall(
+                "code-execution", "execute_python",
+                {"code": self._plot_code(data, broken=first_broken or stuck)}))
+        last = attempts[-1]["result"]
+        if '"status": "error"' in last:
+            if stuck:
+                if len(attempts) >= 4:   # no recovery system -> give up
+                    return Decision(structured={
+                        "execution_results": "Plot generation kept failing.",
+                        "success": False})
+                return Decision(tool_call=ToolCall(
+                    "code-execution", "execute_python",
+                    {"code": self._plot_code(data, broken=True)}))
+            return Decision(tool_call=ToolCall(
+                "code-execution", "execute_python",
+                {"code": self._plot_code(data)}))
+        return Decision(structured={
+            "execution_results": f"Saved plot to "
+            f"{self.out_target(self.filename)} using the full price history.",
+            "success": True})
+
+    # -- ReAct ------------------------------------------------------------
+    def react(self, req: LLMRequest) -> Decision:
+        hist = req.meta["history"]
+        got = _all(hist, "get_stock_history")
+        if len(got) < len(self.companies):
+            return Decision(tool_call=ToolCall(
+                "yfinance", "get_stock_history",
+                {"ticker": self.companies[len(got)]}))
+        data = self._data_from([h["result"] for h in got])
+        runs = _all(hist, "execute_python")
+        if not runs:
+            broken = self.chance("react_syntax_error", 0.3)
+            return Decision(tool_call=ToolCall(
+                "code-execution", "execute_python",
+                {"code": self._plot_code(data, broken=broken)}))
+        if '"status": "error"' in runs[-1]["result"]:
+            return Decision(tool_call=ToolCall(
+                "code-execution", "execute_python",
+                {"code": self._plot_code(data)}))
+        return Decision(text=f"Final Answer: plotted "
+                        f"{', '.join(self.companies)} and saved "
+                        f"{self.out_target(self.filename)}")
+
+    # -- Magentic-One ------------------------------------------------------
+    def facts_to_lookup(self) -> List[str]:
+        return [f"historical prices for {c}" for c in self.companies]
+
+    def magentic_plan(self, req: LLMRequest) -> List[str]:
+        return [f"yfinance: collect historical stock data for "
+                f"{', '.join(self.companies)}",
+                f"code-execution: generate a plot and save it as "
+                f"{self.filename}"]
+
+    def magentic_specialist(self, req: LLMRequest) -> Decision:
+        server = req.meta["server"]
+        hist = req.meta["history"]
+        ctx = req.meta["shared_context"]
+        if server == "yfinance":
+            if len(hist) < len(self.companies):
+                return Decision(tool_call=ToolCall(
+                    "yfinance", "get_stock_history",
+                    {"ticker": self.companies[len(hist)]}))
+            if self.chance("mag_no_data", 0.35):
+                return Decision(structured={
+                    "result": "I have successfully retrieved the data for "
+                              "the stocks.", "done": True})
+            data = self._data_from([h["result"] for h in hist], truncate=18)
+            return Decision(structured={
+                "result": "Retrieved stock data (truncated): "
+                + json.dumps(data), "done": True})
+        if server == "code-execution":
+            data = self._data_from(
+                [ln for c in ctx for ln in
+                 ([c[c.index("{"):]] if "{" in c else [])])
+            dummy = not data
+            no_save = self.chance("mag_code_no_save", 0.15)
+            if not hist:
+                return Decision(tool_call=ToolCall(
+                    "code-execution", "execute_python",
+                    {"code": self._plot_code(data, dummy=dummy,
+                                             no_save=no_save)}))
+            return Decision(structured={
+                "result": ("Generated the plot with available data."
+                           if not dummy else
+                           "Generated the plot. # replace with actual data"),
+                "done": True, "task_complete": True})
+        return Decision(structured={"result": "nothing to do", "done": True})
+
+    def final_answer(self, req: LLMRequest) -> str:
+        return (f"Plotted the historical prices of "
+                f"{', '.join(self.companies)}; saved as "
+                f"{self.out_target(self.filename)}.")
+
+
+# ===========================================================================
+# Research Paper Summarization (paper §5.3.3)
+
+
+class ResearchPolicy(BasePolicy):
+    app = "research_report"
+
+    SECTIONS = ("Core Contributions", "Methodology", "Experimental Results",
+                "Limitations")
+
+    def __init__(self, world, task, deployment, seed):
+        super().__init__(world, task, deployment, seed)
+        m = re.search(r"paper titled ['\"]?(.+?)['\"]? and save", task)
+        self.title = m.group(1) if m else task
+        self.artifact = "report.txt"
+
+    # -- helpers ----------------------------------------------------------
+    def _arxiv_id(self, results: List[str]) -> Optional[str]:
+        for r in results:
+            m = (re.search(r'"id":\s*"(\d{4}\.\d{4,5})"', r)
+                 or re.search(r"(\d{4}\.\d{4,5})", r))
+            if m:
+                return m.group(1)
+        return None
+
+    def _saved_path(self, results: List[str]) -> Optional[str]:
+        for r in results:
+            m = re.search(r'"saved_to":\s*"([^"]+)"', r)
+            if m:
+                return m.group(1)
+        return None
+
+    def _report_from(self, retrievals: List[Dict]) -> str:
+        parts = [f"Report on '{self.title}'"]
+        for h in retrievals:
+            q = h["args"].get("query", "")
+            try:
+                res = json.loads(h["result"])["results"]
+                snip = res[0]["snippet"][:520] if res else "(no snippet)"
+            except Exception:
+                snip = "(retrieval failed)"
+            parts.append(f"## {q}\n{snip}")
+        return "\n\n".join(parts)
+
+    def dl_dest(self) -> str:
+        return (self.out_target("paper.pdf") if self.faas
+                else "/workspace/paper.pdf")
+
+    # -- AgentX -----------------------------------------------------------
+    def agentx_stages(self, req: LLMRequest) -> Decision:
+        return Decision(structured={"sub_tasks": [
+            f"Retrieve the article metadata for '{self.title}'",
+            "Download the article",
+            "Query the downloaded document for the required sections",
+            "Save the summary as a text file"]})
+
+    def agentx_plan(self, req: LLMRequest) -> Decision:
+        stage = req.meta["stages"][req.meta["stage_idx"]].lower()
+        summaries = req.meta["summaries"]
+        if "metadata" in stage:
+            steps = [{"description": "search arxiv", "tool": "search_arxiv",
+                      "params": {"query": self.title}}]
+            tools = ["search_arxiv"]
+            if self.chance("redundant_details", 0.4):
+                steps.append({"description": "get details",
+                              "tool": "get_details", "params": {}})
+                tools.append("get_details")
+            return Decision(structured={"steps": steps, "tools_needed": tools})
+        if "quer" in stage:
+            # anomaly (§6.1): tool parameters sometimes not explicitly
+            # mentioned — the pdf path is omitted from the plan
+            omit = self.chance("plan_omits_path", 0.15)
+            path = "" if omit else (self._find_path(summaries) or "")
+            steps = [{"description": f"query: {s}",
+                      "tool": "document_retriever",
+                      "params": ({"query": s} if omit else
+                                 {"path": path, "query": s})}
+                     for s in self.SECTIONS]
+            return Decision(structured={"steps": steps,
+                                        "tools_needed": ["document_retriever"]})
+        if "download" in stage:
+            aid = self._arxiv_id(summaries) or ""
+            return Decision(structured={
+                "steps": [{"description": "download the pdf",
+                           "tool": "download_article",
+                           "params": {"arxiv_id": aid,
+                                      "dest": self.dl_dest()}}],
+                "tools_needed": ["download_article"]})
+        return Decision(structured={
+            "steps": [{"description": "save the report",
+                       "tool": self.write_tool_name, "params": {}}],
+            "tools_needed": [self.write_tool_name]})
+
+    def _find_path(self, summaries: List[str]) -> Optional[str]:
+        for s in summaries:
+            m = re.search(r"(s3://\S+\.pdf|/\S+\.pdf)", s)
+            if m:
+                return m.group(1)
+        return None
+
+    def agentx_execute(self, req: LLMRequest) -> Decision:
+        stage = req.meta["stage"].lower()
+        hist = req.meta["stage_history"]
+        plan = req.meta["plan"]
+        summaries = req.meta["summaries"]
+        if "metadata" in stage:
+            if len(hist) < len(plan["steps"]):
+                step = plan["steps"][len(hist)]
+                if step["tool"] == "search_arxiv":
+                    return Decision(tool_call=ToolCall(
+                        "arxiv", "search_arxiv", {"query": self.title}))
+                aid = self._arxiv_id([h["result"] for h in hist]) or "0000.0000"
+                return Decision(tool_call=ToolCall(
+                    "arxiv", "get_details", {"arxiv_id": aid}))
+            aid = self._arxiv_id([h["result"] for h in hist])
+            return Decision(structured={
+                "execution_results": f"The paper '{self.title}' has arXiv id "
+                f"{aid}.", "success": True})
+        if "quer" in stage:
+            steps = plan["steps"]
+            if len(hist) < len(steps):
+                step = steps[len(hist)]
+                params = dict(step["params"])
+                if "path" not in params:
+                    # executor falls back to a dummy value (§6.1)
+                    params["path"] = "document.pdf"
+                return Decision(tool_call=ToolCall(
+                    "rag", "document_retriever", params))
+            retrievals = _all(hist, "document_retriever")
+            failed = all("<tool-error" in h["result"] or
+                         "retrieval failed" in h["result"]
+                         for h in retrievals)
+            if failed:
+                return Decision(structured={
+                    "execution_results": "Could not query the document.",
+                    "success": False})   # no recovery system -> run fails
+            return Decision(structured={
+                "execution_results": self._report_from(retrievals),
+                "success": True})
+        if "download" in stage:
+            if not hist:
+                aid = self._arxiv_id(summaries) or ""
+                return Decision(tool_call=ToolCall(
+                    "arxiv", "download_article",
+                    {"arxiv_id": aid, "dest": self.dl_dest()}))
+            path = self._saved_path([hist[0]["result"]])
+            ok = path is not None
+            return Decision(structured={
+                "execution_results": (f"Downloaded the article to {path}."
+                                      if ok else "Download failed."),
+                "success": ok})
+        # save stage
+        if self.chance("forget_write", 0.08):
+            return Decision(structured={
+                "execution_results": "Report complete.", "success": True})
+        if not hist:
+            report = next((s for s in reversed(summaries)
+                           if s.startswith("Report on")), "Report (empty)")
+            return Decision(tool_call=self.write_call(self.artifact, report))
+        return Decision(structured={
+            "execution_results": f"Saved report to "
+            f"{self.out_target(self.artifact)}.", "success": True})
+
+    # -- ReAct --------------------------------------------------------------
+    def react(self, req: LLMRequest) -> Decision:
+        hist = req.meta["history"]
+        if _last(hist, "search_arxiv") is None:
+            return Decision(tool_call=ToolCall("arxiv", "search_arxiv",
+                                               {"query": self.title}))
+        aid = self._arxiv_id([h["result"] for h in hist]) or ""
+        if self.chance("react_redundant_url", 0.3) and \
+                _last(hist, "get_article_url") is None:
+            return Decision(tool_call=ToolCall("arxiv", "get_article_url",
+                                               {"arxiv_id": aid}))
+        if _last(hist, "download_article") is None:
+            return Decision(tool_call=ToolCall(
+                "arxiv", "download_article",
+                {"arxiv_id": aid, "dest": self.dl_dest()}))
+        path = self._saved_path([h["result"] for h in hist]) or self.dl_dest()
+        rets = _all(hist, "document_retriever")
+        if len(rets) < len(self.SECTIONS):
+            q = self.SECTIONS[len(rets)]
+            return Decision(tool_call=ToolCall(
+                "rag", "document_retriever", {"path": path, "query": q}))
+        if _last(hist, self.write_tool_name) is None:
+            report = self._report_from(rets)
+            return Decision(tool_call=self.write_call(self.artifact, report))
+        return Decision(text="Final Answer: report saved to "
+                        + self.out_target(self.artifact))
+
+    # -- Magentic-One --------------------------------------------------------
+    def facts_to_lookup(self) -> List[str]:
+        return [f"the arXiv entry for '{self.title}'",
+                "the paper's key sections"]
+
+    def magentic_plan(self, req: LLMRequest) -> List[str]:
+        fs = "s3" if self.faas else "filesystem"
+        return [f"arxiv: find and download the paper '{self.title}'",
+                "rag: extract Core Contributions, Methodology, Experimental "
+                "Results and Limitations",
+                f"{fs}: save the summary into a text file",
+                f"{fs}: verify the text file exists and has content"]
+
+    def magentic_specialist(self, req: LLMRequest) -> Decision:
+        server = req.meta["server"]
+        hist = req.meta["history"]
+        ctx = req.meta["shared_context"]
+        replans = req.meta.get("replans", 0)
+        if server == "arxiv":
+            if _last(hist, "search_arxiv") is None:
+                return Decision(tool_call=ToolCall(
+                    "arxiv", "search_arxiv", {"query": self.title}))
+            aid = self._arxiv_id([h["result"] for h in hist]) or ""
+            premature = self.chance("mag_premature_handoff", 0.2) and replans == 0
+            if premature:
+                if _last(hist, "get_details") is None:
+                    return Decision(tool_call=ToolCall(
+                        "arxiv", "get_details", {"arxiv_id": aid}))
+                return Decision(structured={
+                    "result": f"Found the paper {aid}; details retrieved.",
+                    "done": True})   # never downloaded!
+            if _last(hist, "download_article") is None:
+                return Decision(tool_call=ToolCall(
+                    "arxiv", "download_article",
+                    {"arxiv_id": aid, "dest": self.dl_dest()}))
+            path = self._saved_path([h["result"] for h in hist])
+            return Decision(structured={
+                "result": f"Downloaded '{self.title}' to {path}.",
+                "done": True})
+        if server == "rag":
+            path = None
+            for c in ctx:
+                m = re.search(r"(s3://\S+\.pdf|/\S+\.pdf)", c)
+                if m:
+                    path = m.group(1)
+            if path is None:
+                path = "C:\\papers\\paper.pdf" \
+                    if self.chance("mag_backslash_path", 0.1) else "paper.pdf"
+            rets = _all(hist, "document_retriever")
+            if rets and "<tool-error" in rets[-1]["result"] \
+                    or (rets and "retrieval failed" in rets[-1]["result"]):
+                return Decision(structured={
+                    "result": "Could not read the document at "
+                    f"{path}; the file may not have been downloaded.",
+                    "done": True, "replan": True})
+            if len(rets) < len(self.SECTIONS):
+                q = self.SECTIONS[len(rets)]
+                return Decision(tool_call=ToolCall(
+                    "rag", "document_retriever", {"path": path, "query": q}))
+            return Decision(structured={"result": self._report_from(rets),
+                                        "done": True})
+        # file agent
+        if "verify" in req.meta["subtask"]:
+            # the verification step never executes (§6.4)
+            return Decision(structured={"result": "Task already complete.",
+                                        "done": True, "task_complete": True})
+        if self.chance("mag_no_write", 0.15):
+            return Decision(structured={
+                "result": "The report is ready.", "done": True,
+                "task_complete": True})
+        if _last(hist, self.write_tool_name) is None:
+            report = next((c for c in reversed(ctx)
+                           if c.startswith("Report on")), "Report (empty)")
+            return Decision(tool_call=self.write_call(self.artifact, report))
+        return Decision(structured={"result": "Report saved.", "done": True,
+                                    "task_complete": True})
+
+    def final_answer(self, req: LLMRequest) -> str:
+        return (f"Generated the report on '{self.title}' and saved it to "
+                f"{self.out_target(self.artifact)}.")
+
+
+class MultiTopicPolicy(BasePolicy):
+    """Beyond-paper app: N independent topic searches merged into one
+    digest — the independent stages run CONCURRENTLY under
+    AgentXRunner(parallel_stages=True) (paper §7 future work)."""
+
+    app = "multi_topic_digest"
+
+    def __init__(self, world, task, deployment, seed):
+        super().__init__(world, task, deployment, seed)
+        m = re.search(r"Search for (.+?) and write", task)
+        raw = m.group(1) if m else task
+        self.topics = [t.strip(" '\"") for t in raw.split(";") if t.strip()]
+        self.artifact = "digest.txt"
+
+    def stage_groups(self, stages):
+        # one stage per topic (independent) + the final merge/write
+        return [list(range(len(stages) - 1)), [len(stages) - 1]]
+
+    def agentx_stages(self, req):
+        subs = [f"Search and summarize topic: {t}" for t in self.topics]
+        subs.append("Merge the topic summaries and write the digest file")
+        return Decision(structured={"sub_tasks": subs})
+
+    def agentx_plan(self, req):
+        idx = req.meta["stage_idx"]
+        if idx < len(self.topics):
+            t = self.topics[idx]
+            return Decision(structured={
+                "steps": [{"description": f"search {t}",
+                           "tool": "google_search",
+                           "params": {"query": t, "num_results": 6}}],
+                "tools_needed": ["google_search"]})
+        return Decision(structured={
+            "steps": [{"description": "write the digest",
+                       "tool": self.write_tool_name, "params": {}}],
+            "tools_needed": [self.write_tool_name]})
+
+    def agentx_execute(self, req):
+        stage = req.meta["stage"]
+        hist = req.meta["stage_history"]
+        summaries = req.meta["summaries"]
+        if stage.startswith("Search and summarize"):
+            topic = stage.split(": ", 1)[1]
+            if not hist:
+                return Decision(tool_call=ToolCall(
+                    "serper", "google_search",
+                    {"query": topic, "num_results": 6}))
+            try:
+                res = json.loads(hist[0]["result"])["organic"]
+            except Exception:
+                res = []
+            body = " ".join(f"{r['title']}: {r['snippet'][:250]}"
+                            for r in res[:5])
+            return Decision(structured={
+                "execution_results": f"Digest section '{topic}': "
+                + body[:1200], "success": True})
+        if not hist:
+            digest = "\n\n".join(s for s in summaries
+                                  if s.startswith("Digest section"))
+            return Decision(tool_call=self.write_call(self.artifact, digest))
+        return Decision(structured={
+            "execution_results": "Digest written.", "success": True})
+
+    def react(self, req):
+        hist = req.meta["history"]
+        searches = _all(hist, "google_search")
+        if len(searches) < len(self.topics):
+            return Decision(tool_call=ToolCall(
+                "serper", "google_search",
+                {"query": self.topics[len(searches)], "num_results": 6}))
+        if _last(hist, self.write_tool_name) is None:
+            body = " ".join(h["result"][:600] for h in searches)
+            return Decision(tool_call=self.write_call(
+                self.artifact, f"Digest: {body[:2000]}"))
+        return Decision(text="Final Answer: digest written")
+
+    def magentic_plan(self, req):
+        fs = "s3" if self.faas else "filesystem"
+        return [f"serper: search each topic: {'; '.join(self.topics)}",
+                f"{fs}: write the digest file"]
+
+    def magentic_specialist(self, req):
+        server = req.meta["server"]
+        hist = req.meta["history"]
+        ctx = req.meta["shared_context"]
+        if server == "serper":
+            if len(hist) < len(self.topics):
+                return Decision(tool_call=ToolCall(
+                    "serper", "google_search",
+                    {"query": self.topics[len(hist)], "num_results": 6}))
+            return Decision(structured={
+                "result": " ".join(h["result"][:800] for h in hist)[:3000],
+                "done": True})
+        if _last(hist, self.write_tool_name) is None:
+            return Decision(tool_call=self.write_call(
+                self.artifact, "Digest: " + " ".join(ctx)[:2000]))
+        return Decision(structured={"result": "written", "done": True,
+                                    "task_complete": True})
+
+
+POLICIES = {
+    "web_search": WebSearchPolicy,
+    "stock_correlation": StockPolicy,
+    "research_report": ResearchPolicy,
+    "multi_topic_digest": MultiTopicPolicy,
+}

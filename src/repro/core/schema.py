@@ -1,0 +1,91 @@
+"""Structured-output schema system (paper §3.1).
+
+The paper gives each agent "an output schema that defines the structure of
+the output the agent should produce ... provided as a Python object that
+includes attributes with a data type and description" (pydantic there; a
+dependency-free equivalent here). Schemas ground LLM output to a
+deterministic structure that the execution flow parses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    name: str
+    type: str            # "str" | "bool" | "int" | "list[str]" | "list[dict]"
+    description: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    name: str
+    fields: tuple
+
+    def describe(self) -> str:
+        lines = [f"Respond with JSON matching schema {self.name}:"]
+        for f in self.fields:
+            lines.append(f"  {f.name} ({f.type}): {f.description}")
+        return "\n".join(lines)
+
+    def validate(self, obj: Dict[str, Any]) -> Dict[str, Any]:
+        checkers = {
+            "str": lambda v: isinstance(v, str),
+            "bool": lambda v: isinstance(v, bool),
+            "int": lambda v: isinstance(v, int) and not isinstance(v, bool),
+            "list[str]": lambda v: isinstance(v, list)
+            and all(isinstance(x, str) for x in v),
+            "list[dict]": lambda v: isinstance(v, list)
+            and all(isinstance(x, dict) for x in v),
+        }
+        for f in self.fields:
+            if f.name not in obj:
+                raise SchemaError(f"{self.name}: missing field {f.name!r}")
+            if not checkers[f.type](obj[f.name]):
+                raise SchemaError(
+                    f"{self.name}: field {f.name!r} is not {f.type}: "
+                    f"{obj[f.name]!r}")
+        return obj
+
+    def dumps(self, obj: Dict[str, Any]) -> str:
+        return json.dumps(self.validate(obj))
+
+
+class SchemaError(ValueError):
+    pass
+
+
+# --- the schemas used by the AgentX pattern (paper §3) ---------------------
+
+STAGE_SCHEMA = Schema("StageList", (
+    Field("sub_tasks", "list[str]", "The list of sub tasks for the task"),
+))
+
+PLAN_SCHEMA = Schema("Plan", (
+    Field("steps", "list[dict]",
+          "Ordered steps; each has description, tool, params"),
+    Field("tools_needed", "list[str]",
+          "Names of the only tools the executor should see"),
+))
+
+REFLECTION_SCHEMA = Schema("Reflection", (
+    Field("execution_results", "str",
+          "Summary of only the relevant information from this stage to be "
+          "passed to future stages"),
+    Field("success", "bool", "Whether the plan executed successfully"),
+))
+
+# Magentic-One orchestrator artifacts
+FACT_SHEET_SCHEMA = Schema("FactSheet", (
+    Field("given_facts", "list[str]", "Facts given in the task"),
+    Field("facts_to_lookup", "list[str]", "Facts to look up"),
+    Field("facts_to_derive", "list[str]", "Facts to derive"),
+    Field("guesses", "list[str]", "Educated guesses"),
+))
+
+LEDGER_PLAN_SCHEMA = Schema("LedgerPlan", (
+    Field("plan", "list[str]", "Ordered delegation plan across the team"),
+))

@@ -1,0 +1,43 @@
+"""Tokenizers.
+
+``CountTokenizer``: deterministic token *accounting* for the agentic
+benchmarks (≈ GPT-4-class BPE density: ~4 chars/token with a word floor).
+
+``HashTokenizer``: a real reversible-enough tokenizer for the JAX serving
+engine — byte-level with a vocab-sized hash bucketing, so any ModelConfig
+vocab works without shipping a BPE model.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+
+class CountTokenizer:
+    """Token counting compatible with the paper's accounting granularity."""
+
+    @staticmethod
+    def count(text: str) -> int:
+        if not text:
+            return 0
+        words = len(text.split())
+        return max(math.ceil(len(text) / 4), words)
+
+
+class HashTokenizer:
+    """Byte tokenizer bucketed into an arbitrary vocab size (>=260)."""
+
+    def __init__(self, vocab_size: int):
+        assert vocab_size >= 260, vocab_size
+        self.vocab_size = vocab_size
+        self.bos = vocab_size - 1
+        self.eos = vocab_size - 2
+
+    def encode(self, text: str, add_bos: bool = True) -> List[int]:
+        ids = [b + 1 for b in text.encode("utf-8")]  # 1..256
+        return ([self.bos] + ids) if add_bos else ids
+
+    def decode(self, ids: List[int]) -> str:
+        bs = bytes(i - 1 for i in ids
+                   if 1 <= i <= 256)
+        return bs.decode("utf-8", errors="replace")

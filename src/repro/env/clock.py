@@ -1,0 +1,41 @@
+"""Virtual wall-clock.
+
+Every latency in the framework (LLM inference, tool execution, FaaS cold
+starts, network hops) is *simulated*: components call ``clock.sleep(dt)``
+which advances virtual time instantly. Benchmarks therefore execute in
+milliseconds while reporting realistic end-to-end seconds, and results are
+fully deterministic under a fixed seed.
+"""
+from __future__ import annotations
+
+
+class VirtualClock:
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"negative sleep {dt}")
+        self._t += dt
+
+    def reset(self, t: float = 0.0) -> None:
+        self._t = float(t)
+
+
+class Stopwatch:
+    """Measures virtual elapsed time around a block."""
+
+    def __init__(self, clock: VirtualClock):
+        self.clock = clock
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = self.clock.now()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = self.clock.now() - self._t0
+        return False

@@ -1,0 +1,77 @@
+"""Tool / network latency models, calibrated to the paper's Fig. 7 and §5.4.2.
+
+Calibration anchors (seconds, local MCP unless noted):
+  google search     ~1.7          get stock history ~1.6
+  document retriever ~14.1 mean, heavy tail observed 0.77–795
+  code executor      0.7 local, 3.4 FaaS (network + weaker Lambda vCPU)
+  fetch/load-article/search: FaaS remote tools 13–35% slower than local
+  LLM inference: dominated by output tokens (~30 tok/s for gpt-4o-mini)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict
+
+
+@dataclasses.dataclass
+class LatencySpec:
+    mean: float                 # lognormal mean (seconds)
+    sigma: float = 0.25         # lognormal shape
+    faas_factor: float = 1.0    # multiplier when served from FaaS
+    tail_p: float = 0.0         # probability of a heavy-tail outlier
+    tail_scale: float = 10.0    # outlier multiplier
+
+
+TOOL_LATENCY: Dict[str, LatencySpec] = {
+    "google_search": LatencySpec(1.7, 0.2, faas_factor=1.135),
+    "fetch": LatencySpec(1.05, 0.3, faas_factor=1.348),
+    "get_stock_history": LatencySpec(1.6, 0.25, faas_factor=0.735),
+    "document_retriever": LatencySpec(9.0, 0.6, faas_factor=0.831,
+                                      tail_p=0.04, tail_scale=14.0),
+    "load_article": LatencySpec(2.2, 0.3, faas_factor=1.271),
+    "download_article": LatencySpec(2.8, 0.3, faas_factor=1.1),
+    "search_arxiv": LatencySpec(1.4, 0.25, faas_factor=1.1),
+    "execute_python": LatencySpec(0.7, 0.2, faas_factor=4.857),
+    "write_file": LatencySpec(0.02, 0.2, faas_factor=1.0),
+    "read_file": LatencySpec(0.02, 0.2, faas_factor=1.0),
+    "s3_write": LatencySpec(0.15, 0.2),
+    "s3_read": LatencySpec(0.12, 0.2),
+}
+
+DEFAULT_SPEC = LatencySpec(0.25, 0.25, faas_factor=1.15)
+
+# network round-trip for a Lambda Function URL call
+FAAS_RTT = LatencySpec(0.09, 0.3)
+# container cold start (dockerized lambda)
+COLD_START = LatencySpec(1.9, 0.3)
+
+# LLM inference: fit so app-level latencies land near Fig. 5
+LLM_BASE = 0.45          # request overhead (s)
+LLM_IN_TOK_PER_S = 9000  # prompt ingestion
+LLM_OUT_TOK_PER_S = 31.0  # generation speed (gpt-4o-mini class)
+
+
+class LatencySampler:
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def sample(self, tool: str, faas: bool = False) -> float:
+        spec = TOOL_LATENCY.get(tool, DEFAULT_SPEC)
+        mu = math.log(spec.mean) - spec.sigma ** 2 / 2
+        val = self.rng.lognormvariate(mu, spec.sigma)
+        if spec.tail_p and self.rng.random() < spec.tail_p:
+            val *= spec.tail_scale * (0.5 + self.rng.random())
+        if faas:
+            val *= spec.faas_factor
+        return val
+
+    def sample_spec(self, spec: LatencySpec) -> float:
+        mu = math.log(spec.mean) - spec.sigma ** 2 / 2
+        return self.rng.lognormvariate(mu, spec.sigma)
+
+    def llm_latency(self, in_tokens: int, out_tokens: int) -> float:
+        jitter = 0.9 + 0.2 * self.rng.random()
+        return jitter * (LLM_BASE + in_tokens / LLM_IN_TOK_PER_S
+                         + out_tokens / LLM_OUT_TOK_PER_S)

@@ -1,0 +1,215 @@
+"""Deterministic external-world simulation.
+
+Replaces the paper's live services (Google Serper, the web, Yahoo Finance,
+arXiv) with seeded corpora whose response *sizes* are calibrated so token
+accounting lands in the paper's regimes (e.g. a search result ≈ 883 prompt
+tokens, one fetch chunk ≈ 1063 tokens / 5000 chars).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import random
+from typing import Dict, List, Tuple
+
+# ---------------------------------------------------------------------------
+# text synthesis helpers
+
+_WORDS = ("system model data analysis method results network compute design "
+          "research latency scaling cost energy device hardware software "
+          "approach framework evaluation performance throughput memory state "
+          "quantum packaging material edge inference market stock growth "
+          "revenue capacity protocol agent workflow service cloud function "
+          "deployment benchmark token context planning execution".split())
+
+
+def _prose(seed: str, n_words: int) -> str:
+    rng = random.Random(hashlib.md5(seed.encode()).hexdigest())
+    out = []
+    for i in range(n_words):
+        w = rng.choice(_WORDS)
+        if i == 0 or out[-1].endswith("."):
+            w = w.capitalize()
+        out.append(w + ("." if rng.random() < 0.08 else ""))
+    return " ".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Web corpus + search index
+
+
+@dataclasses.dataclass
+class WebPage:
+    url: str
+    title: str
+    snippet: str
+    content: str
+
+
+class WebCorpus:
+    TOPICS = {
+        "quantum": "Recent advancements in quantum computing hardware development",
+        "edge": "Edge devices and their real-world use cases in 2025",
+        "materials": "Latest trends in biodegradable materials for sustainable packaging",
+    }
+
+    def __init__(self, seed: int = 7, pages_per_topic: int = 10):
+        self.pages: Dict[str, WebPage] = {}
+        self.by_topic: Dict[str, List[str]] = {}
+        for topic, query in self.TOPICS.items():
+            urls = []
+            for i in range(pages_per_topic):
+                url = f"https://example.org/{topic}/article-{i}"
+                title = f"{query.split(' and ')[0].title()} — Part {i + 1}"
+                # ~2 fetch chunks of 5000 chars each (paper Fig. 10: ReAct
+                # re-fetches each truncated page once -> ~2 calls/URL)
+                content = (f"# {title}\n\n"
+                           + _prose(f"{topic}-{i}", 980 + 60 * (i % 4)))
+                snippet = content[120:540]
+                self.pages[url] = WebPage(url, title, snippet, content)
+                urls.append(url)
+            self.by_topic[topic] = urls
+
+    def topic_of(self, query: str) -> str:
+        q = query.lower()
+        if "quantum" in q:
+            return "quantum"
+        if "edge" in q:
+            return "edge"
+        if "material" in q or "packag" in q or "biodegrad" in q:
+            return "materials"
+        # deterministic fallback
+        return sorted(self.TOPICS)[hash(q) % len(self.TOPICS)]
+
+    def search(self, query: str, num_results: int = 8) -> List[WebPage]:
+        topic = self.topic_of(query)
+        urls = self.by_topic[topic][:num_results]
+        return [self.pages[u] for u in urls]
+
+    def fetch(self, url: str, start_index: int = 0,
+              max_length: int = 5000) -> Tuple[str, bool]:
+        """Returns (chunk, truncated)."""
+        page = self.pages.get(url)
+        if page is None:
+            raise KeyError(f"404: {url}")
+        chunk = page.content[start_index:start_index + max_length]
+        truncated = start_index + max_length < len(page.content)
+        return chunk, truncated
+
+
+# ---------------------------------------------------------------------------
+# Stock market
+
+
+class StockMarket:
+    TICKERS = {
+        "apple": "AAPL", "alphabet": "GOOGL", "google": "GOOGL",
+        "microsoft": "MSFT", "netflix": "NFLX", "disney": "DIS",
+        "amazon": "AMZN", "coca-cola": "KO", "pepsico": "PEP",
+        "mondelez": "MDLZ",
+    }
+    _BASE = {"AAPL": 190.0, "GOOGL": 165.0, "MSFT": 420.0, "NFLX": 640.0,
+             "DIS": 101.0, "AMZN": 185.0, "KO": 62.0, "PEP": 172.0,
+             "MDLZ": 67.0}
+
+    def __init__(self, seed: int = 11, days: int = 160):
+        self.days = days
+        self.series: Dict[str, List[float]] = {}
+        for tic, base in self._BASE.items():
+            rng = random.Random(seed + sum(map(ord, tic)))
+            px, out = base, []
+            for _ in range(days):
+                px *= math.exp(rng.gauss(0.0004, 0.015))
+                out.append(round(px, 2))
+            self.series[tic] = out
+
+    def resolve(self, name: str) -> str:
+        name = name.strip().lower()
+        if name.upper() in self.series:
+            return name.upper()
+        for k, v in self.TICKERS.items():
+            if k in name:
+                return v
+        raise KeyError(f"unknown ticker {name!r}")
+
+    def history(self, ticker: str, days: int = 160) -> Dict:
+        tic = self.resolve(ticker)
+        days = min(days, self.days)
+        return {"ticker": tic,
+                "dates": [f"2025-{1 + i // 21:02d}-{1 + i % 21:02d}"
+                          for i in range(days)],
+                "close": self.series[tic][-days:]}
+
+
+# ---------------------------------------------------------------------------
+# arXiv corpus
+
+
+@dataclasses.dataclass
+class ArxivPaper:
+    arxiv_id: str
+    title: str
+    abstract: str
+    sections: Dict[str, str]
+
+    def full_text(self) -> str:
+        parts = [f"# {self.title}", self.abstract]
+        for name, body in self.sections.items():
+            parts.append(f"## {name}\n{body}")
+        return "\n\n".join(parts)
+
+
+class ArxivCorpus:
+    TITLES = {
+        "why": ("2503.13657", "Why Do Multi-Agent LLM Systems Fail?"),
+        "flow": ("2501.07834", "Flow: Modularized Agentic Workflow Automation"),
+        "magentic": ("2411.04468",
+                     "Magentic-One: A Generalist Multi-Agent System for "
+                     "Solving Complex Tasks"),
+    }
+    SECTIONS = ("Core Contributions", "Methodology", "Experimental Results",
+                "Limitations")
+
+    def __init__(self, seed: int = 13):
+        self.papers: Dict[str, ArxivPaper] = {}
+        for key, (aid, title) in self.TITLES.items():
+            sections = {}
+            for sec in self.SECTIONS:
+                # interleave the section name so RAG retrieval has signal
+                body_parts = []
+                for j in range(6):
+                    body_parts.append(f"{sec} of this work include the "
+                                      f"following aspects.")
+                    body_parts.append(_prose(f"{key}-{sec}-{j}", 220))
+                sections[sec] = " ".join(body_parts)
+            abstract = _prose(f"{key}-abs", 180)
+            self.papers[aid] = ArxivPaper(aid, title, abstract, sections)
+
+    def search(self, query: str, max_results: int = 5) -> List[ArxivPaper]:
+        q = query.lower()
+        hits = [p for p in self.papers.values()
+                if any(w in p.title.lower() for w in q.split() if len(w) > 3)]
+        return (hits or list(self.papers.values()))[:max_results]
+
+    def get(self, arxiv_id: str) -> ArxivPaper:
+        if arxiv_id not in self.papers:
+            raise KeyError(f"arXiv {arxiv_id} not found")
+        return self.papers[arxiv_id]
+
+
+# ---------------------------------------------------------------------------
+
+
+class World:
+    """Bundle of all simulated external services + the virtual clock."""
+
+    def __init__(self, seed: int = 0):
+        from .clock import VirtualClock
+        from .latency import LatencySampler
+        self.seed = seed
+        self.clock = VirtualClock()
+        self.latency = LatencySampler(seed)
+        self.web = WebCorpus(seed + 7)
+        self.stocks = StockMarket(seed + 11)
+        self.arxiv = ArxivCorpus(seed + 13)

@@ -1,0 +1,121 @@
+"""Accuracy judge (paper §5.4.1).
+
+The paper scores final outputs with an LLM judge over weighted attributes.
+Offline we implement the judge as deterministic measurements of the same
+attributes against the simulated world's ground truth:
+
+  summaries (web search / research report):
+    Accuracy(50)  — fraction of summary content traceable to the corpus
+                    (hallucination check)
+    Relevance(30) — topic-term alignment with the user query
+    Depth(10)     — content length / structure beyond surface level
+    Breadth(10)   — number of distinct sources/sections covered
+
+  stock correlation:
+    Data Accuracy(50)   — plotted series match the true market series
+    Query Adherence(30) — requested tickers present, correct filename, saved
+    Plot Quality(10)    — title/labels/legend/grid present
+    Data Quantity(10)   — enough points for a meaningful plot
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+from ..env.world import World
+
+SUMMARY_WEIGHTS = {"Accuracy": 50, "Relevance": 30, "Depth": 10, "Breadth": 10}
+STOCK_WEIGHTS = {"Data Accuracy": 50, "Query Adherence": 30,
+                 "Plot Quality": 10, "Data Quantity": 10}
+
+
+@dataclasses.dataclass
+class Score:
+    attributes: Dict[str, float]    # each 0..100
+    weights: Dict[str, int]
+
+    @property
+    def total(self) -> float:
+        w = sum(self.weights.values())
+        return sum(self.attributes[k] * self.weights[k] for k in self.weights) / w
+
+
+def _ngram_overlap(text: str, sources: List[str], n: int = 5) -> float:
+    """Fraction of text n-grams present in any source (anti-hallucination)."""
+    words = re.findall(r"[a-z]+", text.lower())
+    if len(words) < n:
+        return 0.0
+    grams = {" ".join(words[i:i + n]) for i in range(len(words) - n + 1)}
+    src = " ".join(s.lower() for s in sources)
+    hit = sum(1 for g in grams if g in src)
+    return hit / max(len(grams), 1)
+
+
+def judge_summary(world: World, query: str, summary: Optional[str],
+                  kind: str) -> Score:
+    if not summary:
+        return Score({k: 0.0 for k in SUMMARY_WEIGHTS}, SUMMARY_WEIGHTS)
+    if kind == "web_search":
+        topic = world.web.topic_of(query)
+        sources = [p.content for u in world.web.by_topic[topic]
+                   for p in [world.web.pages[u]]]
+    else:
+        sources = [p.full_text() for p in world.arxiv.papers.values()]
+    acc = min(100.0, 35 + 80 * _ngram_overlap(summary, sources))
+    qwords = [w for w in re.findall(r"[a-zA-Z]+", query.lower()) if len(w) > 4]
+    rel = 100.0 * (sum(1 for w in qwords if w in summary.lower())
+                   / max(len(qwords), 1))
+    rel = min(100.0, 40 + 0.7 * rel) if summary else 0.0
+    depth = min(100.0, len(summary) / 18)
+    sections = summary.count("##")
+    breadth = min(100.0, 40 + 15 * max(sections, summary.count("http"),
+                                       summary.count(":") // 2))
+    return Score({"Accuracy": acc, "Relevance": rel, "Depth": depth,
+                  "Breadth": breadth}, SUMMARY_WEIGHTS)
+
+
+def judge_stock(world: World, companies: List[str], filename: str,
+                artifact_path: Optional[str],
+                artifact: Optional[str]) -> Score:
+    attrs = {k: 0.0 for k in STOCK_WEIGHTS}
+    if not artifact or not artifact.startswith("PNG"):
+        return Score(attrs, STOCK_WEIGHTS)
+    try:
+        state = json.loads(artifact[4:])
+    except ValueError:
+        return Score(attrs, STOCK_WEIGHTS)
+    series = state.get("series", [])
+    truth = {world.stocks.resolve(c): world.stocks.series[world.stocks.resolve(c)]
+             for c in companies}
+    # Data Accuracy: plotted values must be a suffix/subset of true closes
+    per = []
+    for s in series:
+        vals = s.get("y", [])
+        best = 0.0
+        for tic, tr in truth.items():
+            trset = {round(v, 2) for v in tr}
+            if vals:
+                frac = sum(1 for v in vals if round(v, 2) in trset) / len(vals)
+                best = max(best, frac)
+        per.append(best)
+    attrs["Data Accuracy"] = 100.0 * (sum(per) / len(per)) if per else 0.0
+    # Query Adherence
+    adher = 0.0
+    if len(series) >= len(companies):
+        adher += 50.0
+    if artifact_path and filename in artifact_path:
+        adher += 50.0
+    attrs["Query Adherence"] = adher
+    # Plot Quality
+    q = 0.0
+    q += 30.0 if state.get("title") else 0.0
+    q += 30.0 if state.get("legend") else 0.0
+    q += 20.0 if state.get("xlabel") or state.get("ylabel") else 0.0
+    q += 20.0 if state.get("grid") else 0.0
+    attrs["Plot Quality"] = q
+    # Data Quantity
+    npts = min((s.get("n", 0) for s in series), default=0)
+    attrs["Data Quantity"] = min(100.0, 100.0 * npts / 200.0)
+    return Score(attrs, STOCK_WEIGHTS)

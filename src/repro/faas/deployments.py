@@ -1,0 +1,133 @@
+"""The two MCP-on-FaaS deployment architectures (paper Fig. 2b / 2c) plus
+the local baseline (Fig. 2a).
+
+``deploy_distributed`` — one Lambda function per MCP server (the variant the
+paper evaluates). ``deploy_monolithic`` — a single function hosting all
+servers, routed by a ``server`` request param (the variant the paper leaves
+to future work; we implement and benchmark it as a beyond-paper extension).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from ..env.world import World
+from ..mcp.client import FaaSTransport, LocalTransport, McpClient
+from ..mcp.server import MCPServer
+from ..mcp.servers.arxiv import ArxivServer
+from ..mcp.servers.code_execution import CodeExecutionServer
+from ..mcp.servers.fetch import FetchServer
+from ..mcp.servers.filesystem import FileSystemServer, S3Server
+from ..mcp.servers.rag import RagServer
+from ..mcp.servers.serper import SerperServer
+from ..mcp.servers.yfinance import YFinanceServer
+from ..faas.platform import FaaSPlatform
+from ..faas.storage import LocalWorkspace
+
+SERVER_FACTORIES: Dict[str, Callable[[], MCPServer]] = {
+    "code-execution": CodeExecutionServer,
+    "rag": RagServer,
+    "yfinance": YFinanceServer,
+    "serper": SerperServer,
+    "arxiv": ArxivServer,
+    "fetch": FetchServer,
+    "filesystem": FileSystemServer,
+    "s3": S3Server,
+}
+
+# FaaS hosts only the app-relevant tool subset (§5.2): multi-threaded or
+# fs-dependent tools are dropped.
+FAAS_TOOL_SUBSET: Dict[str, List[str]] = {
+    "code-execution": ["execute_python", "list_packages"],
+    "rag": ["document_retriever"],
+    "yfinance": ["get_stock_history", "get_quote"],
+    "serper": ["google_search"],
+    "arxiv": ["search_arxiv", "download_article", "get_details",
+              "get_article_url"],
+    "fetch": ["fetch"],
+    "s3": ["s3_write", "s3_read", "s3_list"],
+}
+
+# local-deployment tool-description hints (§5.2) — NOT applied on FaaS,
+# which is what breaks fetch usage there (§5.4.2).
+LOCAL_HINTS: List[Tuple[str, str, str]] = [
+    ("fetch", "fetch", "Use this tool after using the Google Search tool, "
+     "when you need more detailed information from a specific web page."),
+    ("arxiv", "load_article_to_context",
+     "This tool should never be used to load research papers since they "
+     "are too long."),
+]
+
+
+def make_servers(names: List[str]) -> Dict[str, MCPServer]:
+    return {n: SERVER_FACTORIES[n]() for n in names}
+
+
+def deploy_local(world: World, server_names: List[str]
+                 ) -> Tuple[Dict[str, McpClient], LocalWorkspace]:
+    """Paper Fig. 2a: servers in-process on the workstation."""
+    workspace = LocalWorkspace()
+    clients = {}
+    for name in server_names:
+        server = SERVER_FACTORIES[name]()
+        for srv, tool, hint in LOCAL_HINTS:
+            if srv == name and tool in server.tools:
+                server.amend_description(tool, hint)
+        client = McpClient(LocalTransport(server, world, workspace), name)
+        client.initialize()
+        clients[name] = client
+    return clients, workspace
+
+
+def deploy_distributed(world: World, platform: FaaSPlatform,
+                       server_names: List[str]) -> Dict[str, McpClient]:
+    """Paper Fig. 2c: one containerized Lambda per MCP server."""
+    clients = {}
+    for name in server_names:
+        if name == "filesystem":       # not deployable on Lambda (§4.1)
+            name = "s3"
+        if name in clients:
+            continue
+
+        def factory(n=name):
+            server = SERVER_FACTORIES[n]()
+            if n in FAAS_TOOL_SUBSET:
+                server.drop_tools(FAAS_TOOL_SUBSET[n])
+            return server
+        proto = SERVER_FACTORIES[name]()
+        fn = platform.deploy(f"mcp-{name}", factory,
+                             memory_mb=max(proto.memory_mb, 128),
+                             image_mb=2048)
+        client = McpClient(FaaSTransport(platform, fn.url), name)
+        client.initialize()
+        clients[name] = client
+    return clients
+
+
+def deploy_monolithic(world: World, platform: FaaSPlatform,
+                      server_names: List[str]) -> Dict[str, McpClient]:
+    """Paper Fig. 2b: all MCP servers in ONE Lambda function.
+
+    Memory = sum of per-server requirements (the paper's predicted higher
+    cost per call); a single cold start covers every server.
+    """
+    names = ["s3" if n == "filesystem" else n for n in server_names]
+    names = list(dict.fromkeys(names))
+
+    def factory():
+        servers = {}
+        for n in names:
+            server = SERVER_FACTORIES[n]()
+            if n in FAAS_TOOL_SUBSET:
+                server.drop_tools(FAAS_TOOL_SUBSET[n])
+            servers[n] = server
+        return servers
+
+    mem = sum(max(SERVER_FACTORIES[n]().memory_mb, 128) for n in names)
+    fn = platform.deploy("mcp-monolith", factory, memory_mb=mem,
+                         image_mb=min(len(names) * 1536, 10 * 1024))
+    clients = {}
+    for n in names:
+        client = McpClient(FaaSTransport(platform, fn.url, server_name=n), n)
+        client.initialize()
+        clients[n] = client
+    return clients

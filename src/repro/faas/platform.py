@@ -1,0 +1,159 @@
+"""AWS-Lambda-like FaaS platform simulation (paper §4.2, Eq. 2).
+
+Models the parts that matter for the paper's measurements:
+  - Function URLs: HTTP -> event -> mcp-lambda-handler -> JSON-RPC.
+  - Containerized deployment (10 GB image limit), memory allocation per
+    function, 512 MB ephemeral /tmp per *container instance*.
+  - Cold starts: a new container instance boots when none is warm; warm
+    instances are reused within ``KEEP_WARM_S`` of virtual time.
+  - Billing: GB-seconds × $16.6667/1M (ap-south-1), per Eq. 2.
+  - DynamoDB-backed session_id statefulness across invocations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import uuid
+from typing import Callable, Dict, List, Optional
+
+from ..env.latency import COLD_START, FAAS_RTT
+from ..env.world import World
+from ..mcp.protocol import McpRequest, McpResponse
+from ..mcp.server import MCPServer, ToolContext
+from .storage import DynamoTable, EphemeralTmp, S3Store
+
+LAMBDA_GBS_USD = 16.6667 / 1e6          # $ per GB-second (Eq. 2)
+REQUEST_USD = 0.20 / 1e6                # $ per request
+KEEP_WARM_S = 900.0                      # container reuse window
+IMAGE_LIMIT_MB = 10 * 1024
+
+
+@dataclasses.dataclass
+class Invocation:
+    function: str
+    tool: str
+    duration_s: float
+    billed_gb_s: float
+    cost_usd: float
+    cold_start: bool
+    t_start: float
+
+
+@dataclasses.dataclass
+class _Container:
+    instance_id: str
+    tmp: EphemeralTmp
+    last_used: float
+
+
+class LambdaFunction:
+    def __init__(self, name: str, handler_factory: Callable[[], object],
+                 memory_mb: int, platform: "FaaSPlatform",
+                 image_mb: int = 1024):
+        if image_mb > IMAGE_LIMIT_MB:
+            raise ValueError(f"container image {image_mb} MB exceeds 10 GB limit")
+        self.name = name
+        self.memory_mb = memory_mb
+        self.platform = platform
+        self.handler_factory = handler_factory
+        self._containers: List[_Container] = []
+        self._handler = None
+        self.url = f"https://{uuid.uuid4().hex[:12]}.lambda-url.{platform.region}.on.aws/"
+
+    def _acquire_container(self) -> tuple[_Container, bool]:
+        now = self.platform.world.clock.now()
+        for c in self._containers:
+            if now - c.last_used < KEEP_WARM_S:
+                return c, False
+        c = _Container(uuid.uuid4().hex[:8], EphemeralTmp(512), now)
+        self._containers.append(c)
+        return c, True
+
+    def invoke(self, raw_request: str) -> str:
+        """HTTP Function-URL entry point: JSON body in, JSON body out."""
+        world = self.platform.world
+        clock = world.clock
+        t0 = clock.now()
+        container, cold = self._acquire_container()
+        if cold:
+            clock.sleep(world.latency.sample_spec(COLD_START))
+            self._handler = self.handler_factory()
+        req = McpRequest.from_json(raw_request)
+        ctx = ToolContext(world=world, workspace=container.tmp,
+                          s3=self.platform.s3, faas=True)
+        resp = self._dispatch(req, ctx)
+        # session persistence in DynamoDB
+        if resp.session_id:
+            self.platform.sessions.put(
+                resp.session_id, {"function": self.name,
+                                  "instance": container.instance_id})
+        if req.method == "session/delete" and req.session_id:
+            self.platform.sessions.delete(req.session_id)
+        container.last_used = clock.now()
+        duration = clock.now() - t0
+        billed = max(duration, 0.001) * self.memory_mb / 1024.0
+        cost = billed * LAMBDA_GBS_USD + REQUEST_USD
+        tool = (req.params or {}).get("name", req.method)
+        self.platform.invocations.append(Invocation(
+            self.name, tool, duration, billed, cost, cold, t0))
+        return resp.to_json()
+
+    def _dispatch(self, req: McpRequest, ctx: ToolContext) -> McpResponse:
+        handler = self._handler
+        if isinstance(handler, MCPServer):
+            return handler.handle(req, ctx)
+        # monolithic deployment: handler is a dict of servers, routed by
+        # the "server" param
+        server_name = req.params.get("server")
+        server = handler.get(server_name)
+        if server is None:
+            return McpResponse(req.id, error={
+                "code": -32602, "message": f"unknown server {server_name!r}"})
+        params = {k: v for k, v in req.params.items() if k != "server"}
+        inner = McpRequest(method=req.method, params=params, id=req.id,
+                           session_id=req.session_id)
+        return server.handle(inner, ctx)
+
+
+class FaaSPlatform:
+    """One AWS region with Lambda + S3 + DynamoDB."""
+
+    def __init__(self, world: World, region: str = "ap-south-1"):
+        self.world = world
+        self.region = region
+        self.functions: Dict[str, LambdaFunction] = {}
+        self.s3 = S3Store()
+        self.sessions = DynamoTable()
+        self.invocations: List[Invocation] = []
+
+    def deploy(self, name: str, handler_factory: Callable[[], object],
+               memory_mb: int, image_mb: int = 1024) -> LambdaFunction:
+        if name in self.functions:
+            # redeploy: update code, keep the Function URL (AWS semantics)
+            fn = self.functions[name]
+            fn.handler_factory = handler_factory
+            fn.memory_mb = memory_mb
+            return fn
+        fn = LambdaFunction(name, handler_factory, memory_mb, self, image_mb)
+        self.functions[name] = fn
+        return fn
+
+    def invoke_url(self, url: str, raw_request: str) -> str:
+        self.world.clock.sleep(self.world.latency.sample_spec(FAAS_RTT))
+        for fn in self.functions.values():
+            if fn.url == url:
+                return fn.invoke(raw_request)
+        raise KeyError(f"no function at {url}")
+
+    # -- accounting --------------------------------------------------------
+    def total_cost(self) -> float:
+        return sum(i.cost_usd for i in self.invocations)
+
+    def cost_by_function(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for i in self.invocations:
+            out[i.function] = out.get(i.function, 0.0) + i.cost_usd
+        return out
+
+    def reset_accounting(self):
+        self.invocations.clear()

@@ -1,0 +1,94 @@
+"""Storage substrates: local workspace / Lambda ephemeral /tmp / S3.
+
+All are in-memory KV stores with different lifecycles:
+  - LocalWorkspace: lives for a whole application run (the paper's local
+    filesystem).
+  - EphemeralTmp: per FaaS *container instance*; wiped on container
+    recycle — the reason the paper needs S3 + DynamoDB sessions.
+  - S3Store: global object store addressed by s3:// URIs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+
+class KVStore:
+    def __init__(self, capacity_mb: Optional[int] = None):
+        self._data: Dict[str, str] = {}
+        self.capacity_mb = capacity_mb
+
+    def write(self, path: str, content: str) -> None:
+        if self.capacity_mb is not None:
+            used = sum(len(v) for v in self._data.values()) + len(content)
+            if used > self.capacity_mb * 1024 * 1024:
+                raise IOError(f"storage full ({self.capacity_mb} MB)")
+        self._data[path] = content
+
+    def read(self, path: str) -> str:
+        if path not in self._data:
+            raise FileNotFoundError(path)
+        return self._data[path]
+
+    def exists(self, path: str) -> bool:
+        return path in self._data
+
+    def list(self, prefix: str = "") -> List[str]:
+        return sorted(p for p in self._data if p.startswith(prefix))
+
+    def delete(self, path: str) -> None:
+        self._data.pop(path, None)
+
+    def clear(self) -> None:
+        self._data.clear()
+
+
+class LocalWorkspace(KVStore):
+    pass
+
+
+class EphemeralTmp(KVStore):
+    def __init__(self, capacity_mb: int = 512):
+        super().__init__(capacity_mb)
+
+
+class S3Store(KVStore):
+    """Addressed by s3://bucket/key URIs."""
+
+    @staticmethod
+    def parse_uri(uri: str):
+        if not uri.startswith("s3://"):
+            raise ValueError(f"not an s3 uri: {uri!r}")
+        rest = uri[5:]
+        bucket, _, key = rest.partition("/")
+        return bucket, key
+
+    def put_object(self, uri: str, content: str):
+        self.parse_uri(uri)
+        self.write(uri, content)
+
+    def get_object(self, uri: str) -> str:
+        self.parse_uri(uri)
+        return self.read(uri)
+
+    def list_objects(self, prefix: str) -> List[str]:
+        return self.list(prefix)
+
+
+class DynamoTable:
+    """DynamoDB-like session table (paper §4.2 statefulness)."""
+
+    def __init__(self):
+        self._items: Dict[str, Dict] = {}
+
+    def put(self, key: str, item: Dict):
+        self._items[key] = dict(item)
+
+    def get(self, key: str) -> Optional[Dict]:
+        item = self._items.get(key)
+        return dict(item) if item is not None else None
+
+    def delete(self, key: str):
+        self._items.pop(key, None)
+
+    def count(self) -> int:
+        return len(self._items)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated via interpret=True on CPU).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper in
+ops.py, and a pure-jnp oracle in ref.py.
+"""
+from .ops import (flash_attention_op, decode_attention_op, ssd_scan_op,
+                  rmsnorm_op, default_interpret)
+from . import ref

@@ -1,0 +1,106 @@
+"""Single-token GQA decode attention against a long KV cache (TPU).
+
+The TPU analogue of GPU split-KV decode kernels: grid
+(batch*kv_heads, n_kv_blocks); the kv axis is minor/sequential, so the
+running (max, sum, acc) flash state lives in VMEM scratch. Each program
+attends the whole query-head *group* (``group`` rows — MXU-friendly since
+group × block_k matmuls map onto the systolic array) against one kv block.
+
+Valid-length masking comes from a scalar-prefetch operand so ragged batches
+(continuous batching) don't recompile.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, scale: float, block_k: int, n_kv_blocks: int,
+                kv_heads: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // kv_heads
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (group, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+
+    pl.when(k_start < length)(_compute)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, block_k: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, hd); k/v: (B, C, Hkv, hd); lengths: (B,) int32.
+    Returns (B, Hq, hd). Requires C % block_k == 0 (ops wrapper pads)."""
+    b, hq, hd = q.shape
+    c, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    n_k = c // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    # layout: (B*Hkv, group, hd) for q; (B*Hkv? ...) — index kv via maps
+    qg = q.reshape(b, hkv, group, hd).reshape(b * hkv, group, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, c, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, c, hd)
+
+    kernel = functools.partial(
+        _dec_kernel, scale=scale, block_k=block_k, n_kv_blocks=n_k,
+        kv_heads=hkv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, group, hd), lambda bh, ki, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, ki, lens: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, ki, lens: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, hd), lambda bh, ki, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kf, vf)
+    return out.reshape(b, hkv * group, hd)

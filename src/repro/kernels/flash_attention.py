@@ -1,0 +1,115 @@
+"""Blocked flash attention for TPU (prefill path).
+
+Grid: (batch*q_heads, n_q_blocks, n_kv_blocks) — the kv axis is minor and
+iterated sequentially on TPU, so the running (max, sum, acc) state lives in
+VMEM scratch and is finalized on the last kv step.
+
+GQA is handled in the BlockSpec index map: query-head ``bh`` reads kv head
+``bh // group`` — no KV replication in HBM.
+
+Block shapes are MXU-aligned (multiples of 128 on the lane dim; head_dim is
+padded by the ops wrapper if needed). Causal + sliding-window masking is
+applied from absolute block offsets; fully-masked kv blocks short-circuit.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int,
+               block_q: int, block_k: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s *= scale                                          # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+
+    if causal or window:
+        # skip kv blocks fully outside the (causal, window) band
+        q_last = q_start + block_q - 1
+        live = k_start <= q_last if causal else True
+        if window:
+            live = jnp.logical_and(live, k_start + block_k - 1 > q_start - window) \
+                if causal else (k_start + block_k - 1 > q_start - window)
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, S, hd) with BH = batch*q_heads; k/v: (BHkv, S, hd).
+    Requires S % block == 0 (ops wrapper pads)."""
+    bh, s, hd = q.shape
+    bhkv = k.shape[0]
+    group = bh // bhkv
+    n_q = s // block_q
+    n_k = s // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv_blocks=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki, g=group: (b // g, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki, g=group: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

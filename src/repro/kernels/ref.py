@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: each kernel test sweeps shapes/dtypes
+and asserts allclose against these functions.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd); GQA via head grouping.
+    Returns (B, S, Hq, hd)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, s, hkv, group, hd)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    q_pos = jnp.arange(s)[:, None]
+    kv_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, hq, hd)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array | int) -> jax.Array:
+    """Single-token decode. q: (B, Hq, hd); k/v: (B, C, Hkv, hd);
+    ``length``: number of valid cache rows (per batch or scalar).
+    Returns (B, Hq, hd)."""
+    b, hq, hd = q.shape
+    c, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    idx = jnp.arange(c)
+    length = jnp.asarray(length)
+    valid = idx[None] < (length[..., None] if length.ndim else length)
+    scores = jnp.where(valid[:, None, None] if length.ndim else valid[None, None, None],
+                       scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, v)
+    return out.reshape(b, hq, hd)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Naive O(S) SSD recurrence (the definitional semantics).
+
+    x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * A[None, :])
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

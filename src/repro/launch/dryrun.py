@@ -1,0 +1,234 @@
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers, compiles, and fits — without TPU hardware.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod] [--debug-mesh] [--out artifacts/]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Must be imported fresh per device-count (jax locks device count on first
+init) — hence the XLA_FLAGS lines below come before ANY other import.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCHS, INPUT_SHAPES, get_config            # noqa: E402
+from ..models.model import decode_step, prefill                  # noqa: E402
+from ..models.params import abstract_params                      # noqa: E402
+from ..models.sharding_ctx import activation_policy              # noqa: E402
+from ..training.optimizer import OptConfig, init_opt_state       # noqa: E402
+from ..training.train_loop import make_train_step                # noqa: E402
+from .mesh import make_debug_mesh, make_production_mesh          # noqa: E402
+from .sharding import (cache_shardings, effective_config,        # noqa: E402
+                       input_specs, make_activation_policy,
+                       param_shardings)
+
+# TPU v5e constants (roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "c64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|all-to-all|reduce-scatter|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes_from_hlo(hlo: str):
+    """Sum output bytes of every collective op in the (per-device) SPMD
+    module, bucketed by op kind."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        nbytes = size * _DTYPE_BYTES.get(dtype, 4)
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def build_step(cfg, shape, mesh, param_dtype=jnp.bfloat16,
+               variant="baseline"):
+    """Returns (jitted_fn, example_args, policy) for the step kind."""
+    from .variants import param_shardings_variant, policy_overrides_variant
+    params_abs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, param_dtype if x.dtype == jnp.float32
+            and x.ndim > 1 else x.dtype),
+        abstract_params(cfg, dtype=param_dtype))
+    p_sh = param_shardings_variant(params_abs, mesh, variant)
+    batch = input_specs(cfg, shape, param_dtype)
+    pol = make_activation_policy(
+        cfg, shape, mesh,
+        overrides=policy_overrides_variant(cfg, shape, mesh, variant))
+    dp = pol["tokens"]
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        o_sh = param_shardings_variant(opt_abs, mesh, variant)
+        opt_cfg = OptConfig()
+        step = make_train_step(cfg, opt_cfg)
+        batch_sh = {"tokens": ns(dp)}
+        if "frontend_embeds" in batch:
+            batch_sh["frontend_embeds"] = ns(P(dp[0], None, None))
+        fn = jax.jit(step,
+                     in_shardings=(p_sh, o_sh, batch_sh),
+                     out_shardings=(p_sh, o_sh, None))
+        args = (params_abs, opt_abs, batch)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, cache = prefill(params, cfg, batch["tokens"],
+                                    batch.get("frontend_embeds"))
+            return logits, cache
+        batch_sh = {"tokens": ns(dp)}
+        if "frontend_embeds" in batch:
+            batch_sh["frontend_embeds"] = ns(P(dp[0], None, None))
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, batch_sh))
+        args = (params_abs, batch)
+    else:   # decode
+        def serve_step(params, cache, token, pos):
+            return decode_step(params, cfg, cache, token, pos)
+        c_sh = cache_shardings(batch["cache"], cfg, shape, mesh)
+        # donate the cache: decode updates it in place (buffer aliasing),
+        # halving the cache's contribution to peak memory (§Perf)
+        fn = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, ns(P(dp[0], None)), ns(P())),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+        args = (params_abs, batch["cache"], batch["token"], batch["pos"])
+    return fn, args, pol
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               debug_mesh: bool = False, param_dtype=jnp.bfloat16,
+               policy_overrides=None, variant="baseline") -> dict:
+    cfg0 = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = effective_config(cfg0, shape)
+    mesh = (make_debug_mesh(multi_pod=multi_pod) if debug_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    n_chips = mesh.devices.size
+
+    t0 = time.time()
+    fn, args, pol = build_step(cfg, shape, mesh, param_dtype, variant=variant)
+    if policy_overrides:
+        pol = dict(pol, **policy_overrides)
+    with mesh:
+        with activation_policy(pol):
+            lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:   # CPU backend may not support it
+        mem_info = {"error": str(e)}
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    # roofline terms (per chip; the SPMD module is the per-device program)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    # useful-FLOPs ratio: 6·N_active·D vs total HLO flops across chips
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        model_flops = 6 * n_active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2 * n_active * shape.global_batch  # one token
+    ratio = model_flops / max(flops * n_chips, 1.0)
+
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod, "n_chips": n_chips,
+        "kind": shape.kind,
+        "sliding_window": cfg.sliding_window,
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_accessed,
+        "collective_bytes_per_chip": coll,
+        "roofline": terms, "dominant": dominant,
+        "model_flops": model_flops, "useful_flops_ratio": ratio,
+        "memory_analysis": mem_info,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--debug-mesh", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in INPUT_SHAPES:
+                combos.append((a, s, args.multi_pod))
+    else:
+        combos.append((args.arch, args.shape, args.multi_pod))
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape, mp in combos:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        print(f"=== dry-run {tag} ===", flush=True)
+        try:
+            res = dryrun_one(arch, shape, multi_pod=mp,
+                             debug_mesh=args.debug_mesh)
+        except Exception as e:
+            res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "error": f"{type(e).__name__}: {e}"}
+            print("FAILED:", res["error"], flush=True)
+        else:
+            print(json.dumps({k: res[k] for k in
+                              ("flops_per_chip", "bytes_per_chip",
+                               "dominant", "useful_flops_ratio",
+                               "compile_s")}, indent=None), flush=True)
+            print("memory:", res["memory_analysis"], flush=True)
+            print("collectives:", res["collective_bytes_per_chip"], flush=True)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

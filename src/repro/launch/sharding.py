@@ -1,0 +1,200 @@
+"""Sharding rules: parameter PartitionSpecs (2D FSDP × TP) + activation
+constraint policies + ShapeDtypeStruct input specs for every
+(architecture × input shape × mesh) combination.
+
+Scheme (DESIGN.md §5):
+  - global batch over ("pod","data") — pure DP across pods;
+  - "feature-in" matmul dims over "data" (FSDP-style weight sharding: the
+    all-gathers amortize against layer compute);
+  - "feature-out"/heads/experts/vocab over "model" (TP / expert parallel);
+  - decode KV caches: batch over data; heads over model when divisible,
+    otherwise the *sequence* axis shards over model and GSPMD turns the
+    softmax reductions into all-reduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from ..models.model import init_cache
+from ..models.params import abstract_params
+from ..training.optimizer import init_opt_state
+
+# ---------------------------------------------------------------------------
+# parameter rules: name -> spec for the TRAILING dims (leading layer-stack
+# dims are padded with None)
+
+_TRAILING_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("model", "data"),
+    "lm_head": ("data", "model"),
+    "final_norm": (None,),
+    "attn_norm": (None,), "mlp_norm": (None,),
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "w_gate": ("data", "model"), "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    "w_router": ("data", None),
+    "w_dq": ("data", "model"), "w_uq": ("data", "model"),
+    "w_dkv": ("data", "model"), "w_kpe": ("data", None),
+    "w_uk": ("data", "model"), "w_uv": ("data", "model"),
+    "w_in": ("data", "model"), "w_conv": (None, "model"),
+    "dt_bias": ("model",), "A_log": ("model",), "D": ("model",),
+    "w_out": ("model", "data"),
+    "m": None, "v": None, "step": None,   # containers, resolved recursively
+}
+
+_EXPERT_RULES = {   # leaves under an "experts" subtree: (E, d, ffe)-shaped
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_spec(path, leaf, mesh) -> P:
+    names = _path_names(path)
+    # optimizer state wraps params: strip the leading m/v
+    core = tuple(n for n in names if n not in ("m", "v"))
+    name = core[-1] if core else ""
+    if name == "step":
+        return P()
+    in_experts = "experts" in core
+    if in_experts and name in _EXPERT_RULES:
+        trailing = _EXPERT_RULES[name]
+    elif name == "norm":
+        trailing = ("model",) if "ssm" in core else (None,)
+    elif name in _TRAILING_RULES and _TRAILING_RULES[name] is not None:
+        trailing = _TRAILING_RULES[name]
+    else:
+        trailing = (None,) * leaf.ndim
+    ndim = leaf.ndim
+    lead = (None,) * (ndim - len(trailing))
+    spec = (lead + trailing)[:ndim]
+    # drop axes that don't exist in the mesh (single-axis debug meshes)
+    spec = tuple(s if (s is None or s in mesh.axis_names) else None
+                 for s in spec)
+    # never shard a dim its mesh axis doesn't divide evenly (pjit arg
+    # shardings must tile exactly; GSPMD-internal padding is fine for
+    # activations but not for argument shardings)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = tuple(
+        s if s is None or (leaf.shape[i] % sizes[s] == 0
+                           and leaf.shape[i] >= sizes[s]) else None
+        for i, s in enumerate(spec))
+    return P(*spec)
+
+
+def param_shardings(abstract, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        abstract)
+
+
+# ---------------------------------------------------------------------------
+# activation policy
+
+
+def make_activation_policy(cfg: ModelConfig, shape: InputShape, mesh,
+                           overrides: Optional[Dict[str, P]] = None
+                           ) -> Dict[str, P]:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in dp:
+        dp_size *= sizes[a]
+    batch_ax = dp if shape.global_batch >= dp_size else None
+    model = "model" if "model" in mesh.axis_names else None
+    kv_heads_divisible = (cfg.n_kv_heads and model
+                          and cfg.n_kv_heads % sizes.get("model", 1) == 0)
+    vocab_div = model and cfg.vocab_size % sizes.get("model", 1) == 0
+    pol = {
+        "tokens": P(batch_ax, None),
+        "activations": P(batch_ax, None, None),
+        "logits": P(batch_ax, None, model if vocab_div else None),
+        "ffn_hidden": P(batch_ax, None, model),
+        "attn_q": P(batch_ax, None, model, None),
+        "attn_kv": P(batch_ax, None, model, None) if kv_heads_divisible
+        else P(batch_ax, None, None, None),
+        "kv_cache": (P(batch_ax, None, model, None) if kv_heads_divisible
+                     else P(batch_ax, model, None, None)),
+        "mla_cache": P(batch_ax, model, None),
+        "moe_dispatch": P(model, None, None),
+        "moe_hidden": P(model, None, None),
+        "ssm_x": P(batch_ax, None, model, None),
+    }
+    if overrides:
+        pol.update(overrides)
+    return pol
+
+
+def cache_spec(path, leaf, cfg: ModelConfig, shape: InputShape, mesh) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    pol = make_activation_policy(cfg, shape, mesh)
+    dp = pol["tokens"][0]
+    model = "model" if "model" in mesh.axis_names else None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    kv_div = cfg.n_kv_heads and model and cfg.n_kv_heads % sizes.get("model", 1) == 0
+    lead = (None,) * (leaf.ndim - 4) if name in ("k", "v") else \
+        (None,) * (leaf.ndim - 3)
+    if name in ("k", "v"):       # (..., B, C, H, hd)
+        tail = (dp, None, model, None) if kv_div else (dp, model, None, None)
+        return P(*(lead + tail))
+    if name in ("ckv", "kpe"):   # (..., B, C, r)
+        return P(*((None,) * (leaf.ndim - 3) + (dp, model, None)))
+    if name == "conv":           # (..., B, k-1, ch)
+        return P(*((None,) * (leaf.ndim - 3) + (dp, None, model)))
+    if name == "ssd":            # (..., B, nh, hd, n)
+        return P(*((None,) * (leaf.ndim - 4) + (dp, model, None, None)))
+    return P(*((None,) * leaf.ndim))
+
+
+def cache_shardings(abstract_cache, cfg, shape, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf, cfg, shape, mesh)),
+        abstract_cache)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+
+
+def effective_config(cfg: ModelConfig, shape: InputShape,
+                     window: int = 8192) -> ModelConfig:
+    """long_500k requires sub-quadratic attention: SSM/hybrid run as-is;
+    attention archs get a sliding-window variant (DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm",):
+        if cfg.attention != "none" and cfg.sliding_window == 0:
+            return cfg.with_sliding_window(window)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                param_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for one step of the given kind."""
+    B, S = shape.global_batch, shape.seq_len
+    P_fe = cfg.frontend_positions if cfg.frontend else 0
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S - P_fe), tok)}
+        if P_fe:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, P_fe, cfg.d_model), param_dtype)
+        return batch
+    # decode: one new token against a cache of S
+    window = cfg.sliding_window
+    C = min(S, window) if window else S
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, C, dtype=param_dtype))
+    return {"token": jax.ShapeDtypeStruct((B, 1), tok),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "cache": cache}

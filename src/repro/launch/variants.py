@@ -1,0 +1,155 @@
+"""Sharding variants for the §Perf hillclimbs.
+
+Each variant transforms the baseline (paper-faithful 2D FSDP × TP) sharding
+into an alternative; the probe harness re-lowers and re-measures so every
+hypothesis→change→measure cycle is a one-line experiment.
+
+Variants:
+  baseline   — 2D FSDP×TP as in DESIGN.md §5.
+  zero1      — ZeRO-1: parameters replicated across "data" (TP-sharded
+               only); optimizer m/v shard their layer-stack dim across
+               "data". Trades +param memory for removing per-layer weight
+               all-gathers / activation all-reduces on the data axis.
+  decode_mp  — serving: weights TP-only (replicated over "data"); decode
+               batch stays on "data". Removes per-token weight collectives.
+  seq_data   — sequence/context parallelism: activations shard the
+               sequence dim over "data" as well (prefill).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import sharding as S
+
+
+def _strip_data(spec: P) -> P:
+    return P(*(None if s == "data" else s for s in spec))
+
+
+def param_shardings_variant(abstract, mesh, variant: str):
+    if variant in ("baseline", "seq_data"):
+        return S.param_shardings(abstract, mesh)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_all = 1
+    for a in ("data", "model"):
+        n_all *= sizes.get(a, 1)
+
+    def spec_fn(path, leaf):
+        spec = S.param_spec(path, leaf, mesh)
+        names = S._path_names(path)
+        if variant == "zero1":
+            spec = _strip_data(spec)
+            # optimizer state: shard the leading layer-stack dim over data
+            if names and names[0] in ("m", "v") and leaf.ndim >= 2 \
+                    and leaf.shape[0] % sizes.get("data", 1) == 0 \
+                    and leaf.shape[0] >= sizes.get("data", 1) \
+                    and spec[0] is None:
+                spec = P("data", *spec[1:])
+        elif variant == "decode_mp":
+            spec = _strip_data(spec)
+        elif variant == "dp_only":
+            # small models: no tensor parallelism at all — weights fully
+            # replicated, parallelism comes from batch ("data") × sequence
+            # ("model") on activations (see policy overrides).
+            spec = P(*((None,) * leaf.ndim))
+        elif variant == "moe_ep":
+            core = tuple(n for n in names if n not in ("m", "v"))
+            name = core[-1] if core else ""
+            if "experts" in core and leaf.ndim >= 3 \
+                    and leaf.shape[-3] % sizes.get("data", 1) == 0:
+                # clean expert parallelism: experts over "data", weights
+                # otherwise local so expert matmuls have NO collectives;
+                # optimizer state additionally shards over "model"
+                lead = (None,) * (leaf.ndim - 3)
+                if names and names[0] in ("m", "v"):
+                    spec = P(*(lead + ("data", None, "model")))
+                else:
+                    spec = P(*(lead + ("data", None, None)))
+            else:
+                # dense (MLA/shared/router) part: TP-only (strip data),
+                # ZeRO-style m/v sharding on the layer-stack dim
+                spec = _strip_data(spec)
+                if names and names[0] in ("m", "v") and leaf.ndim >= 2 \
+                        and leaf.shape[0] % sizes.get("data", 1) == 0 \
+                        and leaf.shape[0] >= sizes.get("data", 1) \
+                        and spec[0] is None:
+                    spec = P("data", *spec[1:])
+        elif variant == "moe_shardmap":
+            # inference EP via shard_map (repro.models.moe_shardmap):
+            # experts E over "model" ONLY (weights otherwise local);
+            # router replicated; dense part keeps baseline
+            core = tuple(n for n in names if n not in ("m", "v"))
+            name = core[-1] if core else ""
+            if "experts" in core and leaf.ndim >= 3:
+                lead = (None,) * (leaf.ndim - 3)
+                spec = P(*(lead + ("model", None, None)))
+            elif name == "w_router":
+                spec = P(*((None,) * leaf.ndim))
+        elif variant == "dense_zero1":
+            # deepseek iteration 5: the experts' FSDP sharding + gather
+            # dispatch is fine; the residual collective is the DENSE part's
+            # contraction-dim all-reduces -> replicate only the dense
+            # (MLA/router/shared/embed) params over "data", ZeRO-shard
+            # their m/v on the layer-stack dim.
+            core = tuple(n for n in names if n not in ("m", "v"))
+            if "experts" not in core:
+                spec = _strip_data(spec)
+                if names and names[0] in ("m", "v") and leaf.ndim >= 2 \
+                        and leaf.shape[0] % sizes.get("data", 1) == 0 \
+                        and leaf.shape[0] >= sizes.get("data", 1) \
+                        and spec[0] is None:
+                    spec = P("data", *spec[1:])
+        elif variant == "decode_2d":
+            # 2D OUTPUT-dim sharding: never shard a contraction dim (no
+            # per-token weight all-gathers); the trailing dim shards over
+            # ("data","model") jointly when divisible, else "model" only,
+            # else replicate. Activations in decode are tiny, so the
+            # resulting activation reshards are ~free.
+            core = tuple(n for n in names if n not in ("m", "v"))
+            name = core[-1] if core else ""
+            if name == "step" or leaf.ndim == 0:
+                return NamedSharding(mesh, P())
+            last = leaf.shape[-1]
+            if last % n_all == 0 and last >= n_all:
+                tail = (("data", "model"),)
+            elif last % sizes.get("model", 1) == 0 \
+                    and last >= sizes.get("model", 1):
+                tail = ("model",)
+            else:
+                tail = (None,)
+            spec = P(*((None,) * (leaf.ndim - 1) + tail))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(spec_fn, abstract)
+
+
+def policy_overrides_variant(cfg, shape, mesh, variant: str
+                             ) -> Optional[Dict[str, P]]:
+    if variant == "dp_only":
+        # batch over "data", sequence over "model"
+        return {"tokens": P("data", "model"),
+                "activations": P("data", "model", None),
+                "ssm_x": P("data", "model", None, None),
+                "logits": P("data", "model", None),
+                "ffn_hidden": P("data", "model", None)}
+    if variant == "moe_ep":
+        return {"moe_dispatch": P("data", "model", None),
+                "moe_hidden": P("data", "model", None)}
+    if variant == "seq_data":
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return {"activations": P(None, dp, None),
+                "ffn_hidden": P(None, dp, "model"),
+                "logits": P(None, dp, "model"
+                            if cfg.vocab_size % dict(zip(
+                                mesh.axis_names,
+                                mesh.devices.shape)).get("model", 1) == 0
+                            else None)}
+    return None
+
+
+VARIANTS = ("baseline", "zero1", "decode_mp", "decode_2d", "seq_data",
+            "dp_only", "moe_ep", "dense_zero1", "moe_shardmap")

@@ -1,0 +1,154 @@
+"""Agent-to-Agent (A2A) protocol layer — the paper's second future-work
+item (§2.3/§7: "we leave A2A as future work").
+
+Implements the A2A essentials: an ``AgentCard`` describing skills,
+security schemes and supported formats (used for discovery), an
+``A2AServer`` that exposes any pattern runner as a remote agent with a
+task lifecycle (submitted -> working -> completed/failed), and an
+``A2AClient`` for inter-agent delegation. ``examples/a2a_composition.py``
+shows AgentX delegating a whole sub-application to a remote agent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import uuid
+from typing import Any, Callable, Dict, List, Optional
+
+from ..env.world import World
+
+_task_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class AgentSkill:
+    id: str
+    name: str
+    description: str
+    input_modes: List[str] = dataclasses.field(
+        default_factory=lambda: ["text"])
+    output_modes: List[str] = dataclasses.field(
+        default_factory=lambda: ["text"])
+
+
+@dataclasses.dataclass
+class AgentCard:
+    name: str
+    description: str
+    url: str
+    skills: List[AgentSkill]
+    version: str = "0.1.0"
+    security_schemes: Dict[str, str] = dataclasses.field(
+        default_factory=lambda: {"bearer": "Bearer token"})
+    default_input_modes: List[str] = dataclasses.field(
+        default_factory=lambda: ["text"])
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {
+            "name": self.name, "description": self.description,
+            "url": self.url, "version": self.version,
+            "securitySchemes": self.security_schemes,
+            "defaultInputModes": self.default_input_modes,
+            "skills": [dataclasses.asdict(s) for s in self.skills],
+        }
+
+
+@dataclasses.dataclass
+class A2ATask:
+    task_id: str
+    skill_id: str
+    message: str
+    status: str = "submitted"       # submitted | working | completed | failed
+    artifacts: List[Dict] = dataclasses.field(default_factory=list)
+    history: List[Dict] = dataclasses.field(default_factory=list)
+
+
+class A2AServer:
+    """Hosts one agent behind the A2A task API."""
+
+    def __init__(self, card: AgentCard, world: World,
+                 handlers: Dict[str, Callable[[str], Dict]]):
+        """handlers: skill_id -> fn(message) -> {"text":..., "success":...}"""
+        self.card = card
+        self.world = world
+        self.handlers = handlers
+        self.tasks: Dict[str, A2ATask] = {}
+
+    # discovery
+    def agent_card(self) -> Dict[str, Any]:
+        return self.card.to_wire()
+
+    # task lifecycle
+    def send_task(self, skill_id: str, message: str) -> A2ATask:
+        task = A2ATask(task_id=uuid.uuid4().hex[:12], skill_id=skill_id,
+                       message=message)
+        self.tasks[task.task_id] = task
+        if skill_id not in self.handlers:
+            task.status = "failed"
+            task.history.append({"role": "agent",
+                                 "text": f"unknown skill {skill_id!r}"})
+            return task
+        task.status = "working"
+        task.history.append({"role": "user", "text": message})
+        try:
+            result = self.handlers[skill_id](message)
+        except Exception as e:   # remote agent crash -> failed task
+            task.status = "failed"
+            task.history.append({"role": "agent", "text": f"error: {e}"})
+            return task
+        task.status = "completed" if result.get("success", True) else "failed"
+        task.artifacts.append({"type": "text",
+                               "text": result.get("text", "")})
+        task.history.append({"role": "agent",
+                             "text": result.get("text", "")[:200]})
+        return task
+
+    def get_task(self, task_id: str) -> Optional[A2ATask]:
+        return self.tasks.get(task_id)
+
+
+class A2AClient:
+    def __init__(self, world: World):
+        self.world = world
+        self.known: Dict[str, A2AServer] = {}
+
+    def discover(self, server: A2AServer) -> AgentCard:
+        self.world.clock.sleep(0.05)          # card fetch
+        self.known[server.card.name] = server
+        return server.card
+
+    def delegate(self, agent_name: str, skill_id: str,
+                 message: str) -> A2ATask:
+        server = self.known.get(agent_name)
+        if server is None:
+            raise KeyError(f"unknown agent {agent_name!r}; discover first")
+        self.world.clock.sleep(0.08)          # task POST round trip
+        return server.send_task(skill_id, message)
+
+
+def expose_app_as_agent(world: World, app_name: str, pattern: str,
+                        deployment: str, url: str) -> A2AServer:
+    """Wrap a whole (app, pattern) pipeline as a remote A2A agent."""
+    from ..apps.apps import APPS
+    from ..apps.runner import run_app
+
+    app = APPS[app_name]
+    skill = AgentSkill(
+        id=app_name, name=app_name.replace("_", " "),
+        description=f"Executes the {app_name} workflow with the {pattern} "
+                    f"pattern over {deployment} MCP servers.")
+    card = AgentCard(
+        name=f"{pattern}-{app_name}-agent",
+        description=f"{pattern} agent for {app_name}", url=url,
+        skills=[skill])
+
+    def handler(message: str) -> Dict:
+        instance = next((k for k in app.instances if k in message.lower()),
+                        list(app.instances)[0])
+        result = run_app(app_name, instance, pattern, deployment, seed=0)
+        # bill the remote agent's virtual time on the caller's clock
+        world.clock.sleep(result.total_latency)
+        return {"text": result.artifact or "", "success": result.success}
+
+    return A2AServer(card, world, {app_name: handler})

@@ -1,0 +1,114 @@
+"""MCP client + transports.
+
+``McpClient`` is what agent frameworks hold; a ``Transport`` hides whether
+the server runs in-process (local deployment, Fig. 2a) or behind a FaaS
+Function URL (Fig. 2b/2c).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+from ..env.world import World
+from .protocol import (METHOD_CALL_TOOL, METHOD_DELETE, METHOD_INITIALIZE,
+                       METHOD_LIST_TOOLS, McpRequest, McpResponse, ToolSpec)
+from .server import MCPServer, ToolContext
+
+
+class Transport:
+    def send(self, req: McpRequest) -> McpResponse:
+        raise NotImplementedError
+
+
+class LocalTransport(Transport):
+    """In-process server on the agent workstation (paper Fig. 2a)."""
+
+    def __init__(self, server: MCPServer, world: World, workspace, s3=None):
+        self.server = server
+        self.world = world
+        self.workspace = workspace
+        self.s3 = s3
+
+    def send(self, req: McpRequest) -> McpResponse:
+        ctx = ToolContext(world=self.world, workspace=self.workspace,
+                          s3=self.s3, faas=False)
+        return self.server.handle(req, ctx)
+
+
+class FaaSTransport(Transport):
+    """HTTPS Function-URL transport (paper §4.2)."""
+
+    def __init__(self, platform, url: str, server_name: Optional[str] = None):
+        self.platform = platform
+        self.url = url
+        self.server_name = server_name   # set for monolithic deployments
+
+    def send(self, req: McpRequest) -> McpResponse:
+        if self.server_name is not None:
+            req = McpRequest(method=req.method,
+                             params=dict(req.params, server=self.server_name),
+                             id=req.id, session_id=req.session_id)
+        raw = self.platform.invoke_url(self.url, req.to_json())
+        return McpResponse.from_json(raw)
+
+
+@dataclasses.dataclass
+class ToolHandle:
+    """A tool as exposed to an agent: spec + the client that can call it."""
+    spec: ToolSpec
+    client: "McpClient"
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def describe(self) -> str:
+        return self.spec.describe()
+
+    def call(self, **args) -> str:
+        return self.client.call_tool(self.spec.name, args)
+
+
+class McpClient:
+    def __init__(self, transport: Transport, server_name: str):
+        self.transport = transport
+        self.server_name = server_name
+        self.session_id: Optional[str] = None
+        self.call_log: List[Dict[str, Any]] = []
+
+    def initialize(self) -> str:
+        resp = self.transport.send(McpRequest(METHOD_INITIALIZE, {}))
+        if not resp.ok:
+            raise RuntimeError(f"initialize failed: {resp.error}")
+        self.session_id = resp.session_id
+        return self.session_id or ""
+
+    def list_tools(self) -> List[ToolHandle]:
+        resp = self.transport.send(McpRequest(METHOD_LIST_TOOLS, {},
+                                              session_id=self.session_id))
+        if not resp.ok:
+            raise RuntimeError(f"tools/list failed: {resp.error}")
+        out = []
+        for t in resp.result["tools"]:
+            spec = ToolSpec(t["name"], t["description"], t["inputSchema"])
+            out.append(ToolHandle(spec, self))
+        return out
+
+    def call_tool(self, name: str, args: Dict[str, Any]) -> str:
+        req = McpRequest(METHOD_CALL_TOOL,
+                         {"name": name, "arguments": args},
+                         session_id=self.session_id)
+        resp = self.transport.send(req)
+        self.call_log.append({"tool": name, "args": args, "ok": resp.ok})
+        if not resp.ok:
+            return f"<tool-error server={self.server_name} tool={name}: " \
+                   f"{resp.error.get('message')}>"
+        content = resp.result.get("content", [])
+        return "".join(c.get("text", "") for c in content)
+
+    def close(self):
+        if self.session_id:
+            self.transport.send(McpRequest(METHOD_DELETE, {},
+                                           session_id=self.session_id))
+            self.session_id = None

@@ -1,0 +1,128 @@
+"""MCP protocol types: JSON-RPC 2.0 framing + tool/resource/prompt specs.
+
+Mirrors the Model Context Protocol wire format (initialize / tools/list /
+tools/call / resources/list / prompts/list / session lifecycle) closely
+enough that transports are interchangeable: in-process "local stdio" or the
+FaaS Function-URL HTTP bridge (``repro.faas``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from typing import Any, Callable, Dict, List, Optional
+
+JSONRPC = "2.0"
+_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class ToolSpec:
+    name: str
+    description: str
+    input_schema: Dict[str, Any]
+    fn: Optional[Callable] = None
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {"name": self.name, "description": self.description,
+                "inputSchema": self.input_schema}
+
+    def describe(self) -> str:
+        args = ", ".join(
+            f"{k}: {v.get('type', 'any')}"
+            for k, v in self.input_schema.get("properties", {}).items())
+        return f"{self.name}({args}): {self.description}"
+
+
+@dataclasses.dataclass
+class ResourceSpec:
+    uri: str
+    name: str
+    description: str
+    reader: Optional[Callable] = None
+
+    def to_wire(self):
+        return {"uri": self.uri, "name": self.name,
+                "description": self.description}
+
+
+@dataclasses.dataclass
+class PromptSpec:
+    name: str
+    description: str
+    template: str
+
+    def to_wire(self):
+        return {"name": self.name, "description": self.description}
+
+
+@dataclasses.dataclass
+class McpRequest:
+    method: str
+    params: Dict[str, Any]
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    session_id: Optional[str] = None
+
+    def to_json(self) -> str:
+        body = {"jsonrpc": JSONRPC, "id": self.id, "method": self.method,
+                "params": self.params}
+        if self.session_id:
+            body["params"] = dict(body["params"], _session_id=self.session_id)
+        return json.dumps(body)
+
+    @staticmethod
+    def from_json(raw: str) -> "McpRequest":
+        d = json.loads(raw)
+        params = dict(d.get("params") or {})
+        sid = params.pop("_session_id", None)
+        return McpRequest(method=d["method"], params=params,
+                          id=d.get("id", 0), session_id=sid)
+
+
+@dataclasses.dataclass
+class McpResponse:
+    id: int
+    result: Any = None
+    error: Optional[Dict[str, Any]] = None
+    session_id: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+    def to_json(self) -> str:
+        body: Dict[str, Any] = {"jsonrpc": JSONRPC, "id": self.id}
+        if self.error is not None:
+            body["error"] = self.error
+        else:
+            body["result"] = self.result
+        if self.session_id:
+            body["sessionId"] = self.session_id
+        return json.dumps(body)
+
+    @staticmethod
+    def from_json(raw: str) -> "McpResponse":
+        d = json.loads(raw)
+        return McpResponse(id=d.get("id", 0), result=d.get("result"),
+                           error=d.get("error"),
+                           session_id=d.get("sessionId"))
+
+
+class McpError(Exception):
+    def __init__(self, code: int, message: str):
+        super().__init__(message)
+        self.code = code
+        self.message = message
+
+    def to_wire(self):
+        return {"code": self.code, "message": self.message}
+
+
+METHOD_INITIALIZE = "initialize"
+METHOD_LIST_TOOLS = "tools/list"
+METHOD_CALL_TOOL = "tools/call"
+METHOD_LIST_RESOURCES = "resources/list"
+METHOD_READ_RESOURCE = "resources/read"
+METHOD_LIST_PROMPTS = "prompts/list"
+METHOD_GET_PROMPT = "prompts/get"
+METHOD_DELETE = "session/delete"

@@ -1,0 +1,129 @@
+"""MCP server runtime.
+
+An ``MCPServer`` hosts tools/resources/prompts and dispatches JSON-RPC
+requests. Servers are deployment-agnostic: the same instance can be mounted
+behind a LocalTransport (paper Fig. 2a) or packaged into a FaaS function
+(Fig. 2b/2c) — execution context (``ToolContext``) carries the differences
+(virtual clock, /tmp dir vs S3, session store).
+"""
+from __future__ import annotations
+
+import dataclasses
+import uuid
+from typing import Any, Callable, Dict, List, Optional
+
+from .protocol import (METHOD_CALL_TOOL, METHOD_DELETE, METHOD_INITIALIZE,
+                       METHOD_GET_PROMPT, METHOD_LIST_PROMPTS,
+                       METHOD_LIST_RESOURCES, METHOD_LIST_TOOLS,
+                       METHOD_READ_RESOURCE, McpError, McpRequest,
+                       McpResponse, PromptSpec, ResourceSpec, ToolSpec)
+
+
+@dataclasses.dataclass
+class ToolContext:
+    """Execution environment handed to each tool invocation."""
+    world: Any                      # repro.env.world.World
+    workspace: Any                  # filesystem-ish store (local dir or /tmp)
+    s3: Any = None                  # object store (FaaS deployments)
+    session: Optional[Dict] = None  # per-session state dict
+    faas: bool = False              # running inside a FaaS container?
+
+    def sleep_for(self, tool: str):
+        self.world.clock.sleep(self.world.latency.sample(tool, faas=self.faas))
+
+
+class MCPServer:
+    name: str = "server"
+    origin: str = "custom"          # custom | community | official
+    execution: str = "local"        # local | remote | local-remote
+    memory_mb: int = 512
+    storage_mb: int = 512
+
+    def __init__(self):
+        self.tools: Dict[str, ToolSpec] = {}
+        self.resources: List[ResourceSpec] = []
+        self.prompts: List[PromptSpec] = []
+        self._sessions: Dict[str, Dict] = {}
+        self.register()
+
+    # -- registration -----------------------------------------------------
+    def register(self):  # overridden by concrete servers
+        raise NotImplementedError
+
+    def tool(self, name: str, description: str,
+             params: Dict[str, Dict[str, Any]] | None = None):
+        schema = {"type": "object", "properties": params or {},
+                  "required": [k for k, v in (params or {}).items()
+                               if not v.get("optional")]}
+
+        def deco(fn: Callable):
+            self.tools[name] = ToolSpec(name, description, schema, fn)
+            return fn
+        return deco
+
+    def amend_description(self, tool: str, extra: str):
+        """Append a hint to a tool description (paper §5.2)."""
+        t = self.tools[tool]
+        self.tools[tool] = ToolSpec(t.name, t.description.rstrip() + " " + extra,
+                                    t.input_schema, t.fn)
+
+    def drop_tools(self, keep: List[str]):
+        """FaaS deployments host only the app-relevant subset (§5.2)."""
+        self.tools = {k: v for k, v in self.tools.items() if k in keep}
+
+    # -- dispatch ----------------------------------------------------------
+    def handle(self, req: McpRequest, ctx: ToolContext) -> McpResponse:
+        try:
+            if req.method == METHOD_INITIALIZE:
+                sid = str(uuid.uuid4())
+                self._sessions[sid] = {}
+                return McpResponse(req.id, {"protocolVersion": "2025-03-26",
+                                            "serverInfo": {"name": self.name}},
+                                   session_id=sid)
+            if req.method == METHOD_LIST_TOOLS:
+                return McpResponse(req.id, {"tools": [t.to_wire()
+                                                      for t in self.tools.values()]})
+            if req.method == METHOD_LIST_RESOURCES:
+                return McpResponse(req.id, {"resources": [r.to_wire()
+                                                          for r in self.resources]})
+            if req.method == METHOD_LIST_PROMPTS:
+                return McpResponse(req.id, {"prompts": [p.to_wire()
+                                                        for p in self.prompts]})
+            if req.method == METHOD_GET_PROMPT:
+                for p in self.prompts:
+                    if p.name == req.params.get("name"):
+                        return McpResponse(req.id, {"template": p.template})
+                raise McpError(-32602, f"unknown prompt {req.params.get('name')}")
+            if req.method == METHOD_DELETE:
+                self._sessions.pop(req.session_id, None)
+                return McpResponse(req.id, {"deleted": True})
+            if req.method == METHOD_CALL_TOOL:
+                return self._call_tool(req, ctx)
+            raise McpError(-32601, f"method not found: {req.method}")
+        except McpError as e:
+            return McpResponse(req.id, error=e.to_wire())
+        except Exception as e:  # tool bug -> JSON-RPC error, not crash
+            return McpResponse(req.id, error={"code": -32000,
+                                              "message": f"{type(e).__name__}: {e}"})
+
+    def _call_tool(self, req: McpRequest, ctx: ToolContext) -> McpResponse:
+        name = req.params.get("name")
+        args = req.params.get("arguments") or {}
+        spec = self.tools.get(name)
+        if spec is None:
+            raise McpError(-32602, f"unknown tool {name!r} on {self.name}")
+        session = self._sessions.setdefault(req.session_id or "default", {})
+        ctx = dataclasses.replace(ctx, session=session)
+        ctx.sleep_for(name)
+        result = spec.fn(ctx, **args)
+        return McpResponse(req.id,
+                           {"content": [{"type": "text",
+                                         "text": result if isinstance(result, str)
+                                         else __import__("json").dumps(result)}]},
+                           session_id=req.session_id)
+
+    # convenience for Table 1
+    def describe_row(self):
+        return {"server": self.name, "tools": len(self.tools),
+                "origin": self.origin, "execution": self.execution,
+                "memory_mb": self.memory_mb, "storage_mb": self.storage_mb}

@@ -1,0 +1,82 @@
+"""arXiv MCP server (community, remote): 8 tools per Table 1.
+
+Carries the paper's problematic default description for
+``load_article_to_context`` (§5.2) — the local deployment amends it with
+the "never use for research papers" hint.
+"""
+from __future__ import annotations
+
+import json
+
+from ..server import MCPServer, ToolContext
+
+
+class ArxivServer(MCPServer):
+    name = "arxiv"
+    origin = "community"
+    execution = "remote"
+    memory_mb = 256
+    storage_mb = 512
+
+    def register(self):
+        t = self.tool
+
+        @t("search_arxiv", "Search arXiv.org for papers matching a query; "
+           "returns ids, titles and abstracts.",
+           {"query": {"type": "string"}, "max_results":
+            {"type": "integer", "optional": True}})
+        def search_arxiv(ctx: ToolContext, query: str, max_results: int = 5):
+            hits = ctx.world.arxiv.search(query, max_results)
+            return json.dumps([{"id": p.arxiv_id, "title": p.title,
+                                "abstract": p.abstract[:300]} for p in hits])
+
+        @t("get_article_url", "Get the arXiv URL of an article.",
+           {"arxiv_id": {"type": "string"}})
+        def get_article_url(ctx, arxiv_id: str):
+            ctx.world.arxiv.get(arxiv_id)
+            return f"https://arxiv.org/abs/{arxiv_id}"
+
+        @t("download_article", "Download a paper PDF from arXiv to storage; "
+           "returns the saved file path or S3 URI.",
+           {"arxiv_id": {"type": "string"},
+            "dest": {"type": "string", "optional": True,
+                     "description": "target path or s3:// URI"}})
+        def download_article(ctx: ToolContext, arxiv_id: str, dest: str = ""):
+            paper = ctx.world.arxiv.get(arxiv_id)
+            ctx.sleep_for("download_article")
+            path = dest or f"/tmp/{arxiv_id}.pdf"
+            store = ctx.s3 if (path.startswith("s3://") and ctx.s3 is not None) \
+                else ctx.workspace
+            store.write(path, paper.full_text())
+            return json.dumps({"saved_to": path, "title": paper.title})
+
+        @t("load_article_to_context", "Load the article hosted on arXiv.org "
+           "into context as plain text.",
+           {"arxiv_id": {"type": "string"}})
+        def load_article_to_context(ctx, arxiv_id: str):
+            ctx.sleep_for("load_article")
+            return ctx.world.arxiv.get(arxiv_id).full_text()
+
+        @t("get_details", "Get metadata (authors, categories, dates) for an "
+           "arXiv article.", {"arxiv_id": {"type": "string"}})
+        def get_details(ctx, arxiv_id: str):
+            p = ctx.world.arxiv.get(arxiv_id)
+            return json.dumps({"id": p.arxiv_id, "title": p.title,
+                               "categories": ["cs.DC"],
+                               "published": "2025-01-01"})
+
+        @t("list_new_papers", "List newly announced papers in a category.",
+           {"category": {"type": "string"}})
+        def list_new_papers(ctx, category: str):
+            return json.dumps([p.title for p in ctx.world.arxiv.papers.values()])
+
+        @t("get_citations", "Get citation count / references of a paper.",
+           {"arxiv_id": {"type": "string"}})
+        def get_citations(ctx, arxiv_id: str):
+            ctx.world.arxiv.get(arxiv_id)
+            return json.dumps({"citations": 42})
+
+        @t("get_abstract", "Get only the abstract of an arXiv article.",
+           {"arxiv_id": {"type": "string"}})
+        def get_abstract(ctx, arxiv_id: str):
+            return ctx.world.arxiv.get(arxiv_id).abstract

@@ -1,0 +1,122 @@
+"""Code Execution MCP server (custom, local): 4 tools per Table 1.
+
+Executes real Python in a restricted namespace. A stub ``matplotlib.pyplot``
+records plotted series and ``savefig`` writes a synthetic PNG (header +
+JSON payload of the plotted data) to the workspace or S3 — letting the
+accuracy judge verify Data Accuracy / Data Quantity against the simulated
+market ground truth (paper §5.4.1).
+"""
+from __future__ import annotations
+
+import io
+import json
+import traceback
+import types
+from contextlib import redirect_stdout
+
+from ..server import MCPServer, ToolContext
+
+PREINSTALLED = ["matplotlib", "pandas", "numpy", "json", "math",
+                "statistics", "datetime"]
+
+
+def _make_pyplot(ctx: ToolContext):
+    plt = types.SimpleNamespace()
+    state = {"series": [], "title": "", "xlabel": "", "ylabel": "",
+             "legend": False, "grid": False}
+
+    def plot(*args, **kw):
+        if len(args) >= 2:
+            x, y = args[0], args[1]
+        else:
+            x, y = list(range(len(args[0]))), args[0]
+        state["series"].append({"label": kw.get("label", ""),
+                                "n": len(list(y)),
+                                "y": [float(v) for v in list(y)[:1000]]})
+
+    def savefig(path, **kw):
+        payload = "PNG\x00" + json.dumps(state)
+        store = ctx.s3 if (str(path).startswith("s3://") and ctx.s3 is not None) \
+            else ctx.workspace
+        store.write(str(path), payload)
+
+    plt.plot = plot
+    plt.savefig = savefig
+    plt.title = lambda s, **k: state.__setitem__("title", s)
+    plt.xlabel = lambda s, **k: state.__setitem__("xlabel", s)
+    plt.ylabel = lambda s, **k: state.__setitem__("ylabel", s)
+    plt.legend = lambda *a, **k: state.__setitem__("legend", True)
+    plt.grid = lambda *a, **k: state.__setitem__("grid", True)
+    plt.figure = lambda *a, **k: None
+    plt.tight_layout = lambda *a, **k: None
+    plt.show = lambda *a, **k: None
+    plt.close = lambda *a, **k: None
+    return plt, state
+
+
+class CodeExecutionServer(MCPServer):
+    name = "code-execution"
+    origin = "custom"
+    execution = "local"
+    memory_mb = 512
+    storage_mb = 512
+
+    def register(self):
+        t = self.tool
+
+        @t("execute_python", "Execute a Python script in a sandboxed "
+           "environment with matplotlib/pandas preinstalled; returns stdout "
+           "or the error traceback.",
+           {"code": {"type": "string", "description": "python source"}})
+        def execute_python(ctx: ToolContext, code: str):
+            import math as _math
+            import statistics as _stats
+            plt, plot_state = _make_pyplot(ctx)
+            mpl = types.SimpleNamespace(pyplot=plt)
+            modules = {"matplotlib": mpl, "matplotlib.pyplot": mpl,
+                       "json": json, "math": _math, "statistics": _stats}
+
+            def _sandbox_import(name, *a, **kw):
+                if name in modules:
+                    return modules[name.split(".")[0]]
+                raise ImportError(f"module {name!r} not preinstalled in sandbox")
+
+            builtin_src = (__builtins__ if isinstance(__builtins__, dict)
+                           else vars(__builtins__))
+            safe_builtins = {k: builtin_src.get(k)
+                             for k in ("len", "range", "min", "max", "sum",
+                                       "sorted", "enumerate", "zip", "map",
+                                       "filter", "list", "dict", "set",
+                                       "tuple", "str", "int", "float",
+                                       "round", "abs", "print", "Exception",
+                                       "ValueError", "KeyError")}
+            safe_builtins["__import__"] = _sandbox_import
+            ns = {"__builtins__": safe_builtins, "json": json, "math": _math,
+                  "statistics": _stats, "matplotlib": mpl, "plt": plt}
+            buf = io.StringIO()
+            try:
+                with redirect_stdout(buf):
+                    exec(compile(code, "<agent-code>", "exec"), ns)  # noqa: S102
+            except Exception:
+                tb = traceback.format_exc(limit=2)
+                return json.dumps({"status": "error", "stdout": buf.getvalue(),
+                                   "error": tb})
+            return json.dumps({"status": "ok", "stdout": buf.getvalue(),
+                               "plots": len(plot_state["series"])})
+
+        @t("list_packages", "List preinstalled Python packages.", {})
+        def list_packages(ctx):
+            return json.dumps(PREINSTALLED)
+
+        @t("check_syntax", "Check Python source for syntax errors without "
+           "executing it.", {"code": {"type": "string"}})
+        def check_syntax(ctx, code: str):
+            try:
+                compile(code, "<check>", "exec")
+                return json.dumps({"ok": True})
+            except SyntaxError as e:
+                return json.dumps({"ok": False, "error": str(e)})
+
+        @t("reset_environment", "Reset the execution environment state.", {})
+        def reset_environment(ctx):
+            return json.dumps({"reset": True})

@@ -1,0 +1,85 @@
+"""Fetch MCP server (official, remote): 9 tools per Table 1.
+
+Reproduces the paper's fetch semantics: 5000-char chunks with the
+``<error>Content truncated...</error>`` trailer that drives ReAct's repeated
+re-fetch behaviour (§6.2).
+"""
+from __future__ import annotations
+
+import json
+
+from ..server import MCPServer, ToolContext
+
+TRUNC = ("\n<error>Content truncated. Call the fetch tool with a "
+         "start_index of {next} to get more content.</error>")
+
+
+class FetchServer(MCPServer):
+    name = "fetch"
+    origin = "official"
+    execution = "remote"
+    memory_mb = 256
+    storage_mb = 512
+
+    def register(self):
+        t = self.tool
+
+        def _fetch(ctx, url, start_index=0, max_length=5000):
+            chunk, truncated = ctx.world.web.fetch(url, start_index, max_length)
+            if truncated:
+                chunk += TRUNC.format(next=start_index + max_length)
+            return chunk
+
+        @t("fetch", "Fetches a URL from the internet and optionally extracts "
+           "its contents as markdown.",
+           {"url": {"type": "string", "description": "URL to fetch"},
+            "max_length": {"type": "integer", "optional": True,
+                           "description": "max characters to return (default 5000)"},
+            "start_index": {"type": "integer", "optional": True,
+                            "description": "character offset to start from"}})
+        def fetch(ctx: ToolContext, url: str, max_length: int = 5000,
+                  start_index: int = 0):
+            return _fetch(ctx, url, start_index, max_length)
+
+        @t("fetch_html", "Fetch a URL and return raw HTML.",
+           {"url": {"type": "string"}})
+        def fetch_html(ctx, url: str):
+            body, _ = ctx.world.web.fetch(url, 0, 5000)
+            return f"<html><body>{body}</body></html>"
+
+        @t("fetch_markdown", "Fetch a URL and return markdown.",
+           {"url": {"type": "string"}})
+        def fetch_markdown(ctx, url: str):
+            return _fetch(ctx, url)
+
+        @t("fetch_txt", "Fetch a URL and return plain text.",
+           {"url": {"type": "string"}})
+        def fetch_txt(ctx, url: str):
+            return _fetch(ctx, url)
+
+        @t("fetch_json", "Fetch a URL and parse JSON.",
+           {"url": {"type": "string"}})
+        def fetch_json(ctx, url: str):
+            return json.dumps({"url": url, "ok": True})
+
+        @t("fetch_title", "Fetch only the page title.",
+           {"url": {"type": "string"}})
+        def fetch_title(ctx, url: str):
+            return ctx.world.web.pages[url].title
+
+        @t("fetch_links", "Fetch and list hyperlinks on the page.",
+           {"url": {"type": "string"}})
+        def fetch_links(ctx, url: str):
+            topic = url.split("/")[3] if url.count("/") > 3 else ""
+            return json.dumps({"links": ctx.world.web.by_topic.get(topic, [])[:5]})
+
+        @t("fetch_headers", "HEAD request: response headers only.",
+           {"url": {"type": "string"}})
+        def fetch_headers(ctx, url: str):
+            return json.dumps({"content-type": "text/html", "status": 200})
+
+        @t("fetch_batch", "Fetch several URLs (first chunk each).",
+           {"urls": {"type": "array"}})
+        def fetch_batch(ctx, urls):
+            return json.dumps({u: ctx.world.web.fetch(u, 0, 1000)[0]
+                               for u in urls})

@@ -1,0 +1,108 @@
+"""File System MCP server (official, local): 10 tools per Table 1.
+
+Not deployed on FaaS (Lambda lacks persistent local storage) — the custom
+S3 server is its FaaS analogue (§4.1).
+"""
+from __future__ import annotations
+
+import json
+
+from ..server import MCPServer, ToolContext
+
+
+class FileSystemServer(MCPServer):
+    name = "filesystem"
+    origin = "official"
+    execution = "local"
+    memory_mb = 0          # N/A in Table 1
+    storage_mb = 0
+
+    def register(self):
+        t = self.tool
+
+        @t("write_file", "Write text content to a file (creates or overwrites).",
+           {"path": {"type": "string"}, "content": {"type": "string"}})
+        def write_file(ctx: ToolContext, path: str, content: str):
+            ctx.workspace.write(path, content)
+            return json.dumps({"written": path, "bytes": len(content)})
+
+        @t("read_file", "Read the contents of a file.",
+           {"path": {"type": "string"}})
+        def read_file(ctx, path: str):
+            return ctx.workspace.read(path)
+
+        @t("append_file", "Append text to a file.",
+           {"path": {"type": "string"}, "content": {"type": "string"}})
+        def append_file(ctx, path: str, content: str):
+            old = ctx.workspace.read(path) if ctx.workspace.exists(path) else ""
+            ctx.workspace.write(path, old + content)
+            return json.dumps({"appended": path})
+
+        @t("list_directory", "List files under a directory prefix.",
+           {"path": {"type": "string", "optional": True}})
+        def list_directory(ctx, path: str = ""):
+            return json.dumps(ctx.workspace.list(path))
+
+        @t("file_exists", "Check whether a file exists.",
+           {"path": {"type": "string"}})
+        def file_exists(ctx, path: str):
+            return json.dumps({"exists": ctx.workspace.exists(path)})
+
+        @t("delete_file", "Delete a file.", {"path": {"type": "string"}})
+        def delete_file(ctx, path: str):
+            ctx.workspace.delete(path)
+            return json.dumps({"deleted": path})
+
+        @t("move_file", "Move/rename a file.",
+           {"src": {"type": "string"}, "dst": {"type": "string"}})
+        def move_file(ctx, src: str, dst: str):
+            ctx.workspace.write(dst, ctx.workspace.read(src))
+            ctx.workspace.delete(src)
+            return json.dumps({"moved": [src, dst]})
+
+        @t("copy_file", "Copy a file.",
+           {"src": {"type": "string"}, "dst": {"type": "string"}})
+        def copy_file(ctx, src: str, dst: str):
+            ctx.workspace.write(dst, ctx.workspace.read(src))
+            return json.dumps({"copied": [src, dst]})
+
+        @t("file_info", "Size and metadata of a file.",
+           {"path": {"type": "string"}})
+        def file_info(ctx, path: str):
+            content = ctx.workspace.read(path)
+            return json.dumps({"path": path, "bytes": len(content)})
+
+        @t("search_files", "Search file contents for a substring.",
+           {"pattern": {"type": "string"}})
+        def search_files(ctx, pattern: str):
+            hits = [p for p in ctx.workspace.list()
+                    if pattern in ctx.workspace.read(p)]
+            return json.dumps(hits)
+
+
+class S3Server(MCPServer):
+    """Custom S3 MCP server (Table 1): FaaS analogue of the filesystem."""
+    name = "s3"
+    origin = "custom"
+    execution = "local"
+    memory_mb = 128
+    storage_mb = 512
+
+    def register(self):
+        t = self.tool
+
+        @t("s3_write", "Write text content to an S3 object.",
+           {"uri": {"type": "string", "description": "s3://bucket/key"},
+            "content": {"type": "string"}})
+        def s3_write(ctx: ToolContext, uri: str, content: str):
+            ctx.s3.put_object(uri, content)
+            return json.dumps({"written": uri, "bytes": len(content)})
+
+        @t("s3_read", "Read an S3 object.", {"uri": {"type": "string"}})
+        def s3_read(ctx, uri: str):
+            return ctx.s3.get_object(uri)
+
+        @t("s3_list", "List S3 objects under a prefix.",
+           {"prefix": {"type": "string"}})
+        def s3_list(ctx, prefix: str):
+            return json.dumps(ctx.s3.list_objects(prefix))

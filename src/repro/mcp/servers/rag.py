@@ -1,0 +1,86 @@
+"""RAG MCP server (custom, local-remote): 1 tool per Table 1.
+
+Mirrors the paper's design (§5.3.3): documents are split into overlapping
+chunks, embedded via an "external embeddings API" (simulated latency; the
+embedding itself is deterministic feature hashing of word n-grams computed
+with numpy — a real, runnable embedding, just not a neural one), stored in
+an in-memory vector store inside the server, and queried by cosine
+similarity with a score threshold.
+
+The FaaS variant takes an ``s3_uri`` instead of a local path (§4.2).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+from typing import Dict, List
+
+import numpy as np
+
+from ..server import MCPServer, ToolContext
+
+EMBED_DIM = 256
+CHUNK_CHARS = 800
+OVERLAP = 160
+THRESHOLD = 0.04
+
+
+def embed(text: str) -> np.ndarray:
+    """Feature-hashed bag-of-ngrams embedding (deterministic, offline)."""
+    vec = np.zeros(EMBED_DIM, dtype=np.float64)
+    words = text.lower().split()
+    grams = words + [" ".join(words[i:i + 2]) for i in range(len(words) - 1)]
+    for g in grams:
+        h = int(hashlib.md5(g.encode()).hexdigest()[:8], 16)
+        vec[h % EMBED_DIM] += 1.0 if (h >> 8) % 2 else -1.0
+    norm = np.linalg.norm(vec)
+    return vec / norm if norm else vec
+
+
+def chunk_text(text: str) -> List[str]:
+    out, i = [], 0
+    while i < len(text):
+        out.append(text[i:i + CHUNK_CHARS])
+        i += CHUNK_CHARS - OVERLAP
+    return out
+
+
+class RagServer(MCPServer):
+    name = "rag"
+    origin = "custom"
+    execution = "local-remote"   # embeddings API remote, vector store local
+    memory_mb = 512
+    storage_mb = 512
+
+    def register(self):
+        @self.tool(
+            "document_retriever",
+            "Retrieves relevant text snippets from a PDF based on a query. "
+            "Input: path (str): path to the PDF file (local path, or an S3 "
+            "URI like s3://my-bucket/report.pdf in cloud deployments). "
+            "query (str): the query to search in the PDF file. Output: "
+            "snippets of text from the PDF relevant to the query, with "
+            "similarity metrics.",
+            {"path": {"type": "string"}, "query": {"type": "string"}})
+        def document_retriever(ctx: ToolContext, path: str, query: str):
+            store = ctx.s3 if (path.startswith("s3://") and ctx.s3 is not None) \
+                else ctx.workspace
+            text = store.read(path)     # raises FileNotFoundError -> RPC error
+            # vector store is cached per session per document
+            cache: Dict = ctx.session.setdefault("vector_store", {})
+            key = hashlib.md5((path + str(len(text))).encode()).hexdigest()
+            if key not in cache:
+                chunks = chunk_text(text)
+                # one "external embeddings API" call per chunk batch
+                ctx.world.clock.sleep(0.04 * len(chunks))
+                mat = np.stack([embed(c) for c in chunks])
+                cache[key] = (chunks, mat)
+            chunks, mat = cache[key]
+            qv = embed(query)
+            ctx.world.clock.sleep(0.08)   # query-embedding API call
+            scores = mat @ qv
+            order = np.argsort(-scores)[:4]
+            hits = [{"snippet": chunks[int(i)], "score": round(float(scores[i]), 4)}
+                    for i in order if scores[i] > THRESHOLD]
+            return json.dumps({"query": query, "results": hits})

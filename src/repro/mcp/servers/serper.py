@@ -1,0 +1,85 @@
+"""Serper MCP server (community, remote): web search via the Google Serper
+API — 13 tools per Table 1."""
+from __future__ import annotations
+
+import json
+
+from ..server import MCPServer, ToolContext
+
+
+class SerperServer(MCPServer):
+    name = "serper"
+    origin = "community"
+    execution = "remote"
+    memory_mb = 512
+    storage_mb = 512
+
+    def register(self):
+        t = self.tool
+
+        @t("google_search", "Search Google for a query and return organic "
+           "results with URLs and snippets.",
+           {"query": {"type": "string", "description": "search query"},
+            "num_results": {"type": "integer", "optional": True,
+                            "description": "number of results (default 8)"}})
+        def google_search(ctx: ToolContext, query: str, num_results: int = 8):
+            pages = ctx.world.web.search(query, num_results)
+            return json.dumps({"organic": [
+                {"title": p.title, "link": p.url, "snippet": p.snippet}
+                for p in pages]})
+
+        @t("news_search", "Search Google News.", {"query": {"type": "string"}})
+        def news_search(ctx, query: str):
+            pages = ctx.world.web.search(query, 5)
+            return json.dumps({"news": [{"title": p.title, "link": p.url}
+                                        for p in pages]})
+
+        @t("image_search", "Search Google Images.", {"query": {"type": "string"}})
+        def image_search(ctx, query: str):
+            return json.dumps({"images": []})
+
+        @t("video_search", "Search Google Videos.", {"query": {"type": "string"}})
+        def video_search(ctx, query: str):
+            return json.dumps({"videos": []})
+
+        @t("places_search", "Search Google Places.", {"query": {"type": "string"}})
+        def places_search(ctx, query: str):
+            return json.dumps({"places": []})
+
+        @t("maps_search", "Search Google Maps.", {"query": {"type": "string"}})
+        def maps_search(ctx, query: str):
+            return json.dumps({"maps": []})
+
+        @t("reviews_search", "Search Google Reviews.", {"query": {"type": "string"}})
+        def reviews_search(ctx, query: str):
+            return json.dumps({"reviews": []})
+
+        @t("shopping_search", "Search Google Shopping.", {"query": {"type": "string"}})
+        def shopping_search(ctx, query: str):
+            return json.dumps({"shopping": []})
+
+        @t("scholar_search", "Search Google Scholar.", {"query": {"type": "string"}})
+        def scholar_search(ctx, query: str):
+            pages = ctx.world.web.search(query, 3)
+            return json.dumps({"scholar": [{"title": p.title} for p in pages]})
+
+        @t("autocomplete", "Google query autocomplete suggestions.",
+           {"query": {"type": "string"}})
+        def autocomplete(ctx, query: str):
+            return json.dumps({"suggestions": [query + " 2025", query + " review"]})
+
+        @t("webpage_scrape", "Scrape a webpage via Serper scraping endpoint.",
+           {"url": {"type": "string"}})
+        def webpage_scrape(ctx, url: str):
+            chunk, _ = ctx.world.web.fetch(url, 0, 3000)
+            return chunk
+
+        @t("trends_search", "Google Trends interest over time.",
+           {"query": {"type": "string"}})
+        def trends_search(ctx, query: str):
+            return json.dumps({"trend": [50 + (hash(query + str(i)) % 40)
+                                         for i in range(12)]})
+
+        @t("patents_search", "Search Google Patents.", {"query": {"type": "string"}})
+        def patents_search(ctx, query: str):
+            return json.dumps({"patents": []})

@@ -1,0 +1,64 @@
+"""YFinance MCP server (community, remote): 17 tools per Table 1."""
+from __future__ import annotations
+
+import json
+
+from ..server import MCPServer, ToolContext
+
+
+class YFinanceServer(MCPServer):
+    name = "yfinance"
+    origin = "community"
+    execution = "remote"
+    memory_mb = 128
+    storage_mb = 512
+
+    def register(self):
+        t = self.tool
+
+        @t("get_stock_history", "Get historical daily closing prices for a "
+           "ticker over a period.",
+           {"ticker": {"type": "string", "description": "ticker or company name"},
+            "days": {"type": "integer", "optional": True,
+                     "description": "lookback window in days (default 250)"}})
+        def get_stock_history(ctx: ToolContext, ticker: str, days: int = 250):
+            return json.dumps(ctx.world.stocks.history(ticker, days))
+
+        @t("get_quote", "Latest quote for a ticker.", {"ticker": {"type": "string"}})
+        def get_quote(ctx, ticker: str):
+            h = ctx.world.stocks.history(ticker, 1)
+            return json.dumps({"ticker": h["ticker"], "price": h["close"][-1]})
+
+        simple = [
+            ("get_dividends", "Dividend history."),
+            ("get_splits", "Stock split history."),
+            ("get_earnings", "Earnings reports."),
+            ("get_balance_sheet", "Balance sheet."),
+            ("get_income_statement", "Income statement."),
+            ("get_cash_flow", "Cash-flow statement."),
+            ("get_recommendations", "Analyst recommendations."),
+            ("get_institutional_holders", "Institutional holders."),
+            ("get_major_holders", "Major holders."),
+            ("get_news", "Recent news for a ticker."),
+            ("get_options_chain", "Options chain."),
+            ("get_sector_info", "Sector and industry info."),
+            ("get_market_cap", "Market capitalization."),
+            ("get_analyst_targets", "Analyst price targets."),
+        ]
+        for name, desc in simple:
+            def make(n):
+                def fn(ctx, ticker: str):
+                    tic = ctx.world.stocks.resolve(ticker)
+                    return json.dumps({"ticker": tic, n.removeprefix("get_"): []})
+                return fn
+            t(name, desc, {"ticker": {"type": "string"}})(make(name))
+
+        @t("compare_tickers", "Compare summary statistics of multiple tickers.",
+           {"tickers": {"type": "array", "description": "list of tickers"}})
+        def compare_tickers(ctx, tickers):
+            out = {}
+            for tk in tickers:
+                h = ctx.world.stocks.history(tk, 30)
+                out[h["ticker"]] = {"last": h["close"][-1],
+                                    "mean30": round(sum(h["close"]) / 30, 2)}
+            return json.dumps(out)

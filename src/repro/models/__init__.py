@@ -1,0 +1,2 @@
+from .model import forward, loss_fn, prefill, decode_step, init_cache
+from .params import init_params, abstract_params, param_count

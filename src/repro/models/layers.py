@@ -1,0 +1,284 @@
+"""Core transformer layers: RMSNorm, RoPE, MLPs, GQA and MLA attention.
+
+Pure-function style: every layer is ``f(params: dict, x, ...) -> y``.
+Parameter dictionaries are created in ``repro.models.params``.
+
+Decode variants operate on an explicit KV cache and one new token per
+sequence. Caches are plain dicts of arrays so they shard/scan cleanly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .sharding_ctx import constrain
+
+# ---------------------------------------------------------------------------
+# Norms & MLP
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def mlp(params: dict, x: jax.Array, mlp_type: str = "swiglu") -> jax.Array:
+    if mlp_type == "swiglu":
+        gate = x @ params["w_gate"]
+        up = x @ params["w_up"]
+        h = jax.nn.silu(gate) * up
+    else:  # gelu, 2-matrix
+        h = jax.nn.gelu(x @ params["w_up"])
+    h = constrain(h, "ffn_hidden")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset: int = 0,
+                window: int = 0) -> jax.Array:
+    """Boolean (q_len, kv_len) mask. True = attend."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    mask = kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full-sequence / prefill)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array]) -> jax.Array:
+    """q: (B,S,Hq,hd) k/v: (B,T,Hkv,hd) with Hq % Hkv == 0."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    q = q.reshape(b, s, hkv, group, hd)
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, hq * hd)
+
+
+def gqa_attention(params: dict, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, window: int = 0) -> jax.Array:
+    """Full-sequence (training / prefill) GQA attention."""
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_kv")
+    mask = causal_mask(s, s, window=window)
+    out = _sdpa(q, k, v, mask)
+    return out @ params["wo"]
+
+
+def gqa_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array, window: int = 0
+                ) -> Tuple[jax.Array, dict]:
+    """Prefill: same as full attention but also returns the KV cache."""
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    mask = causal_mask(s, s, window=window)
+    out = _sdpa(q, k, v, mask)
+    cache = {"k": k, "v": v}
+    return out @ params["wo"], cache
+
+
+def gqa_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
+               pos: jax.Array, window: int = 0) -> Tuple[jax.Array, dict]:
+    """One-token decode against a cache.
+
+    x: (B, 1, d). cache: {"k","v"}: (B, C, Hkv, hd) where C is either the
+    full context length or the sliding window size (ring buffer).
+    pos: scalar int32 — absolute position of the new token.
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    cache_len = cache["k"].shape[1]
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    slot = jnp.where(window > 0, pos % cache_len, jnp.minimum(pos, cache_len - 1))
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    ck = constrain(ck, "kv_cache")
+    cv = constrain(cv, "kv_cache")
+    # validity: ring slots written so far
+    idx = jnp.arange(cache_len)
+    if window > 0:
+        valid = idx <= jnp.minimum(pos, cache_len - 1)  # ring fully valid once warm
+    else:
+        valid = idx <= pos
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    group = hq // hkv
+    qh = q.reshape(b, hkv, group, cfg.head_dim)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qh, ck).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(cfg.head_dim)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, cv).reshape(b, 1, hq * cfg.head_dim)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): low-rank KV compression; cache holds the
+# compressed c_kv (kv_lora_rank) + shared rope key (qk_rope_dim) per token.
+
+
+def _mla_qkv(params: dict, x: jax.Array, cfg: ModelConfig,
+             positions: jax.Array):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = x @ params["w_dq"]                                  # (b,s,q_lora)
+    q = (cq @ params["w_uq"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ params["w_dkv"]                                # (b,s,kv_lora)
+    k_pe = (x @ params["w_kpe"]).reshape(b, s, 1, m.qk_rope_dim)
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, k_pe
+
+
+def _mla_attend(params: dict, q_nope, q_rope, ckv, k_pe, cfg: ModelConfig,
+                mask: Optional[jax.Array]):
+    """Attention over the *compressed* cache (weight-absorbed form).
+
+    q_nope: (b,s,h,dn)  q_rope: (b,s,h,dr)
+    ckv: (b,t,r)        k_pe: (b,t,1,dr)
+    """
+    m = cfg.mla
+    h = cfg.n_heads
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    # absorb W_uk into q: q_lat (b,s,h,r)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+    scores += jnp.einsum("bshd,btod->bhst", q_rope, k_pe)
+    scores = scores.astype(jnp.float32) / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv)          # (b,s,h,r)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)           # (b,s,h,dv)
+    b, s = out.shape[:2]
+    return out.reshape(b, s, h * m.v_head_dim) @ params["wo"]
+
+
+def mla_attention(params: dict, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, window: int = 0) -> jax.Array:
+    """Training/prefill MLA: NON-absorbed form — decompress c_kv into
+    per-head k/v once per token (cost T·r·h·(dn+dv)), then attend at
+    (dn+dr)-wide scores. The absorbed form (_mla_attend) pays r-wide
+    (512) scores per pair: ~2.6x more attention FLOPs at S=4k (§Perf
+    iteration 4); it only wins at decode, where re-decompressing the whole
+    cache per token would dominate."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, ckv, k_pe = _mla_qkv(params, x, cfg, positions)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    k_nope = jnp.einsum("btr,rhd->bthd", ckv, w_uk)
+    v = jnp.einsum("btr,rhd->bthd", ckv, w_uv)
+    scores = jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+    scores += jnp.einsum("bshd,btod->bhst", q_rope, k_pe)
+    scores = scores.astype(jnp.float32) / math.sqrt(
+        m.qk_nope_dim + m.qk_rope_dim)
+    mask = causal_mask(s, s, window=window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out.reshape(b, s, h * m.v_head_dim) @ params["wo"]
+
+
+def mla_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array, window: int = 0):
+    q_nope, q_rope, ckv, k_pe = _mla_qkv(params, x, cfg, positions)
+    s = x.shape[1]
+    mask = causal_mask(s, s, window=window)
+    out = _mla_attend(params, q_nope, q_rope, ckv, k_pe, cfg, mask)
+    return out, {"ckv": ckv, "kpe": k_pe[:, :, 0, :]}
+
+
+def mla_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
+               pos: jax.Array, window: int = 0):
+    """cache: {"ckv": (B,C,r), "kpe": (B,C,dr)}."""
+    b = x.shape[0]
+    cache_len = cache["ckv"].shape[1]
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope, ckv_new, k_pe_new = _mla_qkv(params, x, cfg, posv)
+    slot = jnp.where(window > 0, pos % cache_len, jnp.minimum(pos, cache_len - 1))
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, slot, 0))
+    kpe = jax.lax.dynamic_update_slice(cache["kpe"], k_pe_new[:, :, 0, :], (0, slot, 0))
+    ckv = constrain(ckv, "mla_cache")
+    idx = jnp.arange(cache_len)
+    valid = idx <= (jnp.minimum(pos, cache_len - 1) if window == 0 else pos)
+    if window > 0:
+        valid = idx <= jnp.minimum(pos, cache_len - 1)
+    mask = valid[None, :]                                     # (s=1, C)
+    out = _mla_attend(params, q_nope, q_rope, ckv, kpe[:, :, None, :], cfg, mask)
+    return out, {"ckv": ckv, "kpe": kpe}

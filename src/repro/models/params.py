@@ -1,0 +1,182 @@
+"""Parameter construction for every architecture family.
+
+Layout: a nested dict whose layer-stacked leaves carry a leading
+``n_layers``-like dim so the model can ``lax.scan`` over layers (one
+compiled layer body — essential for the 80-compile dry-run sweep).
+
+Families:
+  dense/moe/vlm/audio -> {"embed", "layers": {...stacked L...}, "final_norm",
+                          "lm_head"?}
+  ssm                 -> {"embed", "layers": {...stacked L...}, "final_norm"}
+  hybrid (zamba2)     -> {"embed", "groups": {...stacked (G, per, ...)...},
+                          "rem": {...stacked (R, ...)...},
+                          "shared_attn": {... single copy ...},
+                          "final_norm", "lm_head"}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(cfg: ModelConfig, key, dtype, stack=()) -> Params:
+    d = cfg.d_model
+    ks = _split(key, 10)
+    if cfg.attention == "mla":
+        m = cfg.mla
+        h = cfg.n_heads
+        return {
+            "w_dq": _dense_init(ks[0], (*stack, d, m.q_lora_rank), dtype),
+            "w_uq": _dense_init(ks[1], (*stack, m.q_lora_rank,
+                                        h * (m.qk_nope_dim + m.qk_rope_dim)), dtype),
+            "w_dkv": _dense_init(ks[2], (*stack, d, m.kv_lora_rank), dtype),
+            "w_kpe": _dense_init(ks[3], (*stack, d, m.qk_rope_dim), dtype),
+            "w_uk": _dense_init(ks[4], (*stack, m.kv_lora_rank, h * m.qk_nope_dim), dtype),
+            "w_uv": _dense_init(ks[5], (*stack, m.kv_lora_rank, h * m.v_head_dim), dtype),
+            "wo": _dense_init(ks[6], (*stack, h * m.v_head_dim, d), dtype),
+        }
+    p = {
+        "wq": _dense_init(ks[0], (*stack, d, cfg.q_dim), dtype),
+        "wk": _dense_init(ks[1], (*stack, d, cfg.kv_dim), dtype),
+        "wv": _dense_init(ks[2], (*stack, d, cfg.kv_dim), dtype),
+        "wo": _dense_init(ks[3], (*stack, cfg.q_dim, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((*stack, cfg.q_dim), dtype)
+        p["bk"] = jnp.zeros((*stack, cfg.kv_dim), dtype)
+        p["bv"] = jnp.zeros((*stack, cfg.kv_dim), dtype)
+    return p
+
+
+def _mlp_params(cfg: ModelConfig, key, dtype, stack=(), d_ff=None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = _split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": _dense_init(ks[0], (*stack, d, ff), dtype),
+            "w_up": _dense_init(ks[1], (*stack, d, ff), dtype),
+            "w_down": _dense_init(ks[2], (*stack, ff, d), dtype),
+        }
+    return {
+        "w_up": _dense_init(ks[1], (*stack, d, ff), dtype),
+        "w_down": _dense_init(ks[2], (*stack, ff, d), dtype),
+    }
+
+
+def _moe_params(cfg: ModelConfig, key, dtype, stack=()) -> Params:
+    moe = cfg.moe
+    d, ffe, E = cfg.d_model, moe.d_ff_expert, moe.n_experts
+    ks = _split(key, 5)
+    p = {
+        "w_router": _dense_init(ks[0], (*stack, d, E), jnp.float32),
+        "experts": {
+            "w_gate": _dense_init(ks[1], (*stack, E, d, ffe), dtype),
+            "w_up": _dense_init(ks[2], (*stack, E, d, ffe), dtype),
+            "w_down": _dense_init(ks[3], (*stack, E, ffe, d), dtype),
+        },
+    }
+    if moe.n_shared:
+        ff_sh = moe.n_shared * ffe
+        sk = _split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _dense_init(sk[0], (*stack, d, ff_sh), dtype),
+            "w_up": _dense_init(sk[1], (*stack, d, ff_sh), dtype),
+            "w_down": _dense_init(sk[2], (*stack, ff_sh, d), dtype),
+        }
+    return p
+
+
+def _ssm_params(cfg: ModelConfig, key, dtype, stack=()) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.d_state
+    proj = 2 * di + 2 * s.d_state + nh
+    ks = _split(key, 4)
+    return {
+        "w_in": _dense_init(ks[0], (*stack, d, proj), dtype),
+        "w_conv": _dense_init(ks[1], (*stack, s.conv_width, conv_ch), dtype, scale=0.5),
+        "dt_bias": jnp.zeros((*stack, nh), dtype),
+        "A_log": jnp.zeros((*stack, nh), jnp.float32),
+        "D": jnp.ones((*stack, nh), dtype),
+        "norm": jnp.ones((*stack, di), dtype),
+        "w_out": _dense_init(ks[2], (*stack, di, d), dtype),
+    }
+
+
+def _attn_layer(cfg: ModelConfig, key, dtype, stack=()) -> Params:
+    ks = _split(key, 3)
+    d = cfg.d_model
+    layer = {
+        "attn_norm": jnp.ones((*stack, d), dtype),
+        "mlp_norm": jnp.ones((*stack, d), dtype),
+        "attn": _attn_params(cfg, ks[0], dtype, stack),
+    }
+    if cfg.is_moe:
+        layer["moe"] = _moe_params(cfg, ks[1], dtype, stack)
+    else:
+        layer["mlp"] = _mlp_params(cfg, ks[1], dtype, stack)
+    return layer
+
+
+def _ssm_layer(cfg: ModelConfig, key, dtype, stack=()) -> Params:
+    return {
+        "norm": jnp.ones((*stack, cfg.d_model), dtype),
+        "ssm": _ssm_params(cfg, key, dtype, stack),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.float32) -> Params:
+    ks = _split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_size
+    params: Params = {
+        "embed": _dense_init(ks[0], (V, d), dtype, scale=0.02),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(ks[1], (d, V), dtype)
+
+    if cfg.arch_type == "hybrid":
+        G = cfg.n_layers // cfg.hybrid_attn_every
+        per = cfg.hybrid_attn_every - 1
+        R = cfg.n_layers - G * cfg.hybrid_attn_every
+        params["groups"] = _ssm_layer(cfg, ks[2], dtype, stack=(G, per))
+        if R:
+            params["rem"] = _ssm_layer(cfg, ks[3], dtype, stack=(R,))
+        shared = _attn_layer(cfg, ks[4], dtype, stack=())
+        params["shared_attn"] = shared
+    elif cfg.arch_type == "ssm":
+        params["layers"] = _ssm_layer(cfg, ks[2], dtype, stack=(cfg.n_layers,))
+    else:
+        params["layers"] = _attn_layer(cfg, ks[2], dtype, stack=(cfg.n_layers,))
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,40 @@
+"""Activation-sharding constraint context.
+
+Model code calls ``constrain(x, "tokens")`` etc.; outside a mesh context this
+is a no-op, inside ``repro.launch`` wrappers it applies
+``with_sharding_constraint`` with the active policy's PartitionSpec. This
+keeps model code mesh-agnostic while letting the launcher steer GSPMD.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _policy() -> Optional[Dict[str, jax.sharding.PartitionSpec]]:
+    return getattr(_state, "policy", None)
+
+
+@contextlib.contextmanager
+def activation_policy(policy: Dict[str, jax.sharding.PartitionSpec]):
+    prev = _policy()
+    _state.policy = policy
+    try:
+        yield
+    finally:
+        _state.policy = prev
+
+
+def constrain(x, name: str):
+    pol = _policy()
+    if pol is None or name not in pol:
+        return x
+    spec = pol[name]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,208 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Implements:
+  - ``ssd_chunked``: the chunked SSD forward used for training / prefill —
+    intra-chunk quadratic (attention-like) term + inter-chunk state
+    recurrence carried with ``lax.scan`` over chunks. This is the pure-jnp
+    oracle path; the Pallas TPU kernel in ``repro.kernels.ssd_scan`` mirrors
+    it block-for-block.
+  - ``ssd_decode_step``: O(1)-per-token recurrent update used for decode.
+  - ``mamba2_block``: full block (in_proj -> causal conv -> SSD -> gated
+    norm -> out_proj) with prefill/decode state handling.
+
+Single B/C group (ngroups=1), scalar A per head — the Mamba2 default.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from .layers import rms_norm
+from .sharding_ctx import constrain
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., l, s] = sum_{i=s+1..l} a[..., i] (l>=s).
+
+    a: (..., cs). Returns (..., cs, cs) with -inf above the diagonal.
+    """
+    cs = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)                                  # (..., cs)
+    diff = cum[..., :, None] - cum[..., None, :]                  # l, s
+    mask = jnp.tril(jnp.ones((cs, cs), dtype=bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  (b, s, h, p)   inputs per head
+    dt: (b, s, h)      positive step sizes (already softplus'd)
+    A:  (h,)           negative per-head decay rates
+    B:  (b, s, n)      input projection (shared across heads, ngroups=1)
+    C:  (b, s, n)      output projection
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s_orig, h, p = x.shape
+    n = B.shape[-1]
+    # pad to a chunk multiple; dt=0 padding is exactly state-neutral
+    # (decay exp(0)=1, input x*dt=0), so states and outputs are unaffected.
+    pad = (-s_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc, cs = s // chunk, chunk
+
+    a = dt * A[None, None, :]                                     # (b,s,h) log-decay
+    xb = x * dt[..., None]                                        # discretized input
+    # chunk views
+    ac = a.reshape(b, nc, cs, h)
+    xc = xb.reshape(b, nc, cs, h, p)
+    Bc = B.reshape(b, nc, cs, n)
+    Cc = C.reshape(b, nc, cs, n)
+
+    # 1) intra-chunk (quadratic) term
+    L = jnp.exp(_segsum(jnp.moveaxis(ac, -1, -2)))                # (b,nc,h,cs,cs)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)                # (b,nc,cs,cs)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp", scores, L, xc)
+
+    # 2) per-chunk final states
+    a_cum = jnp.cumsum(ac, axis=2)                                # (b,nc,cs,h)
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)           # (b,nc,cs,h)
+    S = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_to_end, xc)
+
+    # 3) inter-chunk recurrence — associative scan (parallel prefix), so a
+    # sequence-sharded chunk axis costs log(n_shards) partial-state
+    # permutes instead of an all-gather of every chunk state (§Perf).
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                     # (b,nc,h)
+
+    h0 = (jnp.zeros((b, h, p, n), dtype=jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+    S_t = S.astype(jnp.float32)                                   # (b,nc,h,p,n)
+    dec_t = chunk_decay.astype(jnp.float32)                       # (b,nc,h)
+
+    def combine(x, y):
+        a1, s1 = x
+        a2, s2 = y
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    cum_dec, cum_S = jax.lax.associative_scan(
+        combine, (dec_t, S_t), axis=1)
+    # h_after_c = cum_S_c + cumprod(dec)_c * h0 ; h_prev_c = h_after_{c-1}
+    h_after = cum_S + cum_dec[..., None, None] * h0[:, None]
+    h_prevs = jnp.concatenate(
+        [h0[:, None], h_after[:, :-1]], axis=1)                   # (b,nc,h,p,n)
+    final = h_after[:, -1]
+
+    # 4) contribution of carried state to each position
+    state_decay = jnp.exp(a_cum)                                  # (b,nc,cs,h)
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc, state_decay,
+                       h_prevs.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y, final.astype(x.dtype)
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, B: jax.Array, C: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B,C: (b,n). Returns (y (b,h,p), new_state)."""
+    decay = jnp.exp(dt * A[None, :])                              # (b,h)
+    inc = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], B)
+    new_state = state * decay[..., None, None] + inc
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+
+
+def _split_proj(cfg: ModelConfig, z: jax.Array):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    zx, xx, Bx, Cx, dtx = jnp.split(
+        z, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1)
+    return zx, xx, Bx, Cx, dtx
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv via lax.conv_general_dilated (native spatial
+    partitioning: under a sequence-sharded mesh GSPMD emits a (k-1)-row halo
+    exchange instead of whole-tensor permutes — see EXPERIMENTS.md §Perf).
+
+    xBC: (b,s,c), w: (k,c). If ``state`` (b,k-1,c) is given it is the decode
+    context; returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        ctx = xBC
+        padding = [(k - 1, 0)]
+        pad_zeros = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+        full_ctx = jnp.concatenate([pad_zeros, xBC], axis=1)
+        new_state = full_ctx[:, -(k - 1):, :] if k > 1 else None
+    else:
+        ctx = jnp.concatenate([state, xBC], axis=1)
+        padding = [(0, 0)]
+        new_state = ctx[:, -(k - 1):, :] if k > 1 else None
+    c = xBC.shape[2]
+    rhs = w[:, None, :].astype(ctx.dtype)               # (k, 1, c) WIO
+    y = jax.lax.conv_general_dilated(
+        ctx, rhs, window_strides=(1,), padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return jax.nn.silu(y), new_state
+
+
+def mamba2_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                 state: dict | None = None, return_state: bool = False):
+    """x: (b, s, d). ``state`` = {"conv": (b,k-1,c), "ssd": (b,h,p,n)} for
+    decode; when given, s must be 1 and the recurrent path is used."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    z = x @ params["w_in"]                                        # (b,s,proj)
+    zx, xx, Bx, Cx, dtx = _split_proj(cfg, z)
+    xBC = jnp.concatenate([xx, Bx, Cx], axis=-1)
+    dt = jax.nn.softplus(dtx + params["dt_bias"])                 # (b,s,nh)
+    A = -jnp.exp(params["A_log"])                                 # (nh,)
+
+    if state is None:
+        conv_out, conv_state = _causal_conv(xBC, params["w_conv"])
+        xx2, Bx2, Cx2 = jnp.split(conv_out, [di, di + s_cfg.d_state], axis=-1)
+        xh = xx2.reshape(b, s, nh, s_cfg.head_dim)
+        xh = constrain(xh, "ssm_x")
+        y, final = ssd_chunked(xh, dt, A, Bx2, Cx2, s_cfg.chunk_size)
+        y = y + xh * params["D"][None, None, :, None]
+        y = y.reshape(b, s, di)
+        y = rms_norm(y * jax.nn.silu(zx), params["norm"], cfg.norm_eps)
+        out = y @ params["w_out"]
+        if return_state:
+            return out, {"conv": conv_state, "ssd": final}
+        return out
+    else:
+        assert s == 1
+        conv_out, conv_state = _causal_conv(xBC, params["w_conv"], state["conv"])
+        xx2, Bx2, Cx2 = jnp.split(conv_out, [di, di + s_cfg.d_state], axis=-1)
+        xh = xx2[:, 0].reshape(b, nh, s_cfg.head_dim)
+        y, new_ssd = ssd_decode_step(state["ssd"].astype(jnp.float32),
+                                     xh.astype(jnp.float32),
+                                     dt[:, 0].astype(jnp.float32), A,
+                                     Bx2[:, 0].astype(jnp.float32),
+                                     Cx2[:, 0].astype(jnp.float32))
+        y = y.astype(x.dtype) + xh * params["D"][None, :, None]
+        y = y.reshape(b, 1, di)
+        y = rms_norm(y * jax.nn.silu(zx), params["norm"], cfg.norm_eps)
+        out = y @ params["w_out"]
+        return out, {"conv": conv_state, "ssd": new_ssd.astype(state["ssd"].dtype)}

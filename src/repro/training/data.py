@@ -1,0 +1,72 @@
+"""Deterministic LM data pipeline.
+
+Two sources:
+  - ``SyntheticLM``: seeded Zipf-ish token stream (infinite, shardable) —
+    used by train loops and the dry-run's weak-type-correct batches.
+  - ``AgentTraceCorpus``: text harvested from the agentic benchmark traces
+    (tool outputs + summaries), tokenized with HashTokenizer — trains the
+    serving models on the same distribution the agents produce, closing the
+    loop between the two halves of the framework.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from ..data.tokenizer import HashTokenizer
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, batch: int,
+                 seed: int = 0, frontend_positions: int = 0,
+                 d_model: int = 0):
+        self.vocab = vocab_size
+        self.seq_len = seq_len
+        self.batch = batch
+        self.seed = seed
+        self.frontend_positions = frontend_positions
+        self.d_model = d_model
+
+    def batches(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(self.seed * 100_003 + step)
+        # Zipf-ish marginal over the vocab for realistic token stats
+        z = rng.zipf(1.3, size=(self.batch, self.seq_len))
+        tokens = (z % self.vocab).astype(np.int32)
+        out = {"tokens": tokens}
+        if self.frontend_positions:
+            out["frontend_embeds"] = rng.standard_normal(
+                (self.batch, self.frontend_positions, self.d_model),
+                dtype=np.float32) * 0.02
+        return out
+
+
+class AgentTraceCorpus:
+    """Tokenized corpus of agent-produced text."""
+
+    def __init__(self, texts: List[str], vocab_size: int, seq_len: int,
+                 batch: int, seed: int = 0):
+        self.tok = HashTokenizer(vocab_size)
+        ids: List[int] = []
+        for t in texts:
+            ids.extend(self.tok.encode(t))
+        need = max(batch * seq_len + 1, 2)
+        reps = math.ceil(need / max(len(ids), 1))
+        self.stream = np.array((ids * max(reps, 1))[:need], dtype=np.int32)
+        self.seq_len = seq_len
+        self.batch = batch
+        self.seed = seed
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(self.seed + step)
+        n = len(self.stream) - self.seq_len - 1
+        starts = rng.integers(0, max(n, 1), size=self.batch)
+        toks = np.stack([self.stream[s:s + self.seq_len] for s in starts])
+        return {"tokens": toks.astype(np.int32)}

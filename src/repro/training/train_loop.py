@@ -1,0 +1,61 @@
+"""Training step + loop."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import loss_fn
+from .checkpoint import save_checkpoint
+from .data import SyntheticLM
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig
+                    ) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+    return train_step
+
+
+def train(cfg: ModelConfig, steps: int = 50, batch: int = 4,
+          seq_len: int = 128, seed: int = 0, lr: float = 3e-4,
+          dtype=jnp.float32, log_every: int = 10,
+          checkpoint_dir: Optional[str] = None,
+          data=None, params=None) -> Dict[str, Any]:
+    """Single-host training loop (multi-host goes through repro.launch)."""
+    from ..models.params import init_params
+    opt_cfg = OptConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                        total_steps=steps)
+    key = jax.random.key(seed)
+    if params is None:
+        params = init_params(cfg, key, dtype=dtype)
+    opt_state = init_opt_state(params)
+    data = data or SyntheticLM(cfg.vocab_size, seq_len, batch, seed,
+                               cfg.frontend_positions if cfg.frontend else 0,
+                               cfg.d_model)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch_np = data.batch_at(step)
+        batch_j = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch_j)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+    wall = time.time() - t0
+    if checkpoint_dir:
+        save_checkpoint(checkpoint_dir, params, opt_state, steps,
+                        {"arch": cfg.name})
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "wall_s": wall,
+            "final_loss": history[-1]["loss"] if history else float("nan")}

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run re-execs with
+# 512 host devices itself; never set that globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)

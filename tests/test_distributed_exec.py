@@ -1,0 +1,114 @@
+"""EXECUTED distributed training/serving on a debug mesh (8 forced host
+devices, subprocess-isolated): proves the sharding rules are not just
+compilable but numerically runnable — loss decreases under pjit with the
+production param/activation specs.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.sharding import param_shardings, make_activation_policy
+from repro.configs.base import InputShape
+from repro.models.params import init_params
+from repro.models.sharding_ctx import activation_policy
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+from repro.training.data import SyntheticLM
+
+arch = __import__("sys").argv[1]
+cfg = get_config(arch).reduced()
+mesh = make_debug_mesh(2, 2)   # 2x2 ("data","model")
+B, S = 4, 64
+shape = InputShape("debug", S, B, "train")
+
+params = init_params(cfg, jax.random.key(0))
+opt = init_opt_state(params)
+p_sh = param_shardings(params, mesh)
+o_sh = param_shardings(opt, mesh)
+params = jax.device_put(params, p_sh)
+opt = jax.device_put(opt, o_sh)
+pol = make_activation_policy(cfg, shape, mesh)
+step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3, warmup_steps=1,
+                                              total_steps=10)),
+               in_shardings=(p_sh, o_sh, None), out_shardings=(p_sh, o_sh, None))
+data = SyntheticLM(cfg.vocab_size, S, B, 0,
+                   cfg.frontend_positions if cfg.frontend else 0, cfg.d_model)
+losses = []
+with mesh:
+    with activation_policy(pol):
+        for i in range(6):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+# a param leaf is actually sharded across >1 device
+leaf = jax.tree_util.tree_leaves(params)[2]
+n_shards = len({d for s in leaf.addressable_shards for d in [s.device]})
+print("RESULT::" + json.dumps({"losses": losses, "n_shards": n_shards}))
+"""
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "phi3.5-moe-42b-a6.6b",
+                                  "mamba2-370m", "zamba2-7b"])
+def test_sharded_training_executes_and_learns(arch):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT, arch],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT::")][0]
+    res = json.loads(line[len("RESULT::"):])
+    losses = res["losses"]
+    assert losses[-1] < losses[0], losses          # it learns
+    assert all(l == l for l in losses)             # no NaNs
+    assert res["n_shards"] > 1                     # actually distributed
+
+
+SHARDMAP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses, json, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models import model as mm
+from repro.models.model import forward
+from repro.launch.mesh import make_debug_mesh
+
+cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, n_experts=4, top_k=2, capacity_factor=8.0))
+params = init_params(cfg, jax.random.key(0))
+toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+ref, _ = forward(params, cfg, toks, remat=False)
+mesh = make_debug_mesh(2, 2)
+mm.MOE_SHARDMAP_MESH = mesh
+with mesh:
+    out, _ = jax.jit(lambda p, t: forward(p, cfg, t, remat=False))(params, toks)
+err = float(jnp.max(jnp.abs(out - ref)))
+print("RESULT::" + json.dumps({"err": err}))
+"""
+
+
+def test_shardmap_moe_matches_gather_dispatch():
+    """shard_map expert-parallel MoE == gather-dispatch MoE numerically."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", SHARDMAP_SCRIPT],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT::")][0]
+    assert json.loads(line[len("RESULT::"):])["err"] < 5e-3

@@ -1,0 +1,72 @@
+"""Dry-run machinery on a small debug mesh (2×2 / 2×2×2), exercised in a
+subprocess so the forced host-device count never leaks into other tests.
+
+The full 16×16 and 2×16×16 sweeps are exercised by
+``python -m repro.launch.dryrun --all [--multi-pod]`` (artifacts in
+artifacts/dryrun/); this test proves the identical code path on CI scale.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+from repro.configs import get_config
+from repro.launch.dryrun import dryrun_one
+
+arch, shape, mp = sys.argv[1], sys.argv[2], sys.argv[3] == "mp"
+res = dryrun_one(arch, shape, multi_pod=mp, debug_mesh=True)
+print("RESULT::" + json.dumps({k: res[k] for k in
+    ("arch", "shape", "dominant", "n_chips")}))
+"""
+
+
+def _run(arch, shape, mp=False):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, arch, shape, "mp" if mp else "sp"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT::")][0]
+    return json.loads(line[len("RESULT::"):])
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("tinyllama-1.1b", "train_4k"),
+    ("phi3.5-moe-42b-a6.6b", "decode_32k"),
+    ("mamba2-370m", "long_500k"),
+    ("zamba2-7b", "decode_32k"),
+])
+def test_debug_mesh_lowers(arch, shape):
+    res = _run(arch, shape)
+    assert res["n_chips"] == 4
+    assert res["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+
+def test_debug_mesh_multipod():
+    res = _run("tinyllama-1.1b", "train_4k", mp=True)
+    assert res["n_chips"] == 8
+
+
+def test_production_artifacts_complete():
+    """All 40 pairs × 2 meshes must have clean artifacts after the sweep."""
+    art = os.path.join(ROOT, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("run `python -m repro.launch.dryrun --all` first")
+    files = [f for f in os.listdir(art) if f.endswith(".json")]
+    if len(files) < 80:
+        pytest.skip(f"sweep incomplete ({len(files)}/80)")
+    bad = []
+    for f in files:
+        d = json.load(open(os.path.join(art, f)))
+        if "error" in d:
+            bad.append(f)
+    assert not bad, bad

@@ -1,0 +1,49 @@
+"""Beyond-paper extensions: CoT pre-reasoning, parallel stages, monolithic
+FaaS deployment."""
+import statistics
+
+from repro.apps.runner import run_app
+
+N = 5
+
+
+def test_parallel_stages_cut_latency():
+    seq = statistics.mean(
+        run_app("multi_topic_digest", "tech", "agentx", "local", s)
+        .total_latency for s in range(N))
+    par = statistics.mean(
+        run_app("multi_topic_digest", "tech", "agentx-parallel", "local", s)
+        .total_latency for s in range(N))
+    assert par < 0.8 * seq, (seq, par)
+
+
+def test_parallel_stages_preserve_artifact():
+    r = run_app("multi_topic_digest", "tech", "agentx-parallel", "local", 0)
+    assert r.success
+    assert "Digest section" in r.artifact
+    assert r.extras["outcome"]["parallel_groups"][0] == [0, 1, 2]
+
+
+def test_cot_adds_reasoner_inferences():
+    r = run_app("research_report", "why", "agentx-cot", "local", seed=0)
+    roles = r.trace.agent_breakdown()
+    assert roles.get("cot_reasoner", 0) >= 2   # stage-gen + per-stage plans
+
+
+def test_cot_improves_success_at_token_cost():
+    base = [run_app("research_report", "why", "agentx", "local", s)
+            for s in range(10)]
+    cot = [run_app("research_report", "why", "agentx-cot", "local", s)
+           for s in range(10)]
+    sr_base = sum(r.success for r in base) / 10
+    sr_cot = sum(r.success for r in cot) / 10
+    assert sr_cot >= sr_base
+    tin_base = statistics.mean(r.trace.input_tokens for r in base)
+    tin_cot = statistics.mean(r.trace.input_tokens for r in cot)
+    assert tin_cot > tin_base            # reasoning isn't free
+
+
+def test_multi_topic_all_patterns():
+    for pat in ("react", "agentx", "magentic"):
+        r = run_app("multi_topic_digest", "tech", pat, "local", seed=1)
+        assert r.success, (pat, r.failure_reason)

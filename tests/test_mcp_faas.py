@@ -1,0 +1,136 @@
+"""MCP protocol / servers / FaaS platform behaviour tests."""
+import json
+
+import pytest
+
+from repro.env.world import World
+from repro.faas.deployments import (FAAS_TOOL_SUBSET, SERVER_FACTORIES,
+                                    deploy_distributed, deploy_local,
+                                    deploy_monolithic)
+from repro.faas.platform import FaaSPlatform, LAMBDA_GBS_USD
+from repro.faas.storage import S3Store
+from repro.mcp.protocol import McpRequest, McpResponse
+from repro.mcp.server import ToolContext
+
+TABLE1 = {"code-execution": 4, "rag": 1, "yfinance": 17, "serper": 13,
+          "arxiv": 8, "fetch": 9, "filesystem": 10, "s3": 3}
+
+
+@pytest.mark.parametrize("server,count", sorted(TABLE1.items()))
+def test_table1_tool_counts(server, count):
+    assert len(SERVER_FACTORIES[server]().tools) == count
+
+
+def test_jsonrpc_roundtrip():
+    req = McpRequest("tools/call", {"name": "fetch", "arguments": {"url": "u"}},
+                     session_id="sid-1")
+    back = McpRequest.from_json(req.to_json())
+    assert back.method == req.method
+    assert back.params == {"name": "fetch", "arguments": {"url": "u"}}
+    assert back.session_id == "sid-1"
+    resp = McpResponse(1, {"ok": True}, session_id="sid-1")
+    back = McpResponse.from_json(resp.to_json())
+    assert back.ok and back.session_id == "sid-1"
+
+
+def test_unknown_tool_is_rpc_error_not_crash():
+    world = World(0)
+    clients, _ = deploy_local(world, ["serper"])
+    out = clients["serper"].call_tool("nonexistent", {})
+    assert out.startswith("<tool-error")
+
+
+def test_local_hints_applied_only_locally():
+    world = World(0)
+    clients, _ = deploy_local(world, ["fetch"])
+    [fetch] = [t for t in clients["fetch"].list_tools() if t.name == "fetch"]
+    assert "after using the Google Search tool" in fetch.spec.description
+
+    platform = FaaSPlatform(World(0))
+    fclients = deploy_distributed(World(0), platform, ["fetch"])
+    [fetch] = [t for t in fclients["fetch"].list_tools()
+               if t.name == "fetch"]
+    assert "after using the Google Search tool" not in fetch.spec.description
+
+
+def test_faas_hosts_tool_subset():
+    platform = FaaSPlatform(World(0))
+    clients = deploy_distributed(World(0), platform, ["yfinance"])
+    names = {t.name for t in clients["yfinance"].list_tools()}
+    assert names == set(FAAS_TOOL_SUBSET["yfinance"])
+
+
+def test_cold_start_then_warm():
+    world = World(0)
+    platform = FaaSPlatform(world)
+    clients = deploy_distributed(world, platform, ["serper"])
+    platform.reset_accounting()
+    clients["serper"].call_tool("google_search", {"query": "quantum"})
+    clients["serper"].call_tool("google_search", {"query": "quantum"})
+    colds = [i.cold_start for i in platform.invocations]
+    assert colds == [False, False]  # initialize() already booted the container
+
+
+def test_billing_eq2():
+    world = World(0)
+    platform = FaaSPlatform(world)
+    clients = deploy_distributed(world, platform, ["s3"])
+    platform.reset_accounting()
+    clients["s3"].call_tool("s3_write", {"uri": "s3://b/k", "content": "x"})
+    [inv] = platform.invocations
+    expected = inv.billed_gb_s * LAMBDA_GBS_USD + 0.2 / 1e6
+    assert abs(inv.cost_usd - expected) < 1e-12
+    assert inv.billed_gb_s == pytest.approx(
+        max(inv.duration_s, 0.001) * platform.functions["mcp-s3"].memory_mb / 1024)
+
+
+def test_session_statefulness_and_isolation():
+    world = World(0)
+    platform = FaaSPlatform(world)
+    c1 = deploy_distributed(world, platform, ["rag"])["rag"]
+    assert platform.sessions.count() == 1
+    c2_clients = deploy_distributed(world, platform, ["rag"])
+    # second deploy replaces function; sessions table still tracks ids
+    c1.close()
+    assert platform.sessions.get(c1.session_id) is None
+
+
+def test_ephemeral_tmp_vs_s3():
+    world = World(0)
+    platform = FaaSPlatform(world)
+    clients = deploy_distributed(world, platform, ["code-execution"])
+    out = clients["code-execution"].call_tool("execute_python", {
+        "code": "import matplotlib.pyplot as plt\n"
+                "plt.plot([1,2],[3,4])\n"
+                "plt.savefig('s3://dummy-bucket/agent/x.png')"})
+    assert json.loads(out)["status"] == "ok"
+    assert platform.s3.exists("s3://dummy-bucket/agent/x.png")
+
+
+def test_monolithic_routes_and_bills_summed_memory():
+    world = World(0)
+    platform = FaaSPlatform(world)
+    clients = deploy_monolithic(world, platform, ["serper", "fetch", "s3"])
+    mem = platform.functions["mcp-monolith"].memory_mb
+    assert mem == sum(max(SERVER_FACTORIES[n]().memory_mb, 128)
+                      for n in ("serper", "fetch", "s3"))
+    out = clients["serper"].call_tool("google_search", {"query": "edge"})
+    assert "organic" in out
+
+
+def test_s3_uri_parsing():
+    s3 = S3Store()
+    with pytest.raises(ValueError):
+        s3.put_object("not-a-uri", "x")
+    s3.put_object("s3://b/path/k.txt", "hello")
+    assert s3.get_object("s3://b/path/k.txt") == "hello"
+    assert s3.list_objects("s3://b/path") == ["s3://b/path/k.txt"]
+
+
+def test_sandbox_blocks_arbitrary_imports():
+    world = World(0)
+    clients, _ = deploy_local(world, ["code-execution"])
+    out = clients["code-execution"].call_tool(
+        "execute_python", {"code": "import os\nprint(os.getcwd())"})
+    assert json.loads(out)["status"] == "error"
+    assert "not preinstalled" in json.loads(out)["error"]
