@@ -4,21 +4,29 @@ For every (app × instance × pattern × deployment): run until 5 successes
 (≈5 runs per paper §5.3), computing success rate as 5/total-needed
 (§5.4.2). Results are cached in artifacts/agent_runs.json; every figure
 function reads from the cache.
+
+Runs execute through the ``Session``/``RunSpec`` API. The per-combo
+until-N-successes protocol is inherently serial (the seed sequence depends
+on earlier outcomes), but combos are independent: pass ``max_workers > 1``
+to fan them out across a thread pool. Records are assembled in
+deterministic combo order regardless of worker count.
 """
 from __future__ import annotations
 
 import json
 import os
 import statistics
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List
 
 from repro.apps.apps import APPS
-from repro.apps.runner import run_app, score_run
+from repro.apps.session import RunSpec, Session, score_run
+from repro.core.runtime import pattern_names
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 CACHE = os.path.join(ART, "agent_runs.json")
 
-PATTERNS = ["react", "agentx", "magentic"]
+PATTERNS = pattern_names(tag="paper")   # react, agentx, magentic
 DEPLOYMENTS = ["local", "faas"]
 N_SUCCESS = 5
 MAX_RUNS = 15
@@ -46,28 +54,33 @@ def _summarize(r, score) -> Dict:
     }
 
 
-def run_sweep(full: bool = True, deployments=None, force: bool = False
-              ) -> List[Dict]:
+def _run_combo(session: Session, spec: RunSpec) -> List[Dict]:
+    """Paper protocol for one combo: serial seeds until N successes."""
+    _, runs = session.run_until_n_successes(spec, n=N_SUCCESS,
+                                            max_runs=MAX_RUNS)
+    return [_summarize(r, score_run(r)) for r in runs]
+
+
+def run_sweep(full: bool = True, deployments=None, force: bool = False,
+              max_workers: int = 1) -> List[Dict]:
     if os.path.exists(CACHE) and not force:
         return json.load(open(CACHE))
     deployments = deployments or DEPLOYMENTS
-    records: List[Dict] = []
+    session = Session()
+    combos: List[RunSpec] = []
     for app_name, app in APPS.items():
         instances = list(app.instances) if full else list(app.instances)[:1]
         for inst in instances:
             for pattern in PATTERNS:
                 for dep in deployments:
-                    succ = 0
-                    seed = 0
-                    runs_needed = 0
-                    while succ < N_SUCCESS and runs_needed < MAX_RUNS:
-                        r = run_app(app_name, inst, pattern, dep, seed=seed)
-                        rec = _summarize(r, score_run(r))
-                        records.append(rec)
-                        runs_needed += 1
-                        seed += 1
-                        if r.success:
-                            succ += 1
+                    combos.append(RunSpec(app_name, inst, pattern, dep))
+    if max_workers > 1:
+        with ThreadPoolExecutor(max_workers=max_workers) as pool:
+            per_combo = list(pool.map(
+                lambda spec: _run_combo(session, spec), combos))
+    else:
+        per_combo = [_run_combo(session, spec) for spec in combos]
+    records: List[Dict] = [rec for rows in per_combo for rec in rows]
     os.makedirs(ART, exist_ok=True)
     with open(CACHE, "w") as f:
         json.dump(records, f)

@@ -8,10 +8,8 @@ from typing import Dict, List
 from repro.apps.apps import APPS
 from repro.faas.deployments import SERVER_FACTORIES
 
-from .experiments import (all_runs, mean_of, run_sweep, success_rate,
-                          successes)
-
-PATTERNS = ["react", "agentx", "magentic"]
+from .experiments import (PATTERNS, all_runs, mean_of, run_sweep,
+                          success_rate, successes)
 
 
 def table1_servers(records) -> List[str]:

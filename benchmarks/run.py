@@ -80,13 +80,16 @@ def main() -> None:
                     help="1 instance per app (CI)")
     ap.add_argument("--force", action="store_true",
                     help="ignore the agent-run cache")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="thread-pool fan-out across sweep combos")
     args = ap.parse_args()
 
     from .experiments import run_sweep
     from .figures import ALL_FIGURES
 
     t0 = time.time()
-    records = run_sweep(full=not args.quick, force=args.force)
+    records = run_sweep(full=not args.quick, force=args.force,
+                        max_workers=args.workers)
     print(f"# agent sweep: {len(records)} runs "
           f"({time.time() - t0:.0f}s wall, virtual-clock latencies)")
     for fig in ALL_FIGURES:

@@ -13,24 +13,27 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.apps.runner import run_app  # noqa: E402
+from repro.apps.session import RunSpec, Session  # noqa: E402
 
 N = 6
 
 
 def main():
+    session = Session()
     print("=== parallel stages (multi_topic_digest, 3 independent topics) ===")
     for pat in ("agentx", "agentx-parallel"):
-        rs = [run_app("multi_topic_digest", "tech", pat, "local", seed=s)
-              for s in range(N)]
+        rs = session.execute_many(
+            [RunSpec("multi_topic_digest", "tech", pat, seed=s)
+             for s in range(N)], max_workers=4)
         lat = statistics.mean(r.total_latency for r in rs)
         print(f"  {pat:17s} latency={lat:6.1f}s "
               f"success={sum(r.success for r in rs)}/{N}")
 
     print("\n=== CoT pre-reasoning (research_report, anomaly-prone) ===")
     for pat in ("agentx", "agentx-cot"):
-        rs = [run_app("research_report", "why", pat, "local", seed=s)
-              for s in range(12)]
+        rs = session.execute_many(
+            [RunSpec("research_report", "why", pat, seed=s)
+             for s in range(12)], max_workers=4)
         sr = sum(r.success for r in rs) / 12
         tin = statistics.mean(r.trace.input_tokens for r in rs)
         cost = statistics.mean(r.trace.llm_cost for r in rs)

@@ -9,7 +9,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.apps.runner import run_app, score_run  # noqa: E402
+from repro.apps.session import RunSpec, Session, score_run  # noqa: E402
+from repro.core.runtime import pattern_names  # noqa: E402
 
 N = 3
 
@@ -17,15 +18,17 @@ N = 3
 def main():
     app = sys.argv[1] if len(sys.argv) > 1 else "web_search"
     inst = sys.argv[2] if len(sys.argv) > 2 else "quantum"
+    session = Session()
     print(f"=== {app} / {inst} ({N} runs each) ===")
     hdr = (f"{'pattern':9s} {'dep':5s} {'ok':>4s} {'lat_s':>7s} "
            f"{'llm_s':>6s} {'tool_s':>6s} {'fw_s':>5s} {'in_tok':>7s} "
            f"{'out':>5s} {'$llm':>7s} {'score':>5s}")
     print(hdr)
     for dep in ("local", "faas"):
-        for pattern in ("react", "agentx", "magentic"):
-            runs = [run_app(app, inst, pattern, dep, seed=s)
-                    for s in range(N)]
+        for pattern in pattern_names(tag="paper"):
+            runs = session.execute_many(
+                [RunSpec(app, inst, pattern, dep, seed=s)
+                 for s in range(N)], max_workers=N)
             scores = [score_run(r).total for r in runs]
             m = lambda f: statistics.mean(f(r) for r in runs)
             print(f"{pattern:9s} {dep:5s} "

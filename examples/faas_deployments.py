@@ -12,7 +12,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.apps.runner import run_app  # noqa: E402
+from repro.apps.session import RunSpec, Session  # noqa: E402
 
 N = 4
 APPS = [("web_search", "materials"), ("stock_correlation", "cola"),
@@ -20,12 +20,14 @@ APPS = [("web_search", "materials"), ("stock_correlation", "cola"),
 
 
 def main():
+    session = Session()
     print(f"{'app':18s} {'deployment':10s} {'lat_s':>7s} {'tool_s':>7s} "
           f"{'lambda_$':>10s} {'ok':>5s}")
     for app, inst in APPS:
         for dep in ("local", "faas", "faas-mono"):
-            runs = [run_app(app, inst, "react", dep, seed=s)
-                    for s in range(N)]
+            runs = session.execute_many(
+                [RunSpec(app, inst, "react", dep, seed=s)
+                 for s in range(N)], max_workers=N)
             lat = statistics.mean(r.total_latency for r in runs)
             tool = statistics.mean(r.trace.tool_latency for r in runs)
             cost = statistics.mean(r.faas_cost for r in runs)

@@ -13,7 +13,7 @@ sys.path.insert(0, "src")
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.apps.runner import run_app, score_run  # noqa: E402
+from repro.apps.session import RunSpec, Session, score_run  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.serving import Engine  # noqa: E402
 from repro.training import train  # noqa: E402
@@ -36,7 +36,9 @@ def main():
 
     # 3 -- AgentX over FaaS MCP ----------------------------------------
     print("[3/3] AgentX workflow, FaaS-hosted MCP (distributed, Fig. 2c)")
-    result = run_app("web_search", "quantum", "agentx", "faas", seed=0)
+    session = Session()
+    result = session.execute(
+        RunSpec("web_search", "quantum", "agentx", "faas", seed=0))
     score = score_run(result)
     t = result.trace
     print(f"      success={result.success} latency={result.total_latency:.1f}s"

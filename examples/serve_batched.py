@@ -9,10 +9,10 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.apps.runner import run_app  # noqa: E402
+from repro.apps.session import RunSpec, Session  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.core.llm import JaxLLMBackend  # noqa: E402
-from repro.serving import BatchScheduler, Engine  # noqa: E402
+from repro.serving import BatchScheduler, Engine, RunMonitor  # noqa: E402
 
 
 def main():
@@ -39,15 +39,23 @@ def main():
           f"({len(results) * 12 / wall:.1f} tok/s, CPU)")
 
     # real JAX engine as the agents' LLM endpoint (decisions from the
-    # oracle policy, every completion runs actual prefill+decode)
+    # oracle policy, every completion runs actual prefill+decode); the
+    # serving-side RunMonitor observes the run-event stream live
     print("# AgentX with the JAX engine in the loop:")
+    monitor = RunMonitor()
+    session = Session(on_event=monitor)
     t0 = time.time()
-    r = run_app("web_search", "edge", "agentx", "local", seed=0,
-                backend_factory=lambda world, policy, trace: JaxLLMBackend(
-                    world, policy, engine, trace, max_gen=4))
+    r = session.execute(RunSpec(
+        "web_search", "edge", "agentx", "local", seed=0,
+        backend_factory=lambda world, policy, trace: JaxLLMBackend(
+            world, policy, engine, trace, max_gen=4)))
+    snap = monitor.snapshot()
     print(f"#   success={r.success} agent_invocations="
           f"{r.trace.agent_invocations} wall={time.time() - t0:.1f}s "
           f"(every inference ran real prefill+decode)")
+    print(f"#   live monitor: llm_calls={snap['llm_calls']} "
+          f"tokens={snap['input_tokens']}/{snap['output_tokens']} "
+          f"tool_calls={snap['tool_calls']} in_flight={snap['in_flight']}")
 
 
 if __name__ == "__main__":

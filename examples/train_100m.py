@@ -13,7 +13,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.apps.runner import run_app  # noqa: E402
+from repro.apps.session import RunSpec, Session  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.training import train  # noqa: E402
 from repro.training.data import AgentTraceCorpus  # noqa: E402
@@ -21,8 +21,11 @@ from repro.training.data import AgentTraceCorpus  # noqa: E402
 
 def harvest_corpus() -> list:
     texts = []
-    for app, inst in [("web_search", "quantum"), ("research_report", "why")]:
-        r = run_app(app, inst, "agentx", "local", seed=0)
+    runs = Session().execute_many(
+        [RunSpec(app, inst, "agentx", seed=0)
+         for app, inst in [("web_search", "quantum"),
+                           ("research_report", "why")]], max_workers=2)
+    for r in runs:
         if r.artifact:
             texts.append(r.artifact)
         texts.extend(r.extras["outcome"].get("summaries", []))

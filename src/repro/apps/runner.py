@@ -1,54 +1,36 @@
-"""End-to-end application runner: deployment + pattern + app instance ->
-RunResult (+ judge score). The experiment harness in ``benchmarks/``
-aggregates these into the paper's figures.
+"""Back-compat shim over the Session / RunSpec API.
+
+The end-to-end runner lives in :mod:`repro.apps.session`; pattern lookup
+lives in the registry (:mod:`repro.core.runtime`). This module keeps the
+historical entry points — ``run_app``, ``run_until_n_successes``,
+``score_run`` and the ``PATTERNS`` mapping — as thin delegating wrappers.
 """
 from __future__ import annotations
 
-import re
-from typing import Dict, Optional, Tuple
-
-from ..core.agentx import AgentXRunner
-from ..core.llm import OracleLLMBackend
-from ..core.magentic import MagenticOneRunner
-from ..core.metrics import RunResult, Trace
-from ..core.policies import POLICIES
-from ..core.react import ReActRunner
-from ..env.world import World
-from ..eval.judge import Score, judge_stock, judge_summary
-from ..faas.deployments import (deploy_distributed, deploy_local,
-                                deploy_monolithic)
-from ..faas.platform import FaaSPlatform
-from .apps import APPS
-
 import functools
+from typing import Iterator, Mapping
 
-PATTERNS = {
-    "agentx": AgentXRunner,
-    "agentx-cot": functools.partial(AgentXRunner, cot=True),
-    "agentx-parallel": functools.partial(AgentXRunner, parallel_stages=True),
-    "agentx-cot-parallel": functools.partial(AgentXRunner, cot=True,
-                                             parallel_stages=True),
-    "react": ReActRunner,
-    "magentic": MagenticOneRunner,
-}
+from ..core.metrics import RunResult
+from ..core.runtime import pattern_names, resolve_pattern
+from .session import RunSpec, Session, score_run  # noqa: F401 (re-export)
 
 
-def _artifact(policy, workspace, s3) -> Tuple[Optional[str], Optional[str]]:
-    """Locate the expected output artifact in whichever store it landed."""
-    name = policy.artifact
-    candidates = [policy.out_target(name), name,
-                  f"s3://dummy-bucket/agent/{name}"]
-    for store in (s3, workspace):
-        if store is None:
-            continue
-        for path in candidates:
-            if store.exists(path):
-                return path, store.read(path)
-        # fuzzy: suffix match (agents sometimes pick their own path)
-        for path in store.list():
-            if path.endswith(name.split("/")[-1]):
-                return path, store.read(path)
-    return None, None
+class _PatternView(Mapping):
+    """Read-only mapping view over the pattern registry, shaped like the
+    old ``PATTERNS`` dict of runner factories."""
+
+    def __getitem__(self, name: str):
+        rp = resolve_pattern(name)
+        return functools.partial(rp.runner_cls, config=rp.config)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(pattern_names())
+
+    def __len__(self) -> int:
+        return len(pattern_names())
+
+
+PATTERNS = _PatternView()
 
 
 def run_app(app_name: str, instance: str, pattern: str,
@@ -56,89 +38,17 @@ def run_app(app_name: str, instance: str, pattern: str,
             backend_factory=None) -> RunResult:
     """Execute one (app, instance, pattern, deployment) run.
 
-    deployment: "local" (Fig. 2a) | "faas" (distributed, Fig. 2c) |
-    "faas-mono" (monolithic, Fig. 2b — beyond-paper benchmark).
+    Equivalent to ``Session().execute(RunSpec(...))``.
     """
-    app = APPS[app_name]
-    world = World(seed=seed * 9176 + hash((app_name, instance, pattern,
-                                           deployment)) % 10_000)
-    faas = deployment != "local"
-    task = app.prompt(instance, faas)
-
-    platform = None
-    workspace = None
-    if deployment == "local":
-        clients, workspace = deploy_local(world, app.servers)
-        s3 = None
-    else:
-        platform = FaaSPlatform(world)
-        if deployment == "faas-mono":
-            clients = deploy_monolithic(world, platform, app.servers)
-        else:
-            clients = deploy_distributed(world, platform, app.servers)
-        s3 = platform.s3
-        platform.reset_accounting()   # deployment cold-starts not billed to run
-        world.clock.reset()
-
-    policy = POLICIES[app_name](world, task, deployment, seed)
-    trace = Trace()
-    backend = (backend_factory(world, policy, trace) if backend_factory
-               else OracleLLMBackend(world, policy, trace))
-    runner_cls = PATTERNS[pattern]
-    runner = runner_cls(backend, clients, world, trace, deployment=deployment)
-
-    t0 = world.clock.now()
-    failure = ""
-    try:
-        outcome = runner.run(task)
-    except Exception as e:  # pattern-level crash counts as failed run
-        outcome = {"completed": False}
-        failure = f"{type(e).__name__}: {e}"
-    total_latency = world.clock.now() - t0
-
-    path, artifact = _artifact(policy, workspace, s3)
-    success = outcome.get("completed", False) and artifact is not None
-    if app_name == "stock_correlation" and artifact is not None:
-        score = judge_stock(world, policy.companies, policy.filename,
-                            path, artifact)
-        # dummy-data plots count as failures (paper §6.4)
-        if score.attributes["Data Accuracy"] < 20.0:
-            success = False
-            failure = failure or "plot used dummy/fabricated data"
-    for client in clients.values():
-        client.close()
-
-    faas_cost = platform.total_cost() if platform else 0.0
-    return RunResult(app=app_name, instance=instance, pattern=pattern,
-                     deployment=deployment, success=success,
-                     total_latency=total_latency, trace=trace,
-                     artifact_path=path, artifact=artifact,
-                     faas_cost=faas_cost, failure_reason=failure,
-                     extras={"world": world, "policy": policy,
-                             "outcome": outcome})
-
-
-def score_run(result: RunResult) -> Score:
-    world = result.extras["world"]
-    policy = result.extras["policy"]
-    if result.app == "stock_correlation":
-        return judge_stock(world, policy.companies, policy.filename,
-                           result.artifact_path, result.artifact)
-    query = getattr(policy, "query", getattr(policy, "title", ""))
-    return judge_summary(world, query, result.artifact, result.app)
+    return Session().execute(RunSpec(app_name, instance, pattern, deployment,
+                                     seed, backend_factory))
 
 
 def run_until_n_successes(app_name: str, instance: str, pattern: str,
                           deployment: str, n: int = 5, max_runs: int = 40,
                           seed0: int = 0):
-    """Paper success-rate protocol (§5.4.2): run until N successes; success
-    rate = N / total runs needed."""
-    successes, runs = [], []
-    seed = seed0
-    while len(successes) < n and len(runs) < max_runs:
-        r = run_app(app_name, instance, pattern, deployment, seed=seed)
-        runs.append(r)
-        if r.success:
-            successes.append(r)
-        seed += 1
-    return successes, runs
+    """Paper success-rate protocol (§5.4.2); see
+    ``Session.run_until_n_successes``."""
+    return Session().run_until_n_successes(
+        RunSpec(app_name, instance, pattern, deployment, seed0),
+        n=n, max_runs=max_runs)

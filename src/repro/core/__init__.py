@@ -1,3 +1,17 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core orchestration layer: the shared AgentRuntime, the pattern
+registry, the typed run-event stream, and the built-in workflow patterns
+(AgentX, ReAct, Magentic-One)."""
+from .events import (LLMCompleted, OverheadIncurred, PlanProduced,
+                     ReflectionEmitted, RunCompleted, RunEvent, RunStarted,
+                     StageCompleted, StageStarted, ToolInvoked, derive_trace)
+from .runtime import (AgentRuntime, PatternConfig, RunOutcome,
+                      create_runner, pattern_names, register_pattern,
+                      resolve_pattern)
+
+__all__ = [
+    "AgentRuntime", "PatternConfig", "RunOutcome", "create_runner",
+    "pattern_names", "register_pattern", "resolve_pattern",
+    "RunEvent", "RunStarted", "StageStarted", "PlanProduced", "LLMCompleted",
+    "ToolInvoked", "OverheadIncurred", "ReflectionEmitted", "StageCompleted",
+    "RunCompleted", "derive_trace",
+]

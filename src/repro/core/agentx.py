@@ -5,17 +5,20 @@ Execution Agent (tool-call loop + reflection/summarization). Only the
 consolidated ``execution_results`` summary crosses stage boundaries
 (active context optimization, §3.5) — the raw tool outputs stay inside the
 stage's context window.
+
+Plumbing (tool registry, validated invocation, overhead accounting, event
+stream) lives in :class:`repro.core.runtime.AgentRuntime`; this module is
+control flow only.
 """
 from __future__ import annotations
 
 import json
 from typing import Dict, List, Optional
 
-from ..env.clock import Stopwatch
-from ..env.world import World
-from ..mcp.client import McpClient, ToolHandle
-from .llm import Decision, LLMBackend, LLMRequest, ToolCall
-from .metrics import FrameworkEvent, ToolEvent, Trace
+from .llm import LLMRequest
+from .events import PlanProduced, StageCompleted, StageStarted
+from .runtime import (AgentRuntime, PatternConfig, RunOutcome,
+                      register_pattern)
 from .schema import PLAN_SCHEMA, REFLECTION_SCHEMA, STAGE_SCHEMA
 
 STAGE_SYSTEM = (
@@ -39,79 +42,48 @@ COT_SYSTEM = (
     "identify the required tools and their order, and note pitfalls "
     "(missing parameters, redundant stages, forgotten writes).")
 
-MAX_STEPS_PER_STAGE = 14
-FRAMEWORK_OVERHEAD_S = {"local": 0.18, "faas": 0.16}
 
-
-class AgentXRunner:
+@register_pattern("agentx-cot-parallel", cot=True, parallel_stages=True,
+                  rank=23)
+@register_pattern("agentx-parallel", parallel_stages=True, rank=22)
+@register_pattern("agentx-cot", cot=True, rank=21)
+@register_pattern("agentx", tags=("paper",), rank=20)
+class AgentXRunner(AgentRuntime):
     """Framework-independent AgentX implementation (paper: 'a Python
     framework consisting of modules for the different agent types and an
-    orchestrator between the agents')."""
+    orchestrator between the agents').
+
+    ``cot`` / ``parallel_stages`` knobs implement the paper's §7
+    future-work items: a CoT reasoning inference before stage generation
+    and planning, and concurrent execution of independent stages."""
 
     pattern = "agentx"
-
-    def __init__(self, backend: LLMBackend, clients: Dict[str, McpClient],
-                 world: World, trace: Trace, deployment: str = "local",
-                 cot: bool = False, parallel_stages: bool = False):
-        """cot / parallel_stages implement the paper's §7 future-work items:
-        a CoT reasoning inference before stage generation and planning, and
-        concurrent execution of independent stages."""
-        self.backend = backend
-        self.clients = clients
-        self.world = world
-        self.trace = trace
-        self.deployment = deployment
-        self.cot = cot
-        self.parallel_stages = parallel_stages
-        self.tools: List[ToolHandle] = []
-        self.tool_server: Dict[str, str] = {}
-        for server, client in clients.items():
-            for h in client.list_tools():
-                self.tools.append(h)
-                self.tool_server[h.name] = server
-
-    # ------------------------------------------------------------------
-    def _overhead(self, what: str):
-        dt = FRAMEWORK_OVERHEAD_S["faas" if self.deployment != "local" else "local"]
-        self.world.clock.sleep(dt)
-        self.trace.framework_events.append(
-            FrameworkEvent(what, dt, self.world.clock.now()))
-
-    def _invoke(self, call: ToolCall) -> str:
-        server = call.server or self.tool_server.get(call.tool, "")
-        client = self.clients.get(server)
-        with Stopwatch(self.world.clock) as sw:
-            if client is None or call.tool not in {h.name for h in self.tools}:
-                result = f"<tool-error unknown tool {call.tool!r}>"
-            else:
-                result = client.call_tool(call.tool, call.args)
-        ok = not result.startswith("<tool-error")
-        self.trace.tool_events.append(ToolEvent(server, call.tool, sw.elapsed,
-                                                ok, self.world.clock.now()))
-        return result
+    default_config = PatternConfig(max_steps=14, overhead_local_s=0.18,
+                                   overhead_faas_s=0.16)
 
     # ------------------------------------------------------------------
     def _cot(self, task: str, about: str) -> str:
-        resp = self.backend.complete(LLMRequest(
+        resp = self.complete(LLMRequest(
             agent="cot_reasoner", system=COT_SYSTEM,
             messages=[{"role": "user", "content": f"Task: {task}\n"
                        f"About to: {about}"}],
             meta={"task": task, "about": about}))
         return resp.decision.text or ""
 
-    def run(self, task: str) -> Dict:
+    def _run(self, task: str) -> RunOutcome:
+        cot = self.config.cot
         tool_text = "\n".join(t.describe() for t in self.tools)
         cot_note = self._cot(task, "decompose the task into stages") \
-            if self.cot else ""
-        self._overhead("stage-dispatch")
-        stage_resp = self.backend.complete(LLMRequest(
+            if cot else ""
+        self.overhead("stage-dispatch")
+        stage_resp = self.complete(LLMRequest(
             agent="stage_generator", system=STAGE_SYSTEM,
             messages=[{"role": "user",
                        "content": (f"Reasoning: {cot_note}\n" if cot_note
                                    else "")
                        + f"Task: {task}\nAvailable tools:\n{tool_text}"}],
             tools=self.tools, schema=STAGE_SCHEMA,
-            meta={"task": task, "cot": self.cot}))
+            meta={"task": task, "cot": cot}))
         stages = stage_resp.decision.structured["sub_tasks"]
         groups = self._stage_groups(stages)
 
@@ -132,12 +104,12 @@ class AgentXRunner:
             if not stage_success:
                 break
 
-        return {"stages": stages, "summaries": summaries,
-                "completed": stage_success,
-                "parallel_groups": [list(g) for g in groups]}
+        return RunOutcome(completed=stage_success, data={
+            "stages": stages, "summaries": summaries,
+            "parallel_groups": [list(g) for g in groups]})
 
     def _stage_groups(self, stages):
-        if self.parallel_stages:
+        if self.config.parallel_stages:
             grouper = getattr(self.backend, "policy", None)
             grouper = getattr(grouper, "stage_groups", None)
             if grouper is not None:
@@ -145,58 +117,63 @@ class AgentXRunner:
         return [[i] for i in range(len(stages))]
 
     def _run_stage(self, task, stages, idx, summaries) -> bool:
+        cot = self.config.cot
         stage = stages[idx]
-        if True:
-            cot_note = self._cot(task, f"plan the stage: {stage}") \
-                if self.cot else ""
-            self._overhead("plan-dispatch")
-            plan_resp = self.backend.complete(LLMRequest(
-                agent="planner", system=PLANNER_SYSTEM,
+        self.emit(StageStarted(t=self.now(), index=idx, name=stage))
+        cot_note = self._cot(task, f"plan the stage: {stage}") if cot else ""
+        self.overhead("plan-dispatch")
+        plan_resp = self.complete(LLMRequest(
+            agent="planner", system=PLANNER_SYSTEM,
+            messages=[
+                {"role": "user", "content":
+                 (f"Reasoning: {cot_note}\n" if cot_note else "")
+                 + f"Task: {task}\nCompleted stages: "
+                 f"{json.dumps(stages[:idx])}\nCurrent stage: {stage}\n"
+                 f"Future stages: {json.dumps(stages[idx + 1:])}\n"
+                 f"Context from completed stages:\n"
+                 + "\n".join(summaries)},
+            ],
+            tools=self.tools, schema=PLAN_SCHEMA,
+            meta={"task": task, "stages": stages, "stage_idx": idx,
+                  "summaries": summaries, "cot": cot}))
+        plan = plan_resp.decision.structured
+        self.emit(PlanProduced(t=self.now(), index=idx, plan=plan))
+        filtered = [t for t in self.tools if t.name in plan["tools_needed"]]
+
+        stage_history: List[Dict] = []
+        reflection: Optional[Dict] = None
+        for _ in range(self.config.max_steps):
+            history_text = "\n".join(
+                f"[{h['tool']}] -> {h['result'][:2000]}"
+                for h in stage_history)
+            exec_resp = self.complete(LLMRequest(
+                agent="executor", system=EXECUTOR_SYSTEM,
                 messages=[
                     {"role": "user", "content":
-                     (f"Reasoning: {cot_note}\n" if cot_note else "")
-                     + f"Task: {task}\nCompleted stages: "
-                     f"{json.dumps(stages[:idx])}\nCurrent stage: {stage}\n"
-                     f"Future stages: {json.dumps(stages[idx + 1:])}\n"
-                     f"Context from completed stages:\n"
-                     + "\n".join(summaries)},
+                     f"{json.dumps(plan['steps'])}\n"
+                     f"Context: {' '.join(summaries)}\n"
+                     f"Tool results so far:\n{history_text}"},
                 ],
-                tools=self.tools, schema=PLAN_SCHEMA,
-                meta={"task": task, "stages": stages, "stage_idx": idx,
-                      "summaries": summaries, "cot": self.cot}))
-            plan = plan_resp.decision.structured
-            filtered = [t for t in self.tools if t.name in plan["tools_needed"]]
-
-            stage_history: List[Dict] = []
-            reflection: Optional[Dict] = None
-            for _ in range(MAX_STEPS_PER_STAGE):
-                history_text = "\n".join(
-                    f"[{h['tool']}] -> {h['result'][:2000]}"
-                    for h in stage_history)
-                exec_resp = self.backend.complete(LLMRequest(
-                    agent="executor", system=EXECUTOR_SYSTEM,
-                    messages=[
-                        {"role": "user", "content":
-                         f"{json.dumps(plan['steps'])}\n"
-                         f"Context: {' '.join(summaries)}\n"
-                         f"Tool results so far:\n{history_text}"},
-                    ],
-                    tools=filtered, schema=REFLECTION_SCHEMA,
-                    meta={"task": task, "stage": stage, "stage_idx": idx,
-                          "plan": plan, "stage_history": stage_history,
-                          "summaries": summaries, "cot": self.cot}))
-                d = exec_resp.decision
-                if d.tool_call is not None:
-                    result = self._invoke(d.tool_call)
-                    stage_history.append({"tool": d.tool_call.tool,
-                                          "args": d.tool_call.args,
-                                          "result": result})
-                else:
-                    reflection = d.structured
-                    break
-            if reflection is None:
-                # executor never produced a reflection: stuck in a loop —
-                # AgentX has no dedicated recovery system (paper §6.1)
-                return False
-            summaries.append(reflection["execution_results"])
-            return bool(reflection["success"])
+                tools=filtered, schema=REFLECTION_SCHEMA,
+                meta={"task": task, "stage": stage, "stage_idx": idx,
+                      "plan": plan, "stage_history": stage_history,
+                      "summaries": summaries, "cot": cot}))
+            d = exec_resp.decision
+            if d.tool_call is not None:
+                result = self.invoke(d.tool_call)
+                stage_history.append({"tool": d.tool_call.tool,
+                                      "args": d.tool_call.args,
+                                      "result": result})
+            else:
+                reflection = d.structured
+                break
+        if reflection is None:
+            # executor never produced a reflection: stuck in a loop —
+            # AgentX has no dedicated recovery system (paper §6.1)
+            self.emit(StageCompleted(t=self.now(), index=idx, success=False))
+            return False
+        self.reflect(idx, reflection)
+        summaries.append(reflection["execution_results"])
+        success = bool(reflection["success"])
+        self.emit(StageCompleted(t=self.now(), index=idx, success=success))
+        return success

@@ -1,0 +1,99 @@
+"""Typed run-event stream emitted by every workflow pattern.
+
+All patterns execute through :class:`repro.core.runtime.AgentRuntime`,
+which emits one :class:`RunEvent` per orchestration step (stage dispatch,
+plan, tool invocation, reflection, ...). Observers — the experiment
+harness, ``benchmarks/figures.py``, the serving-side
+:class:`repro.serving.engine.RunMonitor` — subscribe via
+``Session(on_event=...)`` or ``AgentRuntime.subscribe`` and see runs
+*live* instead of post-hoc.
+
+``Trace`` is derived from the stream: :func:`derive_trace` rebuilds the
+full accounting trace (LLM / tool / framework events) from an event list,
+and the runtime keeps its ``Trace`` in sync by reducing every emitted
+event into it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+from .metrics import FrameworkEvent, LLMEvent, ToolEvent, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class RunEvent:
+    """Base class: ``t`` is the virtual-clock timestamp of emission."""
+    t: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RunStarted(RunEvent):
+    pattern: str
+    task: str
+
+
+@dataclasses.dataclass(frozen=True)
+class StageStarted(RunEvent):
+    index: int
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanProduced(RunEvent):
+    index: int
+    plan: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LLMCompleted(RunEvent):
+    event: LLMEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class ToolInvoked(RunEvent):
+    event: ToolEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class OverheadIncurred(RunEvent):
+    event: FrameworkEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class ReflectionEmitted(RunEvent):
+    index: int
+    reflection: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCompleted(RunEvent):
+    index: int
+    success: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCompleted(RunEvent):
+    completed: bool
+    data: Dict[str, Any]
+
+
+def reduce_into_trace(event: RunEvent, trace: Trace) -> None:
+    """Fold one event into a Trace. ``LLMCompleted`` is a no-op because the
+    LLM backend appends to the shared Trace itself (it also serves callers
+    that bypass the runtime)."""
+    if isinstance(event, ToolInvoked):
+        trace.tool_events.append(event.event)
+    elif isinstance(event, OverheadIncurred):
+        trace.framework_events.append(event.event)
+
+
+def derive_trace(events: List[RunEvent]) -> Trace:
+    """Rebuild the full accounting Trace from an event stream."""
+    trace = Trace()
+    for ev in events:
+        if isinstance(ev, LLMCompleted):
+            trace.llm_events.append(ev.event)
+        else:
+            reduce_into_trace(ev, trace)
+    return trace

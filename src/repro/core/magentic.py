@@ -6,18 +6,21 @@ agent per MCP server, each with a hand-written description).
 Specialists receive the fact sheet + plan, call their server's tools, and
 pass only a *reflection* of the tool outputs onward (§6.4 — the source of
 the stock-data truncation anomaly). On specialist failure the Orchestrator
-updates the fact sheet and re-plans (2 extra inferences), capped.
+updates the fact sheet and re-plans (2 extra inferences), capped at
+``PatternConfig.max_replans``.
+
+Plumbing lives in :class:`repro.core.runtime.AgentRuntime`; the per-server
+team view is the runtime's ``server_tools`` registry.
 """
 from __future__ import annotations
 
 import json
 from typing import Dict, List
 
-from ..env.clock import Stopwatch
-from ..env.world import World
-from ..mcp.client import McpClient, ToolHandle
-from .llm import LLMBackend, LLMRequest, ToolCall
-from .metrics import FrameworkEvent, ToolEvent, Trace
+from .llm import LLMRequest, ToolCall
+from .events import PlanProduced, StageStarted
+from .runtime import (AgentRuntime, PatternConfig, RunOutcome,
+                      register_pattern)
 from .schema import FACT_SHEET_SCHEMA, LEDGER_PLAN_SCHEMA
 
 ORCH_SYSTEM = ("You are the Orchestrator of a team of specialized agents. "
@@ -45,53 +48,27 @@ AGENT_DESCRIPTIONS = {
     "s3": ("Agent for reading and writing objects in S3."),
 }
 
-MAX_SPECIALIST_STEPS = 10
-MAX_REPLANS = 3
-# AutoGen + AgentOps observability overhead (paper: mean 30.1 s local,
-# ~15 s FaaS, with occasional network outliers)
-FRAMEWORK_OVERHEAD_S = {"local": 2.6, "faas": 1.35}
 
-
-class MagenticOneRunner:
+@register_pattern("magentic", tags=("paper",), rank=30)
+class MagenticOneRunner(AgentRuntime):
     pattern = "magentic"
+    # AutoGen + AgentOps observability overhead (paper: mean 30.1 s local,
+    # ~15 s FaaS, with occasional network outliers)
+    default_config = PatternConfig(max_steps=10, max_replans=3,
+                                   overhead_local_s=2.6,
+                                   overhead_faas_s=1.35,
+                                   overhead_jitter=True)
 
-    def __init__(self, backend: LLMBackend, clients: Dict[str, McpClient],
-                 world: World, trace: Trace, deployment: str = "local"):
-        self.backend = backend
-        self.clients = clients
-        self.world = world
-        self.trace = trace
-        self.deployment = deployment
-        self._shared: List[str] = []
-        self.team: Dict[str, List[ToolHandle]] = {}
-        for server, client in clients.items():
-            self.team[server] = client.list_tools()
-
-    def _overhead(self, what: str):
-        dt = FRAMEWORK_OVERHEAD_S["faas" if self.deployment != "local" else "local"]
-        jitter = 0.6 + 0.8 * self.world.latency.rng.random()
-        self.world.clock.sleep(dt * jitter)
-        self.trace.framework_events.append(
-            FrameworkEvent(what, dt * jitter, self.world.clock.now()))
-
-    def _invoke(self, server: str, call: ToolCall) -> str:
-        client = self.clients.get(server)
-        with Stopwatch(self.world.clock) as sw:
-            if client is None:
-                result = f"<tool-error unknown server {server!r}>"
-            else:
-                result = client.call_tool(call.tool, call.args)
-        ok = not result.startswith("<tool-error")
-        self.trace.tool_events.append(ToolEvent(server, call.tool, sw.elapsed,
-                                                ok, self.world.clock.now()))
-        return result
+    @property
+    def team(self) -> Dict[str, List]:
+        return self.server_tools
 
     def _orchestrate(self, task: str, phase: str, fact_sheet, plan, progress,
                      replans: int, schema=None):
         team_text = "\n".join(f"{s}: {AGENT_DESCRIPTIONS.get(s, s)}"
                               for s in self.team)
-        self._overhead(f"orchestrator-{phase}")
-        return self.backend.complete(LLMRequest(
+        self.overhead(f"orchestrator-{phase}")
+        return self.complete(LLMRequest(
             agent="orchestrator", system=ORCH_SYSTEM,
             messages=[{"role": "user", "content":
                        f"Task: {task}\nTeam:\n{team_text}\n"
@@ -104,7 +81,7 @@ class MagenticOneRunner:
                   "fact_sheet": fact_sheet, "plan": plan,
                   "progress": progress, "replans": replans}))
 
-    def run(self, task: str) -> Dict:
+    def _run(self, task: str) -> RunOutcome:
         progress: List[Dict] = []
         self._shared: List[str] = []
         facts = self._orchestrate(task, "facts", None, None, progress, 0,
@@ -112,6 +89,7 @@ class MagenticOneRunner:
         plan = self._orchestrate(task, "plan", facts, None, progress, 0,
                                  schema=LEDGER_PLAN_SCHEMA
                                  ).decision.structured["plan"]
+        self.emit(PlanProduced(t=self.now(), index=0, plan=plan))
 
         replans = 0
         step_idx = 0
@@ -122,11 +100,12 @@ class MagenticOneRunner:
             if server not in self.team:
                 step_idx += 1
                 continue
+            self.emit(StageStarted(t=self.now(), index=step_idx, name=step))
             history: List[Dict] = []
             outcome = None
-            for _ in range(MAX_SPECIALIST_STEPS):
-                self._overhead(f"{server}-dispatch")
-                resp = self.backend.complete(LLMRequest(
+            for _ in range(self.config.max_steps):
+                self.overhead(f"{server}-dispatch")
+                resp = self.complete(LLMRequest(
                     agent=f"{server}_agent",
                     system=AGENT_DESCRIPTIONS.get(server, server),
                     messages=[{"role": "user", "content":
@@ -144,13 +123,20 @@ class MagenticOneRunner:
                           "replans": replans}))
                 d = resp.decision
                 if d.tool_call is not None:
-                    result = self._invoke(server, d.tool_call)
+                    # specialists are confined to their own server: the
+                    # call routes there regardless of what the decision
+                    # names (then through the unified validation path)
+                    call = ToolCall(server, d.tool_call.tool,
+                                    d.tool_call.args)
+                    result = self.invoke(call)
                     history.append({"tool": d.tool_call.tool,
                                     "args": d.tool_call.args,
                                     "result": result})
                 else:
                     outcome = d.structured or {"result": d.text, "done": True}
                     break
+            if outcome:
+                self.reflect(step_idx, outcome)
             progress.append({"step": step, "outcome":
                              (outcome or {}).get("result", "")[:500]})
             if outcome and outcome.get("result"):
@@ -159,7 +145,8 @@ class MagenticOneRunner:
                 # the orchestrator marks the task complete immediately —
                 # later plan steps (e.g. verification) never execute (§6.4)
                 break
-            if outcome and outcome.get("replan") and replans < MAX_REPLANS:
+            if outcome and outcome.get("replan") \
+                    and replans < self.config.max_replans:
                 replans += 1
                 facts = self._orchestrate(task, "update-facts", facts, plan,
                                           progress, replans,
@@ -169,11 +156,13 @@ class MagenticOneRunner:
                                          progress, replans,
                                          schema=LEDGER_PLAN_SCHEMA
                                          ).decision.structured["plan"]
+                self.emit(PlanProduced(t=self.now(), index=replans,
+                                       plan=plan))
                 step_idx = 0
                 continue
             step_idx += 1
 
         final = self._orchestrate(task, "final", facts, plan, progress,
                                   replans).decision.text
-        return {"plan": plan, "final": final, "replans": replans,
-                "completed": final is not None}
+        return RunOutcome(completed=final is not None, data={
+            "plan": plan, "final": final, "replans": replans})

@@ -2,74 +2,45 @@
 variant — action + observation loop over a single shared context window
 (the paper's implementation omits the explicit thought step), with the
 default try-until-success recovery capped at 25 iterations.
+
+Plumbing lives in :class:`repro.core.runtime.AgentRuntime`; this module is
+the loop only.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from ..env.clock import Stopwatch
-from ..env.world import World
-from ..mcp.client import McpClient, ToolHandle
-from .llm import LLMBackend, LLMRequest, ToolCall
-from .metrics import FrameworkEvent, ToolEvent, Trace
+from .llm import LLMRequest
+from .runtime import (AgentRuntime, PatternConfig, RunOutcome,
+                      register_pattern)
 
 REACT_SYSTEM = (
     "You are a helpful agent. Use the available tools to complete the "
     "user's task. When the task is complete, respond with the Final Answer.")
 
-MAX_ITERATIONS = 25
-FRAMEWORK_OVERHEAD_S = 0.012
 
-
-class ReActRunner:
+@register_pattern("react", tags=("paper",), rank=10)
+class ReActRunner(AgentRuntime):
     pattern = "react"
+    default_config = PatternConfig(max_steps=25, overhead_local_s=0.012,
+                                   overhead_faas_s=0.012)
 
-    def __init__(self, backend: LLMBackend, clients: Dict[str, McpClient],
-                 world: World, trace: Trace, deployment: str = "local"):
-        self.backend = backend
-        self.clients = clients
-        self.world = world
-        self.trace = trace
-        self.deployment = deployment
-        self.tools: List[ToolHandle] = []
-        self.tool_server: Dict[str, str] = {}
-        for server, client in clients.items():
-            for h in client.list_tools():
-                self.tools.append(h)
-                self.tool_server[h.name] = server
-
-    def _invoke(self, call: ToolCall) -> str:
-        server = call.server or self.tool_server.get(call.tool, "")
-        client = self.clients.get(server)
-        with Stopwatch(self.world.clock) as sw:
-            if client is None:
-                result = f"<tool-error unknown tool {call.tool!r}>"
-            else:
-                result = client.call_tool(call.tool, call.args)
-        ok = not result.startswith("<tool-error")
-        self.trace.tool_events.append(ToolEvent(server, call.tool, sw.elapsed,
-                                                ok, self.world.clock.now()))
-        return result
-
-    def run(self, task: str) -> Dict:
+    def _run(self, task: str) -> RunOutcome:
         # single ever-growing message history: every raw tool output is
         # appended and re-sent on every inference (the paper's input-token
         # blowup, §5.4.3)
         messages: List[Dict[str, str]] = [{"role": "user", "content": task}]
         history: List[Dict] = []
         final = None
-        for it in range(MAX_ITERATIONS):
-            self.world.clock.sleep(FRAMEWORK_OVERHEAD_S)
-            self.trace.framework_events.append(
-                FrameworkEvent("graph-step", FRAMEWORK_OVERHEAD_S,
-                               self.world.clock.now()))
-            resp = self.backend.complete(LLMRequest(
+        for it in range(self.config.max_steps):
+            self.overhead("graph-step")
+            resp = self.complete(LLMRequest(
                 agent="react", system=REACT_SYSTEM, messages=messages,
                 tools=self.tools,
                 meta={"task": task, "history": history, "iteration": it}))
             d = resp.decision
             if d.tool_call is not None:
-                result = self._invoke(d.tool_call)
+                result = self.invoke(d.tool_call)
                 history.append({"tool": d.tool_call.tool,
                                 "args": d.tool_call.args, "result": result})
                 messages.append({"role": "assistant",
@@ -78,5 +49,5 @@ class ReActRunner:
             else:
                 final = d.text
                 break
-        return {"final": final, "iterations": len(history),
-                "completed": final is not None}
+        return RunOutcome(completed=final is not None, data={
+            "final": final, "iterations": len(history)})

@@ -1,0 +1,304 @@
+"""Shared agent runtime + workflow-pattern registry (paper §3's
+"orchestrator between the agents", factored out of the patterns).
+
+Every workflow pattern (AgentX, ReAct, Magentic-One, and their variants)
+subclasses :class:`AgentRuntime`, which owns the pieces the paper's
+orchestrator provides to all of them:
+
+  * the tool registry built from ``Dict[str, McpClient]`` (flat handle
+    list, tool -> server index, per-server tool sets),
+  * a single validated :meth:`AgentRuntime.invoke` path — virtual-time
+    Stopwatch, ``ToolEvent`` accounting, and identical unknown-server /
+    unknown-tool errors for every pattern,
+  * framework-overhead accounting (:meth:`AgentRuntime.overhead`) driven
+    by the pattern's :class:`PatternConfig`,
+  * the typed :class:`RunEvent` stream (``emit`` / ``subscribe``) with the
+    ``Trace`` kept in sync by reduction,
+  * the :class:`RunOutcome` return contract of :meth:`AgentRuntime.run`.
+
+Subclasses implement only ``_run(task)`` — their control flow.
+
+Patterns self-register under a name with knob overrides; a new variant is
+one decorator instead of a runner-table edit::
+
+    from repro.core.runtime import (AgentRuntime, PatternConfig,
+                                    register_pattern, resolve_pattern)
+
+    @register_pattern("agentx-cot", cot=True)
+    @register_pattern("agentx", tags=("paper",))
+    class AgentXRunner(AgentRuntime):
+        pattern = "agentx"
+        default_config = PatternConfig(max_steps=14,
+                                       overhead_local_s=0.18,
+                                       overhead_faas_s=0.16)
+
+        def _run(self, task):
+            ...
+            return RunOutcome(completed=True, data={...})
+
+Driving a run end-to-end goes through the Session API::
+
+    from repro.apps.session import RunSpec, Session
+
+    session = Session()
+    result = session.execute(RunSpec("web_search", "quantum", "agentx"))
+    batch = session.execute_many(
+        [RunSpec("web_search", "quantum", "agentx", seed=s)
+         for s in range(8)], max_workers=4)
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional
+
+from ..env.clock import Stopwatch
+from ..env.world import World
+from ..mcp.client import McpClient, ToolHandle
+from .events import (LLMCompleted, OverheadIncurred, ReflectionEmitted,
+                     RunCompleted, RunEvent, RunStarted, ToolInvoked,
+                     reduce_into_trace)
+from .llm import LLMBackend, LLMRequest, LLMResponse, ToolCall
+from .metrics import FrameworkEvent, LLMEvent, ToolEvent, Trace
+
+
+# ---------------------------------------------------------------------------
+# configuration + outcome contract
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternConfig:
+    """The knobs a workflow pattern exposes (previously per-module magic
+    constants)."""
+    name: str = ""
+    max_steps: int = 14          # tool-loop cap (per stage / specialist / run)
+    overhead_local_s: float = 0.0
+    overhead_faas_s: float = 0.0
+    overhead_jitter: bool = False   # multiplicative jitter on overhead
+    max_replans: int = 0            # recovery budget (Magentic-One)
+    cot: bool = False               # CoT pre-reasoning (§7 future work)
+    parallel_stages: bool = False   # concurrent independent stages (§7)
+    tags: tuple = ()
+    rank: int = 50                  # listing order (import-order independent)
+
+    def overhead_s(self, deployment: str) -> float:
+        return (self.overhead_faas_s if deployment != "local"
+                else self.overhead_local_s)
+
+
+class RunOutcome(Mapping):
+    """Typed return contract of ``AgentRuntime.run``.
+
+    Mapping access is kept for back-compat with the historical
+    ``run(task) -> Dict`` contract: ``outcome["summaries"]``,
+    ``outcome.get("completed")`` etc. keep working.
+    """
+
+    def __init__(self, completed: bool, data: Optional[Dict[str, Any]] = None):
+        self.completed = bool(completed)
+        self.data: Dict[str, Any] = dict(data or {})
+
+    def __getitem__(self, key: str) -> Any:
+        if key == "completed":
+            return self.completed
+        return self.data[key]
+
+    def __iter__(self) -> Iterator[str]:
+        yield "completed"
+        yield from self.data
+
+    def __len__(self) -> int:
+        return 1 + len(self.data)
+
+    def __repr__(self) -> str:
+        return f"RunOutcome(completed={self.completed}, data={self.data!r})"
+
+
+# ---------------------------------------------------------------------------
+# the shared runtime
+
+
+class AgentRuntime:
+    """Base class for workflow patterns: owns tools, invocation, overhead
+    accounting and the event stream; subclasses implement ``_run``."""
+
+    pattern = "base"
+    default_config = PatternConfig()
+
+    def __init__(self, backend: LLMBackend, clients: Dict[str, McpClient],
+                 world: World, trace: Trace, deployment: str = "local",
+                 config: Optional[PatternConfig] = None,
+                 on_event: Optional[Callable[[RunEvent], None]] = None,
+                 **overrides):
+        cfg = config if config is not None else type(self).default_config
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.config = cfg
+        self.backend = backend
+        self.clients = clients
+        self.world = world
+        self.trace = trace
+        self.deployment = deployment
+        self.events: List[RunEvent] = []
+        self._subscribers: List[Callable[[RunEvent], None]] = []
+        if on_event is not None:
+            self._subscribers.append(on_event)
+
+        # tool registry: flat handles, tool -> server, per-server tool names
+        self.tools: List[ToolHandle] = []
+        self.tool_server: Dict[str, str] = {}
+        self.server_tools: Dict[str, List[ToolHandle]] = {}
+        for server, client in clients.items():
+            handles = client.list_tools()
+            self.server_tools[server] = handles
+            for h in handles:
+                self.tools.append(h)
+                self.tool_server[h.name] = server
+
+    # -- events ------------------------------------------------------------
+    def subscribe(self, fn: Callable[[RunEvent], None]) -> None:
+        self._subscribers.append(fn)
+
+    def emit(self, event: RunEvent) -> None:
+        self.events.append(event)
+        reduce_into_trace(event, self.trace)
+        for fn in self._subscribers:
+            fn(event)
+
+    def now(self) -> float:
+        return self.world.clock.now()
+
+    # -- LLM completion through the runtime (event-emitting) ---------------
+    def complete(self, request: LLMRequest) -> LLMResponse:
+        n0 = len(self.trace.llm_events)
+        resp = self.backend.complete(request)
+        if len(self.trace.llm_events) > n0:
+            ev = self.trace.llm_events[-1]
+        else:  # backend that does not log to the shared trace
+            ev = LLMEvent(request.agent, resp.input_tokens,
+                          resp.output_tokens, resp.latency, self.now())
+            self.trace.llm_events.append(ev)
+        self.emit(LLMCompleted(t=self.now(), event=ev))
+        return resp
+
+    # -- framework-overhead accounting --------------------------------------
+    def overhead(self, what: str) -> None:
+        dt = self.config.overhead_s(self.deployment)
+        if self.config.overhead_jitter:
+            dt *= 0.6 + 0.8 * self.world.latency.rng.random()
+        self.world.clock.sleep(dt)
+        self.emit(OverheadIncurred(
+            t=self.now(), event=FrameworkEvent(what, dt, self.now())))
+
+    # -- the single validated tool-invocation path ---------------------------
+    def invoke(self, call: ToolCall) -> str:
+        """Validate server AND tool name identically for every pattern,
+        then dispatch with virtual-time accounting."""
+        server = call.server or self.tool_server.get(call.tool, "")
+        client = self.clients.get(server)
+        with Stopwatch(self.world.clock) as sw:
+            if client is None:
+                result = (f"<tool-error unknown server {server!r} for tool "
+                          f"{call.tool!r}>")
+            elif not any(h.name == call.tool
+                         for h in self.server_tools.get(server, [])):
+                result = f"<tool-error unknown tool {call.tool!r}>"
+            else:
+                result = client.call_tool(call.tool, call.args)
+        ok = not result.startswith("<tool-error")
+        self.emit(ToolInvoked(
+            t=self.now(),
+            event=ToolEvent(server, call.tool, sw.elapsed, ok, self.now())))
+        return result
+
+    # -- run contract --------------------------------------------------------
+    def run(self, task: str) -> RunOutcome:
+        self.emit(RunStarted(t=self.now(), pattern=self.config.name
+                             or self.pattern, task=task))
+        try:
+            outcome = self._run(task)
+        except Exception:
+            # pattern-level crash: still terminate the event stream so
+            # live observers (RunMonitor) don't leak in-flight runs
+            self.emit(RunCompleted(t=self.now(), completed=False, data={}))
+            raise
+        self.emit(RunCompleted(t=self.now(), completed=outcome.completed,
+                               data=outcome.data))
+        return outcome
+
+    def _run(self, task: str) -> RunOutcome:
+        raise NotImplementedError
+
+    # -- small conveniences shared by patterns -------------------------------
+    def reflect(self, index: int, reflection: Dict[str, Any]) -> None:
+        self.emit(ReflectionEmitted(t=self.now(), index=index,
+                                    reflection=reflection))
+
+
+# ---------------------------------------------------------------------------
+# pattern registry
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredPattern:
+    name: str
+    runner_cls: type
+    config: PatternConfig
+
+
+_REGISTRY: Dict[str, RegisteredPattern] = {}
+_BUILTINS_LOADED = False
+_BUILTINS_LOCK = threading.Lock()
+
+
+def register_pattern(name: str, *, tags: tuple = (), **overrides):
+    """Class decorator registering a runner class under ``name`` with
+    ``PatternConfig`` overrides. Stack decorators for variants."""
+    def deco(cls):
+        cfg = dataclasses.replace(cls.default_config, name=name,
+                                  tags=tuple(tags), **overrides)
+        _REGISTRY[name] = RegisteredPattern(name, cls, cfg)
+        return cls
+    return deco
+
+
+def _ensure_builtins() -> None:
+    """Import the built-in pattern modules (registration side effect).
+    Listing order comes from ``PatternConfig.rank``, so it is independent
+    of which pattern module gets imported first. Lock-guarded: the first
+    resolve may happen concurrently from ``execute_many`` workers."""
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    with _BUILTINS_LOCK:
+        if _BUILTINS_LOADED:
+            return
+        from . import react, agentx, magentic  # noqa: F401
+        _BUILTINS_LOADED = True
+
+
+def resolve_pattern(name: str) -> RegisteredPattern:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown pattern {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def pattern_names(tag: Optional[str] = None) -> List[str]:
+    _ensure_builtins()
+    named = [(rp.config.rank, n) for n, rp in _REGISTRY.items()
+             if tag is None or tag in rp.config.tags]
+    return [n for _, n in sorted(named)]
+
+
+def create_runner(name: str, backend: LLMBackend,
+                  clients: Dict[str, McpClient], world: World, trace: Trace,
+                  deployment: str = "local",
+                  on_event: Optional[Callable[[RunEvent], None]] = None
+                  ) -> AgentRuntime:
+    rp = resolve_pattern(name)
+    return rp.runner_cls(backend, clients, world, trace,
+                         deployment=deployment, config=rp.config,
+                         on_event=on_event)

@@ -12,7 +12,8 @@ from typing import Any, Dict, List, Optional
 
 from ..env.world import World
 from .protocol import (METHOD_CALL_TOOL, METHOD_DELETE, METHOD_INITIALIZE,
-                       METHOD_LIST_TOOLS, McpRequest, McpResponse, ToolSpec)
+                       METHOD_LIST_TOOLS, McpRequest, McpResponse,
+                       RequestIdGenerator, ToolSpec)
 from .server import MCPServer, ToolContext
 
 
@@ -76,9 +77,12 @@ class McpClient:
         self.server_name = server_name
         self.session_id: Optional[str] = None
         self.call_log: List[Dict[str, Any]] = []
+        # per-client JSON-RPC ids: concurrent runs never interleave wire ids
+        self._ids = RequestIdGenerator()
 
     def initialize(self) -> str:
-        resp = self.transport.send(McpRequest(METHOD_INITIALIZE, {}))
+        resp = self.transport.send(McpRequest(METHOD_INITIALIZE, {},
+                                              id=self._ids.next()))
         if not resp.ok:
             raise RuntimeError(f"initialize failed: {resp.error}")
         self.session_id = resp.session_id
@@ -86,6 +90,7 @@ class McpClient:
 
     def list_tools(self) -> List[ToolHandle]:
         resp = self.transport.send(McpRequest(METHOD_LIST_TOOLS, {},
+                                              id=self._ids.next(),
                                               session_id=self.session_id))
         if not resp.ok:
             raise RuntimeError(f"tools/list failed: {resp.error}")
@@ -98,7 +103,7 @@ class McpClient:
     def call_tool(self, name: str, args: Dict[str, Any]) -> str:
         req = McpRequest(METHOD_CALL_TOOL,
                          {"name": name, "arguments": args},
-                         session_id=self.session_id)
+                         id=self._ids.next(), session_id=self.session_id)
         resp = self.transport.send(req)
         self.call_log.append({"tool": name, "args": args, "ok": resp.ok})
         if not resp.ok:
@@ -110,5 +115,6 @@ class McpClient:
     def close(self):
         if self.session_id:
             self.transport.send(McpRequest(METHOD_DELETE, {},
+                                           id=self._ids.next(),
                                            session_id=self.session_id))
             self.session_id = None

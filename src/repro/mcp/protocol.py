@@ -13,7 +13,21 @@ import json
 from typing import Any, Callable, Dict, List, Optional
 
 JSONRPC = "2.0"
-_ids = itertools.count(1)
+
+
+class RequestIdGenerator:
+    """Per-client JSON-RPC id sequence (1, 2, 3, ...).
+
+    Each ``McpClient`` owns one, so concurrent runs (``execute_many``)
+    produce deterministic, non-interleaved wire traces — there is no
+    process-global counter shared across clients.
+    """
+
+    def __init__(self) -> None:
+        self._ids = itertools.count(1)
+
+    def next(self) -> int:
+        return next(self._ids)
 
 
 @dataclasses.dataclass
@@ -60,7 +74,7 @@ class PromptSpec:
 class McpRequest:
     method: str
     params: Dict[str, Any]
-    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    id: int = 0
     session_id: Optional[str] = None
 
     def to_json(self) -> str:

@@ -1,2 +1,2 @@
-from .engine import Engine, GenerationResult, pad_cache_to
+from .engine import Engine, GenerationResult, RunMonitor, pad_cache_to
 from .scheduler import BatchScheduler

@@ -9,12 +9,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..core import events as run_events
 from ..data.tokenizer import HashTokenizer
 from ..models.model import decode_step, init_cache, prefill
 from ..models.params import init_params
@@ -68,6 +70,78 @@ class GenerationResult:
     prompt_tokens: int
     new_tokens: int
     token_ids: List[int]
+
+
+class RunMonitor:
+    """Live serving-side observer of agent runs.
+
+    Subscribe it to the orchestration event stream
+    (``Session(on_event=RunMonitor())``) and it aggregates in-flight
+    demand on the serving engine — LLM calls, token volume, tool and
+    framework activity — *while* runs execute, instead of post-hoc trace
+    mining. Thread-safe: ``Session.execute_many`` delivers events from
+    worker threads.
+
+    ``runs_succeeded`` counts pattern-level completion
+    (``RunCompleted.completed``); artifact location and judge gating
+    happen after the run, so it can exceed the number of runs whose
+    ``RunResult.success`` is True.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.runs_started = 0
+        self.runs_completed = 0
+        self.runs_succeeded = 0
+        self.llm_calls = 0
+        self.input_tokens = 0
+        self.output_tokens = 0
+        self.tool_calls = 0
+        self.tool_errors = 0
+        self.framework_events = 0
+        self.calls_per_agent: Dict[str, int] = {}
+
+    def __call__(self, event) -> None:
+        ev = run_events   # alias: keep the isinstance chain readable
+        with self._lock:
+            if isinstance(event, ev.RunStarted):
+                self.runs_started += 1
+            elif isinstance(event, ev.RunCompleted):
+                self.runs_completed += 1
+                self.runs_succeeded += bool(event.completed)
+            elif isinstance(event, ev.LLMCompleted):
+                self.llm_calls += 1
+                self.input_tokens += event.event.input_tokens
+                self.output_tokens += event.event.output_tokens
+                agent = event.event.agent
+                self.calls_per_agent[agent] = \
+                    self.calls_per_agent.get(agent, 0) + 1
+            elif isinstance(event, ev.ToolInvoked):
+                self.tool_calls += 1
+                self.tool_errors += not event.event.ok
+            elif isinstance(event, ev.OverheadIncurred):
+                self.framework_events += 1
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self.runs_started - self.runs_completed
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "runs_started": self.runs_started,
+                "runs_completed": self.runs_completed,
+                "runs_succeeded": self.runs_succeeded,
+                "in_flight": self.runs_started - self.runs_completed,
+                "llm_calls": self.llm_calls,
+                "input_tokens": self.input_tokens,
+                "output_tokens": self.output_tokens,
+                "tool_calls": self.tool_calls,
+                "tool_errors": self.tool_errors,
+                "framework_events": self.framework_events,
+                "calls_per_agent": dict(self.calls_per_agent),
+            }
 
 
 class Engine:

@@ -1,0 +1,256 @@
+"""Unified orchestration API tests: pattern registry, run-event stream /
+Trace parity, Session.execute_many determinism, unified tool validation,
+and per-client JSON-RPC ids."""
+import dataclasses
+
+import pytest
+
+from repro.apps.runner import PATTERNS, run_app
+from repro.apps.session import RunSpec, Session
+from repro.core.events import (LLMCompleted, RunCompleted, RunStarted,
+                               ToolInvoked, derive_trace)
+from repro.core.llm import ToolCall
+from repro.core.metrics import Trace
+from repro.core.runtime import (AgentRuntime, PatternConfig, RunOutcome,
+                                create_runner, pattern_names,
+                                register_pattern, resolve_pattern)
+from repro.env.world import World
+from repro.faas.deployments import deploy_local
+
+OLD_PATTERNS = ["agentx", "agentx-cot", "agentx-parallel",
+                "agentx-cot-parallel", "react", "magentic"]
+
+
+# -- registry ---------------------------------------------------------------
+
+
+def test_registry_round_trip_old_names():
+    """Every name in the old PATTERNS dict resolves through the registry
+    and via the back-compat mapping view."""
+    for name in OLD_PATTERNS:
+        rp = resolve_pattern(name)
+        assert rp.name == name
+        assert issubclass(rp.runner_cls, AgentRuntime)
+        assert PATTERNS[name] is not None
+    assert set(OLD_PATTERNS) == set(PATTERNS)
+
+
+def test_registry_variant_configs():
+    assert resolve_pattern("agentx").config.cot is False
+    assert resolve_pattern("agentx-cot").config.cot is True
+    assert resolve_pattern("agentx-parallel").config.parallel_stages is True
+    cp = resolve_pattern("agentx-cot-parallel").config
+    assert cp.cot and cp.parallel_stages
+    assert resolve_pattern("react").config.max_steps == 25
+    mag = resolve_pattern("magentic").config
+    assert mag.max_replans == 3 and mag.overhead_jitter
+
+
+def test_registry_paper_tag_and_unknown():
+    assert pattern_names(tag="paper") == ["react", "agentx", "magentic"]
+    with pytest.raises(KeyError):
+        resolve_pattern("nope")
+
+
+def test_register_pattern_decorator_one_liner_variant():
+    from repro.core import runtime as rt
+
+    @register_pattern("test-react-short", max_steps=2)
+    class _Short(resolve_pattern("react").runner_cls):
+        pass
+
+    try:
+        rp = resolve_pattern("test-react-short")
+        assert rp.config.max_steps == 2
+        r = Session().execute(RunSpec("web_search", "quantum",
+                                      "test-react-short", seed=0))
+        # 2 iterations are not enough to finish the web-search loop
+        assert not r.success
+    finally:
+        rt._REGISTRY.pop("test-react-short", None)
+
+
+# -- events / trace ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", ["agentx", "react", "magentic"])
+def test_event_stream_trace_parity(pattern):
+    """The Trace is derivable from the run-event stream: same LLM, tool
+    and framework events, in order."""
+    r = run_app("web_search", "quantum", pattern, "local", seed=3)
+    events = r.extras["events"]
+    assert isinstance(events[0], RunStarted)
+    assert isinstance(events[-1], RunCompleted)
+    derived = derive_trace(events)
+    assert derived.llm_events == r.trace.llm_events
+    assert derived.tool_events == r.trace.tool_events
+    assert derived.framework_events == r.trace.framework_events
+    assert derived.input_tokens == r.trace.input_tokens
+    assert derived.llm_cost == r.trace.llm_cost
+
+
+def test_live_event_observation():
+    seen = []
+    session = Session(on_event=seen.append)
+    r = session.execute(RunSpec("web_search", "quantum", "agentx", seed=3))
+    assert seen == r.extras["events"]
+    assert sum(isinstance(e, LLMCompleted) for e in seen) \
+        == r.trace.agent_invocations
+    assert sum(isinstance(e, ToolInvoked) for e in seen) \
+        == r.trace.tool_invocations
+
+
+def test_crashing_run_still_terminates_event_stream():
+    """A pattern-level crash is a supported path (Session catches it);
+    the event stream must still end with RunCompleted so live observers
+    don't leak in-flight runs."""
+    def boom(world, policy, trace):
+        class _Boom:
+            def complete(self, request):
+                raise RuntimeError("backend down")
+        return _Boom()
+
+    r = Session().execute(RunSpec("web_search", "quantum", "react",
+                                  backend_factory=boom))
+    assert not r.success
+    assert "backend down" in r.failure_reason
+    events = r.extras["events"]
+    assert isinstance(events[-1], RunCompleted)
+    assert events[-1].completed is False
+
+
+def test_non_trace_logging_backend_keeps_trace_event_parity():
+    """A backend that doesn't append to the shared Trace still yields a
+    Trace consistent with the event stream (the runtime back-fills)."""
+    from repro.core.llm import Decision, LLMResponse
+
+    def quiet(world, policy, trace):
+        class _Quiet:
+            def complete(self, request):
+                world.clock.sleep(0.5)
+                return LLMResponse(Decision(text="Final Answer: done"),
+                                   input_tokens=10, output_tokens=5,
+                                   latency=0.5)
+        return _Quiet()
+
+    r = Session().execute(RunSpec("web_search", "quantum", "react",
+                                  backend_factory=quiet))
+    assert r.trace.agent_invocations == 1
+    assert (r.trace.input_tokens, r.trace.output_tokens) == (10, 5)
+    derived = derive_trace(r.extras["events"])
+    assert derived.llm_events == r.trace.llm_events
+
+
+def test_run_outcome_mapping_contract():
+    out = RunOutcome(completed=True, data={"final": "x"})
+    assert out["completed"] is True
+    assert out.get("final") == "x"
+    assert out.get("missing", 42) == 42
+    assert set(out) == {"completed", "final"}
+    assert len(out) == 2
+
+
+# -- batch executor ---------------------------------------------------------
+
+
+def _fingerprint(r):
+    return (r.app, r.instance, r.pattern, r.deployment, r.success,
+            r.total_latency, r.trace.input_tokens, r.trace.output_tokens,
+            r.trace.llm_cost, r.faas_cost, r.failure_reason)
+
+
+def test_execute_many_matches_serial():
+    """Same RunResult metrics regardless of max_workers (bit-identical)."""
+    specs = [RunSpec("web_search", "quantum", p, d, seed=s)
+             for p in ("react", "agentx")
+             for d in ("local", "faas")
+             for s in (0, 1)]
+    session = Session()
+    serial = session.execute_many(specs, max_workers=1)
+    pooled = session.execute_many(specs, max_workers=4)
+    assert [_fingerprint(r) for r in serial] \
+        == [_fingerprint(r) for r in pooled]
+
+
+def test_run_until_n_successes_via_session():
+    session = Session()
+    succ, runs = session.run_until_n_successes(
+        RunSpec("web_search", "quantum", "react"), n=3, max_runs=10)
+    assert len(succ) == 3 and len(runs) >= 3
+
+
+# -- unified tool validation ------------------------------------------------
+
+
+def _make_runner(pattern):
+    world = World(seed=0)
+    clients, _ = deploy_local(world, ["serper", "fetch"])
+    trace = Trace()
+
+    class _NullBackend:
+        def complete(self, request):
+            raise AssertionError("not used")
+
+    return create_runner(pattern, _NullBackend(), clients, world, trace,
+                         deployment="local"), trace
+
+
+@pytest.mark.parametrize("pattern", ["agentx", "react", "magentic"])
+def test_invoke_rejects_unknown_server_and_tool(pattern):
+    """All patterns validate both server and tool name identically —
+    including ReAct, which previously only errored on server lookup."""
+    runner, trace = _make_runner(pattern)
+    # unknown server, explicit
+    out = runner.invoke(ToolCall("nosuch", "google_search", {}))
+    assert out.startswith("<tool-error") and "unknown server" in out
+    # known server, tool never registered there
+    out = runner.invoke(ToolCall("serper", "not_a_tool", {}))
+    assert out.startswith("<tool-error") and "unknown tool" in out
+    # unknown tool with no server hint
+    out = runner.invoke(ToolCall("", "not_a_tool", {}))
+    assert out.startswith("<tool-error")
+    # all three attempts were accounted as failed tool events
+    assert [e.ok for e in trace.tool_events] == [False, False, False]
+    # a valid call still works
+    ok = runner.invoke(ToolCall("serper", "google_search",
+                                {"query": "quantum", "num_results": 2}))
+    assert not ok.startswith("<tool-error")
+    assert trace.tool_events[-1].ok
+
+
+def test_runtime_has_no_per_pattern_invoke_overrides():
+    """Zero duplicated plumbing: the runner subclasses share the base
+    implementation of invoke/overhead/complete and the tool registry."""
+    for name in ("agentx", "react", "magentic"):
+        cls = resolve_pattern(name).runner_cls
+        for method in ("invoke", "overhead", "complete", "run", "__init__"):
+            assert getattr(cls, method) is getattr(AgentRuntime, method), \
+                (name, method)
+
+
+# -- per-client JSON-RPC ids -------------------------------------------------
+
+
+def test_jsonrpc_ids_are_per_client():
+    world = World(seed=0)
+    clients, _ = deploy_local(world, ["serper", "fetch"])
+    ids = {}
+    for name, client in clients.items():
+        ids[name] = [client._ids.next() for _ in range(3)]
+    # both clients continue from their own sequence (initialize happened
+    # during deploy), unaffected by each other's traffic
+    assert ids["serper"] == ids["fetch"]
+    assert ids["serper"][0] == 2  # initialize consumed id 1
+
+
+def test_overhead_and_config_knobs():
+    runner, trace = _make_runner("magentic")
+    assert runner.config.overhead_jitter
+    runner.overhead("test-dispatch")
+    assert len(trace.framework_events) == 1
+    ev = trace.framework_events[0]
+    # jittered: dt in [0.6, 1.4] * 2.6
+    assert 0.6 * 2.6 <= ev.latency <= 1.4 * 2.6
+    cfg = dataclasses.replace(PatternConfig(), overhead_local_s=1.0)
+    assert cfg.overhead_s("local") == 1.0
+    assert cfg.overhead_s("faas") == 0.0
