@@ -10,6 +10,11 @@ until-N-successes protocol is inherently serial (the seed sequence depends
 on earlier outcomes), but combos are independent: pass ``max_workers > 1``
 to fan them out across a thread pool. Records are assembled in
 deterministic combo order regardless of worker count.
+
+The session carries a content-addressed ``RunCache``: a re-invocation of
+``run_sweep`` (e.g. ``--force`` figure regeneration) on a warm session
+replays stored RunResults instead of re-executing runs.  Pass your own
+``session=`` to share that cache across sweeps.
 """
 from __future__ import annotations
 
@@ -17,9 +22,10 @@ import json
 import os
 import statistics
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.apps.apps import APPS
+from repro.apps.cache import RunCache
 from repro.apps.session import RunSpec, Session, score_run
 from repro.core.runtime import pattern_names
 
@@ -62,11 +68,12 @@ def _run_combo(session: Session, spec: RunSpec) -> List[Dict]:
 
 
 def run_sweep(full: bool = True, deployments=None, force: bool = False,
-              max_workers: int = 1) -> List[Dict]:
+              max_workers: int = 1,
+              session: Optional[Session] = None) -> List[Dict]:
     if os.path.exists(CACHE) and not force:
         return json.load(open(CACHE))
     deployments = deployments or DEPLOYMENTS
-    session = Session()
+    session = session if session is not None else Session(cache=RunCache())
     combos: List[RunSpec] = []
     for app_name, app in APPS.items():
         instances = list(app.instances) if full else list(app.instances)[:1]

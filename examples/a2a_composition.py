@@ -1,6 +1,9 @@
 """A2A composition (paper §2.3/§7 future work): MCP gives one agent its
 tools; A2A gives agents each other. A coordinator discovers two remote
-agents by AgentCard and delegates whole sub-workflows to them.
+agents by AgentCard and delegates whole sub-workflows to them — and a
+``RunMonitor`` subscribed on the A2A client observes the *remote* runs'
+event streams, wire-streamed back on the task envelopes, exactly as if
+the runs were in-process.
 
     PYTHONPATH=src python examples/a2a_composition.py
 """
@@ -10,11 +13,13 @@ sys.path.insert(0, "src")
 
 from repro.env.world import World  # noqa: E402
 from repro.mcp.a2a import A2AClient, expose_app_as_agent  # noqa: E402
+from repro.serving.engine import RunMonitor  # noqa: E402
 
 
 def main():
     world = World(seed=3)
-    client = A2AClient(world)
+    monitor = RunMonitor()
+    client = A2AClient(world, on_event=monitor)
 
     researcher = expose_app_as_agent(
         world, "research_report", "agentx", "faas",
@@ -38,6 +43,12 @@ def main():
     print(f"analyst task:    {t2.status}, artifact "
           f"{len(t2.artifacts[0]['text']) if t2.artifacts else 0} chars")
     print(f"coordinator wall time (virtual): {world.clock.now():.1f}s")
+
+    snap = monitor.snapshot()
+    print(f"\nremote runs observed live over the wire: "
+          f"{snap['runs_completed']} runs, {snap['llm_calls']} LLM calls, "
+          f"{snap['tool_calls']} tool calls, "
+          f"{snap['input_tokens']} input tokens")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 """MCP deployment architectures head-to-head (paper Fig. 2 + §4; the
 monolithic-vs-distributed comparison the paper leaves to future work):
 
-  local (Fig. 2a) vs distributed FaaS (Fig. 2c) vs monolithic FaaS (Fig. 2b)
+  local (Fig. 2a) vs distributed FaaS (Fig. 2c) vs monolithic FaaS
+  (Fig. 2b) vs A2A remote delegation (§2.3)
 
 reporting per-call latency, cold starts, and Lambda cost per Eq. 2.
+The deployment list comes straight from the ``@register_deployment``
+registry — registering a new backend adds a row with no edit here.
 
     PYTHONPATH=src python examples/faas_deployments.py
 """
@@ -12,7 +15,9 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.apps.cache import RunCache  # noqa: E402
 from repro.apps.session import RunSpec, Session  # noqa: E402
+from repro.faas.deployments import deployment_names  # noqa: E402
 
 N = 4
 APPS = [("web_search", "materials"), ("stock_correlation", "cola"),
@@ -20,11 +25,11 @@ APPS = [("web_search", "materials"), ("stock_correlation", "cola"),
 
 
 def main():
-    session = Session()
+    session = Session(cache=RunCache())
     print(f"{'app':18s} {'deployment':10s} {'lat_s':>7s} {'tool_s':>7s} "
           f"{'lambda_$':>10s} {'ok':>5s}")
     for app, inst in APPS:
-        for dep in ("local", "faas", "faas-mono"):
+        for dep in deployment_names():
             runs = session.execute_many(
                 [RunSpec(app, inst, "react", dep, seed=s)
                  for s in range(N)], max_workers=N)
@@ -36,7 +41,9 @@ def main():
                   f"{cost:10.6f} {ok}/{N}")
     print("\nmonolithic bills the summed memory footprint per call but "
           "shares one warm container across servers (paper §4's predicted "
-          "trade-off).")
+          "trade-off); a2a pays a task round trip per tool call but needs "
+          "no Lambda platform at all.")
+    print(f"run cache: {session.cache.stats()}")
 
 
 if __name__ == "__main__":

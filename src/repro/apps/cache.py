@@ -1,0 +1,97 @@
+"""Content-addressed run cache: RunSpec fingerprint -> RunResult.
+
+Runs are deterministic per spec (seeded ``World``, virtual clock, stable
+seed derivation), so a completed :class:`RunResult` can be replayed for
+free.  The cache key is a digest over the spec identity PLUS the resolved
+:class:`PatternConfig` fingerprint and :class:`DeploymentCapabilities`
+fingerprint — re-registering a pattern or deployment with different knobs
+invalidates every cached run that used it, with no explicit flush.
+
+    from repro.apps.cache import RunCache
+    from repro.apps.session import RunSpec, Session
+
+    session = Session(cache=RunCache())
+    session.execute(spec)   # miss: executes
+    session.execute(spec)   # hit: returns the stored RunResult
+
+``run_sweep`` re-runs and figure regeneration become near-free once the
+cache is warm.  Specs carrying a ``backend_factory`` are not cacheable
+(arbitrary callables have no stable fingerprint) and always execute.
+
+Entries keep the full ``RunResult`` including ``extras`` (World, policy,
+events) so ``score_run`` works on replayed hits — a warm full-sweep cache
+therefore pins one World per combo.  ``clear()`` releases them; a disk
+layer with slimmed results is future work (see ROADMAP).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from typing import Dict, Optional
+
+from ..core.metrics import RunResult
+
+
+def spec_fingerprint(spec) -> Optional[str]:
+    """Deterministic content address of one run, or ``None`` if the spec
+    is not cacheable (custom ``backend_factory``)."""
+    if spec.backend_factory is not None:
+        return None
+    from ..core.runtime import resolve_pattern
+    from ..faas.deployments import resolve_deployment
+    payload = json.dumps({
+        "app": spec.app,
+        "instance": spec.instance,
+        "pattern": spec.pattern,
+        "deployment": spec.deployment,
+        "seed": spec.seed,
+        "pattern_config": resolve_pattern(spec.pattern).config.fingerprint(),
+        "deployment_caps":
+            resolve_deployment(spec.deployment).capabilities.fingerprint(),
+    }, sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+class RunCache:
+    """Thread-safe in-memory RunResult store addressed by
+    :func:`spec_fingerprint`. Safe under ``Session.execute_many`` worker
+    threads."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._store: Dict[str, RunResult] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Optional[str]) -> Optional[RunResult]:
+        if key is None:
+            return None
+        with self._lock:
+            result = self._store.get(key)
+            if result is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return result
+
+    def put(self, key: Optional[str], result: RunResult) -> None:
+        if key is None:
+            return
+        with self._lock:
+            self._store[key] = result
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses}

@@ -1,11 +1,14 @@
 """Session / RunSpec orchestration API.
 
 ``RunSpec`` names one end-to-end run (app, instance, pattern, deployment,
-seed); ``Session`` executes specs — one at a time (``execute``) or as a
-thread-pooled batch (``execute_many``). Batch fan-out is safe because each
-run owns its ``World`` (virtual clock, corpora, RNGs), its MCP clients and
-its trace; results are bit-identical to serial execution on the same
-specs.
+seed).  Both the ``pattern`` and the ``deployment`` fields are *registry
+names*: patterns resolve through ``@register_pattern``
+(:mod:`repro.core.runtime`) and deployments through
+``@register_deployment`` (:mod:`repro.faas.deployments`) — ``Session``
+itself never branches on either name.  A run's environment comes from the
+resolved :class:`DeploymentBackend`: ``provision`` builds the MCP clients
+and artifact stores, the backend's :class:`DeploymentCapabilities` shape
+the prompt, and ``teardown``/``cost`` close out the run.
 
     from repro.apps.session import RunSpec, Session
 
@@ -19,10 +22,18 @@ Observers subscribe to the typed run-event stream with
 ``Session(on_event=fn)`` — ``fn`` receives every
 :class:`repro.core.events.RunEvent` live (from worker threads under
 ``execute_many``).
+
+Runs are deterministic per spec: the ``World`` seed derives from a stable
+CRC-32 digest of the spec identity, so identical specs produce identical
+runs across processes.  Pass ``Session(cache=RunCache())`` to memoize
+completed runs content-addressed by spec + config fingerprints
+(:mod:`repro.apps.cache`); cache hits return the stored ``RunResult``
+without re-executing (and therefore without re-emitting events).
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Iterable, List, Optional, Tuple
 
@@ -32,18 +43,18 @@ from ..core.policies import POLICIES
 from ..core.runtime import RunOutcome, create_runner
 from ..env.world import World
 from ..eval.judge import Score, judge_stock, judge_summary
-from ..faas.deployments import (deploy_distributed, deploy_local,
-                                deploy_monolithic)
-from ..faas.platform import FaaSPlatform
+from ..faas.deployments import create_deployment
 from .apps import APPS
+from .cache import RunCache, spec_fingerprint
 
 
 @dataclasses.dataclass(frozen=True)
 class RunSpec:
     """One (app, instance, pattern, deployment, seed) run.
 
-    deployment: "local" (Fig. 2a) | "faas" (distributed, Fig. 2c) |
-    "faas-mono" (monolithic, Fig. 2b — beyond-paper benchmark).
+    deployment: any ``@register_deployment`` name — built-ins are
+    "local" (Fig. 2a), "faas" (distributed, Fig. 2c), "faas-mono"
+    (monolithic, Fig. 2b) and "a2a" (remote delegation).
     """
     app: str
     instance: str
@@ -54,6 +65,18 @@ class RunSpec:
 
     def with_seed(self, seed: int) -> "RunSpec":
         return dataclasses.replace(self, seed=seed)
+
+
+def stable_world_seed(spec: RunSpec) -> int:
+    """Process-independent ``World`` seed for a spec.
+
+    Uses CRC-32 instead of builtin ``hash`` (randomized per process via
+    PYTHONHASHSEED), so identical specs produce identical runs everywhere
+    — the invariant the run cache and cross-process reproducibility rest
+    on.
+    """
+    key = f"{spec.app}/{spec.instance}/{spec.pattern}/{spec.deployment}"
+    return spec.seed * 9176 + zlib.crc32(key.encode()) % 10_000
 
 
 def _artifact(policy, workspace, s3) -> Tuple[Optional[str], Optional[str]]:
@@ -78,43 +101,44 @@ class Session:
     """Executes RunSpecs against fresh per-run environments."""
 
     def __init__(self,
-                 on_event: Optional[Callable] = None):
+                 on_event: Optional[Callable] = None,
+                 cache: Optional[RunCache] = None):
         self.on_event = on_event
+        self.cache = cache
 
     # ------------------------------------------------------------------
     def execute(self, spec: RunSpec,
                 on_event: Optional[Callable] = None) -> RunResult:
-        """Execute one run end-to-end: deploy MCP servers, run the
-        pattern, locate + judge the artifact, account costs."""
-        app = APPS[spec.app]
-        world = World(seed=spec.seed * 9176
-                      + hash((spec.app, spec.instance, spec.pattern,
-                              spec.deployment)) % 10_000)
-        faas = spec.deployment != "local"
-        task = app.prompt(spec.instance, faas)
+        """Execute one run end-to-end: provision the deployment backend,
+        run the pattern, locate + judge the artifact, account costs.
 
-        platform = None
-        workspace = None
-        if spec.deployment == "local":
-            clients, workspace = deploy_local(world, app.servers)
-            s3 = None
-        else:
-            platform = FaaSPlatform(world)
-            if spec.deployment == "faas-mono":
-                clients = deploy_monolithic(world, platform, app.servers)
-            else:
-                clients = deploy_distributed(world, platform, app.servers)
-            s3 = platform.s3
-            platform.reset_accounting()  # deployment cold-starts not billed
-            world.clock.reset()
+        With a warm cache, returns the stored RunResult instead."""
+        key = spec_fingerprint(spec) if self.cache is not None else None
+        if self.cache is not None:
+            hit = self.cache.get(key)
+            if hit is not None:
+                return hit
+        result = self._execute(spec, on_event)
+        if self.cache is not None:
+            self.cache.put(key, result)
+        return result
+
+    def _execute(self, spec: RunSpec,
+                 on_event: Optional[Callable] = None) -> RunResult:
+        app = APPS[spec.app]
+        world = World(seed=stable_world_seed(spec))
+        backend = create_deployment(spec.deployment)
+        task = app.prompt(spec.instance, backend.capabilities.remote)
+        env = backend.provision(world, app.servers)
 
         policy = POLICIES[spec.app](world, task, spec.deployment, spec.seed)
         trace = Trace()
-        backend = (spec.backend_factory(world, policy, trace)
-                   if spec.backend_factory
-                   else OracleLLMBackend(world, policy, trace))
-        runner = create_runner(spec.pattern, backend, clients, world, trace,
+        llm = (spec.backend_factory(world, policy, trace)
+               if spec.backend_factory
+               else OracleLLMBackend(world, policy, trace))
+        runner = create_runner(spec.pattern, llm, env.clients, world, trace,
                                deployment=spec.deployment,
+                               remote=backend.capabilities.remote,
                                on_event=self._combined_observer(on_event))
 
         t0 = world.clock.now()
@@ -126,7 +150,7 @@ class Session:
             failure = f"{type(e).__name__}: {e}"
         total_latency = world.clock.now() - t0
 
-        path, artifact = _artifact(policy, workspace, s3)
+        path, artifact = _artifact(policy, env.workspace, env.s3)
         success = outcome.get("completed", False) and artifact is not None
         if spec.app == "stock_correlation" and artifact is not None:
             score = judge_stock(world, policy.companies, policy.filename,
@@ -135,15 +159,13 @@ class Session:
             if score.attributes["Data Accuracy"] < 20.0:
                 success = False
                 failure = failure or "plot used dummy/fabricated data"
-        for client in clients.values():
-            client.close()
+        backend.teardown()
 
-        faas_cost = platform.total_cost() if platform else 0.0
         return RunResult(app=spec.app, instance=spec.instance,
                          pattern=spec.pattern, deployment=spec.deployment,
                          success=success, total_latency=total_latency,
                          trace=trace, artifact_path=path, artifact=artifact,
-                         faas_cost=faas_cost, failure_reason=failure,
+                         faas_cost=backend.cost(), failure_reason=failure,
                          extras={"world": world, "policy": policy,
                                  "outcome": outcome, "spec": spec,
                                  "events": runner.events})

@@ -12,6 +12,12 @@ harness, ``benchmarks/figures.py``, the serving-side
 full accounting trace (LLM / tool / framework events) from an event list,
 and the runtime keeps its ``Trace`` in sync by reducing every emitted
 event into it.
+
+Events also cross process boundaries: :func:`to_wire` / :func:`from_wire`
+serialize any event to a JSON-safe dict and back, so FaaS / A2A response
+envelopes can carry the full event stream of a remotely executed run and
+a local observer (e.g. ``RunMonitor``) sees exactly what an in-process
+subscriber would.
 """
 from __future__ import annotations
 
@@ -76,6 +82,66 @@ class StageCompleted(RunEvent):
 class RunCompleted(RunEvent):
     completed: bool
     data: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# wire protocol
+
+_EVENT_TYPES: Dict[str, type] = {
+    cls.__name__: cls
+    for cls in (RunStarted, StageStarted, PlanProduced, LLMCompleted,
+                ToolInvoked, OverheadIncurred, ReflectionEmitted,
+                StageCompleted, RunCompleted)
+}
+
+# events whose ``event`` field is a nested metrics dataclass
+_NESTED_EVENT: Dict[str, type] = {
+    "LLMCompleted": LLMEvent,
+    "ToolInvoked": ToolEvent,
+    "OverheadIncurred": FrameworkEvent,
+}
+
+
+def _jsonable(value: Any) -> Any:
+    """Best-effort JSON sanitization: payloads (plans, outcome data) are
+    JSON-shaped in practice; anything exotic degrades to ``repr``."""
+    if isinstance(value, dict):
+        return {str(k): _jsonable(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return value
+    return repr(value)
+
+
+def to_wire(event: RunEvent) -> Dict[str, Any]:
+    """Serialize one event to a JSON-safe dict (``type`` + fields)."""
+    d = _jsonable(dataclasses.asdict(event))
+    d["type"] = type(event).__name__
+    return d
+
+
+def from_wire(d: Dict[str, Any]) -> RunEvent:
+    """Inverse of :func:`to_wire`. Raises ``KeyError`` on unknown type."""
+    d = dict(d)
+    name = d.pop("type")
+    try:
+        cls = _EVENT_TYPES[name]
+    except KeyError:
+        raise KeyError(f"unknown RunEvent type {name!r}; known: "
+                       f"{sorted(_EVENT_TYPES)}") from None
+    nested = _NESTED_EVENT.get(name)
+    if nested is not None:
+        d["event"] = nested(**d["event"])
+    return cls(**d)
+
+
+def events_to_wire(events: List[RunEvent]) -> List[Dict[str, Any]]:
+    return [to_wire(e) for e in events]
+
+
+def events_from_wire(wire: List[Dict[str, Any]]) -> List[RunEvent]:
+    return [from_wire(d) for d in wire]
 
 
 def reduce_into_trace(event: RunEvent, trace: Trace) -> None:

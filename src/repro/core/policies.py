@@ -16,6 +16,18 @@ from typing import Dict, List, Optional
 from .llm import Decision, LLMRequest, ToolCall
 
 
+def _is_remote(deployment: str) -> bool:
+    """Whether tools live off-workstation — from the deployment registry's
+    capability descriptor when the name is registered, else the historical
+    string heuristic (direct policy construction in tests)."""
+    try:
+        # deferred: the deployment registry lives above the core layer
+        from ..faas.deployments import resolve_deployment
+        return resolve_deployment(deployment).capabilities.remote
+    except KeyError:
+        return deployment != "local"
+
+
 def _last(history: List[Dict], tool: str) -> Optional[str]:
     for h in reversed(history):
         if h["tool"] == tool:
@@ -34,7 +46,7 @@ class BasePolicy:
         self.world = world
         self.task = task
         self.deployment = deployment
-        self.faas = deployment != "local"
+        self.faas = _is_remote(deployment)
         self.rng = random.Random(seed)
         self._anom: Dict[str, bool] = {}
 

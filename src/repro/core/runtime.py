@@ -49,6 +49,8 @@ Driving a run end-to-end goes through the Session API::
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import threading
 from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional
 
@@ -66,6 +68,15 @@ from .metrics import FrameworkEvent, LLMEvent, ToolEvent, Trace
 # configuration + outcome contract
 
 
+def stable_fingerprint(config) -> str:
+    """Stable digest of a config dataclass (sorted-JSON SHA-256, 16 hex
+    chars) — the cache-invalidation primitive shared by ``PatternConfig``
+    and ``DeploymentCapabilities``: any knob change changes the digest."""
+    payload = json.dumps(dataclasses.asdict(config), sort_keys=True,
+                         default=repr)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
 @dataclasses.dataclass(frozen=True)
 class PatternConfig:
     """The knobs a workflow pattern exposes (previously per-module magic
@@ -81,9 +92,14 @@ class PatternConfig:
     tags: tuple = ()
     rank: int = 50                  # listing order (import-order independent)
 
-    def overhead_s(self, deployment: str) -> float:
-        return (self.overhead_faas_s if deployment != "local"
-                else self.overhead_local_s)
+    def overhead_s(self, deployment: str,
+                   remote: Optional[bool] = None) -> float:
+        if remote is None:
+            remote = deployment != "local"
+        return self.overhead_faas_s if remote else self.overhead_local_s
+
+    def fingerprint(self) -> str:
+        return stable_fingerprint(self)
 
 
 class RunOutcome(Mapping):
@@ -129,6 +145,7 @@ class AgentRuntime:
                  world: World, trace: Trace, deployment: str = "local",
                  config: Optional[PatternConfig] = None,
                  on_event: Optional[Callable[[RunEvent], None]] = None,
+                 remote: Optional[bool] = None,
                  **overrides):
         cfg = config if config is not None else type(self).default_config
         if overrides:
@@ -139,6 +156,9 @@ class AgentRuntime:
         self.world = world
         self.trace = trace
         self.deployment = deployment
+        # off-workstation tooling: from the deployment backend's capability
+        # descriptor when driven through Session, else the string heuristic
+        self.remote = (deployment != "local") if remote is None else remote
         self.events: List[RunEvent] = []
         self._subscribers: List[Callable[[RunEvent], None]] = []
         if on_event is not None:
@@ -183,7 +203,7 @@ class AgentRuntime:
 
     # -- framework-overhead accounting --------------------------------------
     def overhead(self, what: str) -> None:
-        dt = self.config.overhead_s(self.deployment)
+        dt = self.config.overhead_s(self.deployment, remote=self.remote)
         if self.config.overhead_jitter:
             dt *= 0.6 + 0.8 * self.world.latency.rng.random()
         self.world.clock.sleep(dt)
@@ -296,9 +316,9 @@ def pattern_names(tag: Optional[str] = None) -> List[str]:
 def create_runner(name: str, backend: LLMBackend,
                   clients: Dict[str, McpClient], world: World, trace: Trace,
                   deployment: str = "local",
-                  on_event: Optional[Callable[[RunEvent], None]] = None
-                  ) -> AgentRuntime:
+                  on_event: Optional[Callable[[RunEvent], None]] = None,
+                  remote: Optional[bool] = None) -> AgentRuntime:
     rp = resolve_pattern(name)
     return rp.runner_cls(backend, clients, world, trace,
                          deployment=deployment, config=rp.config,
-                         on_event=on_event)
+                         on_event=on_event, remote=remote)

@@ -11,6 +11,7 @@ import dataclasses
 import hashlib
 import math
 import random
+import zlib
 from typing import Dict, List, Tuple
 
 # ---------------------------------------------------------------------------
@@ -79,8 +80,8 @@ class WebCorpus:
             return "edge"
         if "material" in q or "packag" in q or "biodegrad" in q:
             return "materials"
-        # deterministic fallback
-        return sorted(self.TOPICS)[hash(q) % len(self.TOPICS)]
+        # deterministic fallback (crc32: builtin hash is per-process)
+        return sorted(self.TOPICS)[zlib.crc32(q.encode()) % len(self.TOPICS)]
 
     def search(self, query: str, num_results: int = 8) -> List[WebPage]:
         topic = self.topic_of(query)

@@ -1,18 +1,49 @@
-"""The two MCP-on-FaaS deployment architectures (paper Fig. 2b / 2c) plus
-the local baseline (Fig. 2a).
+"""Deployment backends: how MCP servers are hosted for a run.
 
-``deploy_distributed`` — one Lambda function per MCP server (the variant the
-paper evaluates). ``deploy_monolithic`` — a single function hosting all
-servers, routed by a ``server`` request param (the variant the paper leaves
-to future work; we implement and benchmark it as a beyond-paper extension).
+The paper's central empirical axis (Fig. 2) is *where* tools live: on the
+workstation (2a), in one monolithic Lambda (2b) or one Lambda per server
+(2c).  Each architecture is a :class:`DeploymentBackend` registered under
+a name with :func:`register_deployment` — ``RunSpec.deployment`` resolves
+through this registry exactly like ``RunSpec.pattern`` resolves through
+the pattern registry, and ``Session.execute`` never branches on a
+deployment name:
+
+    @register_deployment("faas", tags=("paper",))
+    class FaaSDeployment(DeploymentBackend):
+        default_capabilities = DeploymentCapabilities(remote=True, ...)
+
+        def provision(self, world, server_names) -> Provisioned: ...
+
+Lifecycle: ``provision(world, server_names)`` builds the MCP clients plus
+the artifact stores and returns a :class:`Provisioned` bundle;
+``teardown()`` closes the clients; ``cost()`` reports platform spend.
+A :class:`DeploymentCapabilities` descriptor states what the backend does
+(tool subsetting, description hints, artifact store, cost accounting) —
+consumed by ``Session`` for prompt shaping and by the run cache
+(``repro.apps.cache``) for fingerprinting.
+
+Built-in backends: ``local`` (Fig. 2a), ``faas`` (distributed, Fig. 2c),
+``faas-mono`` (monolithic, Fig. 2b — beyond-paper benchmark), and ``a2a``
+(remote delegation: every MCP server hosted behind an A2A agent, §2.3).
+The historical ``deploy_local`` / ``deploy_distributed`` /
+``deploy_monolithic`` functions remain as the underlying implementations.
+
+``deploy_run_service`` additionally ships a whole *orchestrator* into a
+Lambda: a run-service function executes full RunSpecs remotely and
+wire-streams the run's event stream back on the response envelope.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Tuple
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from ..core.runtime import stable_fingerprint
 from ..env.world import World
-from ..mcp.client import FaaSTransport, LocalTransport, McpClient
-from ..mcp.server import MCPServer
+from ..mcp.a2a import A2AClient, A2AServer, AgentCard, AgentSkill
+from ..mcp.client import A2ATransport, FaaSTransport, LocalTransport, McpClient
+from ..mcp.protocol import McpRequest, McpResponse, RequestIdGenerator
+from ..mcp.server import MCPServer, ToolContext
 from ..mcp.servers.arxiv import ArxivServer
 from ..mcp.servers.code_execution import CodeExecutionServer
 from ..mcp.servers.fetch import FetchServer
@@ -20,8 +51,8 @@ from ..mcp.servers.filesystem import FileSystemServer, S3Server
 from ..mcp.servers.rag import RagServer
 from ..mcp.servers.serper import SerperServer
 from ..mcp.servers.yfinance import YFinanceServer
-from ..faas.platform import FaaSPlatform
-from ..faas.storage import LocalWorkspace
+from ..faas.platform import FaaSPlatform, LambdaFunction
+from ..faas.storage import LocalWorkspace, S3Store
 
 SERVER_FACTORIES: Dict[str, Callable[[], MCPServer]] = {
     "code-execution": CodeExecutionServer,
@@ -62,6 +93,24 @@ def make_servers(names: List[str]) -> Dict[str, MCPServer]:
     return {n: SERVER_FACTORIES[n]() for n in names}
 
 
+def _remote_server_names(server_names: List[str]) -> List[str]:
+    """filesystem is not deployable off-workstation (§4.1): swap for s3,
+    dedupe, preserve order."""
+    names = ["s3" if n == "filesystem" else n for n in server_names]
+    return list(dict.fromkeys(names))
+
+
+def _make_remote_server(name: str) -> MCPServer:
+    server = SERVER_FACTORIES[name]()
+    if name in FAAS_TOOL_SUBSET:
+        server.drop_tools(FAAS_TOOL_SUBSET[name])
+    return server
+
+
+# ---------------------------------------------------------------------------
+# deployment functions (the underlying implementations)
+
+
 def deploy_local(world: World, server_names: List[str]
                  ) -> Tuple[Dict[str, McpClient], LocalWorkspace]:
     """Paper Fig. 2a: servers in-process on the workstation."""
@@ -82,17 +131,9 @@ def deploy_distributed(world: World, platform: FaaSPlatform,
                        server_names: List[str]) -> Dict[str, McpClient]:
     """Paper Fig. 2c: one containerized Lambda per MCP server."""
     clients = {}
-    for name in server_names:
-        if name == "filesystem":       # not deployable on Lambda (§4.1)
-            name = "s3"
-        if name in clients:
-            continue
-
+    for name in _remote_server_names(server_names):
         def factory(n=name):
-            server = SERVER_FACTORIES[n]()
-            if n in FAAS_TOOL_SUBSET:
-                server.drop_tools(FAAS_TOOL_SUBSET[n])
-            return server
+            return _make_remote_server(n)
         proto = SERVER_FACTORIES[name]()
         fn = platform.deploy(f"mcp-{name}", factory,
                              memory_mb=max(proto.memory_mb, 128),
@@ -110,17 +151,10 @@ def deploy_monolithic(world: World, platform: FaaSPlatform,
     Memory = sum of per-server requirements (the paper's predicted higher
     cost per call); a single cold start covers every server.
     """
-    names = ["s3" if n == "filesystem" else n for n in server_names]
-    names = list(dict.fromkeys(names))
+    names = _remote_server_names(server_names)
 
     def factory():
-        servers = {}
-        for n in names:
-            server = SERVER_FACTORIES[n]()
-            if n in FAAS_TOOL_SUBSET:
-                server.drop_tools(FAAS_TOOL_SUBSET[n])
-            servers[n] = server
-        return servers
+        return {n: _make_remote_server(n) for n in names}
 
     mem = sum(max(SERVER_FACTORIES[n]().memory_mb, 128) for n in names)
     fn = platform.deploy("mcp-monolith", factory, memory_mb=mem,
@@ -131,3 +165,297 @@ def deploy_monolithic(world: World, platform: FaaSPlatform,
         client.initialize()
         clients[n] = client
     return clients
+
+
+def expose_server_as_a2a_agent(world: World, name: str, server: MCPServer,
+                               s3: S3Store, url: str) -> A2AServer:
+    """Host one MCP server behind an A2A agent: JSON-RPC request in the
+    task message, JSON-RPC response envelope in the task artifact."""
+    workspace = LocalWorkspace()   # the remote agent's private filesystem
+    skill = AgentSkill(
+        id="mcp", name=f"{name} MCP",
+        description=f"Executes MCP JSON-RPC requests against the hosted "
+                    f"{name} server.")
+    card = AgentCard(
+        name=f"mcp-{name}-agent",
+        description=f"A2A-hosted MCP server: {name}", url=url,
+        skills=[skill])
+
+    def handler(message: str) -> Dict:
+        req = McpRequest.from_json(message)
+        ctx = ToolContext(world=world, workspace=workspace, s3=s3, faas=True)
+        resp = server.handle(req, ctx)
+        return {"text": resp.to_json(), "success": resp.ok}
+
+    return A2AServer(card, world, {"mcp": handler})
+
+
+def deploy_a2a(world: World, server_names: List[str],
+               on_event: Optional[Callable] = None
+               ) -> Tuple[Dict[str, McpClient], S3Store]:
+    """A2A remote delegation (§2.3): each MCP server hosted behind its own
+    remote agent, reached via ``A2ATransport``. Artifacts land in a shared
+    object store (remote agents have no common filesystem)."""
+    s3 = S3Store()
+    a2a_client = A2AClient(world, on_event=on_event)
+    clients = {}
+    for name in _remote_server_names(server_names):
+        server = _make_remote_server(name)
+        agent = expose_server_as_a2a_agent(
+            world, name, server, s3, url=f"https://agents.local/mcp-{name}")
+        a2a_client.discover(agent)
+        # event replay happens once, at the A2AClient (it sees every task)
+        client = McpClient(A2ATransport(a2a_client, agent.card.name, "mcp"),
+                           name)
+        client.initialize()
+        clients[name] = client
+    return clients, s3
+
+
+# ---------------------------------------------------------------------------
+# the deployment backend API
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentCapabilities:
+    """What a deployment backend does to the tool surface — consumed by
+    ``Session`` (prompt shaping) and the run cache (fingerprinting)."""
+    name: str = ""
+    remote: bool = False           # tools live off-workstation
+    tool_subset: bool = False      # FAAS_TOOL_SUBSET applied
+    description_hints: bool = False   # LOCAL_HINTS applied
+    artifact_store: str = "workspace"  # "workspace" | "s3"
+    cost_accounting: bool = False  # per-invocation platform billing
+    tags: tuple = ()
+    rank: int = 50                 # listing order
+
+    def fingerprint(self) -> str:
+        return stable_fingerprint(self)
+
+
+@dataclasses.dataclass
+class Provisioned:
+    """What ``provision`` hands the orchestrator: per-server MCP clients
+    plus the stores an artifact can land in."""
+    clients: Dict[str, McpClient]
+    workspace: Optional[LocalWorkspace] = None
+    s3: Optional[S3Store] = None
+    platform: Optional[FaaSPlatform] = None
+
+
+class DeploymentBackend:
+    """Base class: lifecycle ``provision`` -> run -> ``teardown`` +
+    ``cost``, described by a :class:`DeploymentCapabilities`."""
+
+    name = "base"
+    default_capabilities = DeploymentCapabilities()
+
+    def __init__(self, capabilities: Optional[DeploymentCapabilities] = None):
+        self.capabilities = (capabilities if capabilities is not None
+                             else type(self).default_capabilities)
+        self.env: Optional[Provisioned] = None
+
+    def provision(self, world: World,
+                  server_names: List[str]) -> Provisioned:
+        raise NotImplementedError
+
+    def teardown(self) -> None:
+        if self.env is not None:
+            for client in self.env.clients.values():
+                client.close()
+
+    def cost(self) -> float:
+        if self.env is not None and self.env.platform is not None:
+            return self.env.platform.total_cost()
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredDeployment:
+    name: str
+    backend_cls: type
+    capabilities: DeploymentCapabilities
+
+
+_DEPLOYMENTS: Dict[str, RegisteredDeployment] = {}
+_DEPLOYMENTS_LOCK = threading.Lock()
+
+
+def register_deployment(name: str, *, tags: tuple = (), **overrides):
+    """Class decorator registering a backend class under ``name`` with
+    :class:`DeploymentCapabilities` overrides. Stack for variants."""
+    def deco(cls):
+        caps = dataclasses.replace(cls.default_capabilities, name=name,
+                                   tags=tuple(tags), **overrides)
+        with _DEPLOYMENTS_LOCK:
+            _DEPLOYMENTS[name] = RegisteredDeployment(name, cls, caps)
+        return cls
+    return deco
+
+
+def resolve_deployment(name: str) -> RegisteredDeployment:
+    try:
+        return _DEPLOYMENTS[name]
+    except KeyError:
+        raise KeyError(f"unknown deployment {name!r}; registered: "
+                       f"{sorted(_DEPLOYMENTS)}") from None
+
+
+def deployment_names(tag: Optional[str] = None) -> List[str]:
+    named = [(rd.capabilities.rank, n) for n, rd in _DEPLOYMENTS.items()
+             if tag is None or tag in rd.capabilities.tags]
+    return [n for _, n in sorted(named)]
+
+
+def create_deployment(name: str) -> DeploymentBackend:
+    rd = resolve_deployment(name)
+    return rd.backend_cls(capabilities=rd.capabilities)
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+
+
+@register_deployment("local", tags=("paper",), rank=10)
+class LocalDeployment(DeploymentBackend):
+    """Paper Fig. 2a: servers in-process on the workstation."""
+
+    name = "local"
+    default_capabilities = DeploymentCapabilities(
+        description_hints=True, artifact_store="workspace")
+
+    def provision(self, world: World,
+                  server_names: List[str]) -> Provisioned:
+        clients, workspace = deploy_local(world, server_names)
+        self.env = Provisioned(clients, workspace=workspace)
+        return self.env
+
+
+class _FaaSBackendBase(DeploymentBackend):
+    """Shared FaaS provisioning: build the platform, deploy, then zero the
+    accounting/clock so deployment cold starts are not billed to the run."""
+
+    default_capabilities = DeploymentCapabilities(
+        remote=True, tool_subset=True, artifact_store="s3",
+        cost_accounting=True)
+
+    def _deploy(self, world: World, platform: FaaSPlatform,
+                server_names: List[str]) -> Dict[str, McpClient]:
+        raise NotImplementedError
+
+    def provision(self, world: World,
+                  server_names: List[str]) -> Provisioned:
+        platform = FaaSPlatform(world)
+        clients = self._deploy(world, platform, server_names)
+        platform.reset_accounting()   # deployment cold-starts not billed
+        world.clock.reset()
+        self.env = Provisioned(clients, s3=platform.s3, platform=platform)
+        return self.env
+
+
+@register_deployment("faas", tags=("paper",), rank=20)
+class FaaSDeployment(_FaaSBackendBase):
+    """Paper Fig. 2c: one containerized Lambda per MCP server."""
+
+    name = "faas"
+
+    def _deploy(self, world, platform, server_names):
+        return deploy_distributed(world, platform, server_names)
+
+
+@register_deployment("faas-mono", rank=30)
+class MonolithicFaaSDeployment(_FaaSBackendBase):
+    """Paper Fig. 2b: all MCP servers in ONE Lambda function."""
+
+    name = "faas-mono"
+
+    def _deploy(self, world, platform, server_names):
+        return deploy_monolithic(world, platform, server_names)
+
+
+@register_deployment("a2a", rank=40)
+class A2ADeployment(DeploymentBackend):
+    """Remote delegation (§2.3): MCP servers hosted behind A2A agents."""
+
+    name = "a2a"
+    default_capabilities = DeploymentCapabilities(
+        remote=True, tool_subset=True, artifact_store="s3")
+
+    def provision(self, world: World,
+                  server_names: List[str]) -> Provisioned:
+        clients, s3 = deploy_a2a(world, server_names)
+        world.clock.reset()   # discovery/initialize not billed to the run
+        self.env = Provisioned(clients, s3=s3)
+        return self.env
+
+
+# ---------------------------------------------------------------------------
+# remote orchestration: a whole run executed inside a Lambda
+
+
+METHOD_EXECUTE_RUN = "run/execute"
+
+
+class RunServiceHandler:
+    """Orchestrator-in-Lambda: executes full RunSpecs and wire-streams the
+    run's event stream back on the response envelope."""
+
+    def handle(self, req: McpRequest, ctx: ToolContext) -> McpResponse:
+        if req.method != METHOD_EXECUTE_RUN:
+            return McpResponse(req.id, error={
+                "code": -32601, "message": f"unknown method {req.method!r}"})
+        # deferred: apps.session imports this module at package init
+        from ..apps.session import RunSpec, Session
+        from ..core.events import events_to_wire
+        p = req.params
+        try:
+            spec = RunSpec(p["app"], p["instance"], p["pattern"],
+                           p.get("deployment", "local"), p.get("seed", 0))
+            result = Session().execute(spec)
+        except KeyError as e:   # bad params stay a JSON-RPC error envelope
+            return McpResponse(req.id, error={
+                "code": -32602, "message": f"invalid run spec: {e}"})
+        # bill the remote run's virtual time on the caller's clock
+        ctx.world.clock.sleep(result.total_latency)
+        return McpResponse(req.id, result={
+            "app": result.app, "instance": result.instance,
+            "pattern": result.pattern, "deployment": result.deployment,
+            "success": result.success,
+            "total_latency": result.total_latency,
+            "input_tokens": result.trace.input_tokens,
+            "output_tokens": result.trace.output_tokens,
+            "llm_cost": result.trace.llm_cost,
+            "faas_cost": result.faas_cost,
+            "artifact": result.artifact,
+            "failure_reason": result.failure_reason,
+        }, events=events_to_wire(result.extras["events"]))
+
+
+def deploy_run_service(platform: FaaSPlatform,
+                       memory_mb: int = 1024) -> LambdaFunction:
+    """Deploy the orchestrator run service as a Lambda function."""
+    return platform.deploy("agentx-run-service", RunServiceHandler,
+                           memory_mb=memory_mb, image_mb=4096)
+
+
+class RunServiceClient:
+    """Local handle on a remote orchestrator: ``execute`` dispatches one
+    RunSpec to the run-service Lambda; ``on_event`` observers see the
+    remote run's event stream replayed through the transport."""
+
+    def __init__(self, platform: FaaSPlatform,
+                 on_event: Optional[Callable] = None):
+        fn = deploy_run_service(platform)
+        self.transport = FaaSTransport(platform, fn.url, on_event=on_event)
+        self._ids = RequestIdGenerator()
+
+    def execute(self, app: str, instance: str, pattern: str,
+                deployment: str = "local", seed: int = 0) -> Dict[str, Any]:
+        req = McpRequest(METHOD_EXECUTE_RUN,
+                         {"app": app, "instance": instance,
+                          "pattern": pattern, "deployment": deployment,
+                          "seed": seed}, id=self._ids.next())
+        resp = self.transport.send(req)
+        if not resp.ok:
+            raise RuntimeError(f"run/execute failed: {resp.error}")
+        return resp.result

@@ -12,7 +12,7 @@ Models the parts that matter for the paper's measurements:
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import json
 import uuid
 from typing import Callable, Dict, List, Optional
 
@@ -100,19 +100,22 @@ class LambdaFunction:
 
     def _dispatch(self, req: McpRequest, ctx: ToolContext) -> McpResponse:
         handler = self._handler
-        if isinstance(handler, MCPServer):
-            return handler.handle(req, ctx)
-        # monolithic deployment: handler is a dict of servers, routed by
-        # the "server" param
-        server_name = req.params.get("server")
-        server = handler.get(server_name)
-        if server is None:
-            return McpResponse(req.id, error={
-                "code": -32602, "message": f"unknown server {server_name!r}"})
-        params = {k: v for k, v in req.params.items() if k != "server"}
-        inner = McpRequest(method=req.method, params=params, id=req.id,
-                           session_id=req.session_id)
-        return server.handle(inner, ctx)
+        if isinstance(handler, dict):
+            # monolithic deployment: handler is a dict of servers, routed
+            # by the "server" param
+            server_name = req.params.get("server")
+            server = handler.get(server_name)
+            if server is None:
+                return McpResponse(req.id, error={
+                    "code": -32602,
+                    "message": f"unknown server {server_name!r}"})
+            params = {k: v for k, v in req.params.items() if k != "server"}
+            inner = McpRequest(method=req.method, params=params, id=req.id,
+                               session_id=req.session_id)
+            return server.handle(inner, ctx)
+        # MCPServer or any handler object with handle(req, ctx) — e.g. the
+        # run-service orchestrator (deploy_run_service)
+        return handler.handle(req, ctx)
 
 
 class FaaSPlatform:
@@ -122,6 +125,7 @@ class FaaSPlatform:
         self.world = world
         self.region = region
         self.functions: Dict[str, LambdaFunction] = {}
+        self._by_url: Dict[str, LambdaFunction] = {}   # O(1) URL routing
         self.s3 = S3Store()
         self.sessions = DynamoTable()
         self.invocations: List[Invocation] = []
@@ -136,14 +140,19 @@ class FaaSPlatform:
             return fn
         fn = LambdaFunction(name, handler_factory, memory_mb, self, image_mb)
         self.functions[name] = fn
+        self._by_url[fn.url] = fn
         return fn
 
     def invoke_url(self, url: str, raw_request: str) -> str:
         self.world.clock.sleep(self.world.latency.sample_spec(FAAS_RTT))
-        for fn in self.functions.values():
-            if fn.url == url:
-                return fn.invoke(raw_request)
-        raise KeyError(f"no function at {url}")
+        fn = self._by_url.get(url)
+        if fn is None:
+            # a real Function-URL gateway answers with a JSON-RPC error
+            # body, not a client-side crash
+            req_id = json.loads(raw_request).get("id", 0)
+            return McpResponse(req_id, error={
+                "code": -32601, "message": f"no function at {url}"}).to_json()
+        return fn.invoke(raw_request)
 
     # -- accounting --------------------------------------------------------
     def total_cost(self) -> float:

@@ -7,18 +7,20 @@ security schemes and supported formats (used for discovery), an
 task lifecycle (submitted -> working -> completed/failed), and an
 ``A2AClient`` for inter-agent delegation. ``examples/a2a_composition.py``
 shows AgentX delegating a whole sub-application to a remote agent.
+
+Tasks carry a run-event envelope: a handler that returns an ``events``
+list of wire dicts (``repro.core.events.to_wire``) gets them attached to
+the completed ``A2ATask``, and an ``A2AClient(on_event=...)`` replays
+them to the caller's observers — a local ``RunMonitor`` sees the remote
+run's full event stream, identical to an in-process subscriber's.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
-import json
 import uuid
 from typing import Any, Callable, Dict, List, Optional
 
 from ..env.world import World
-
-_task_ids = itertools.count(1)
 
 
 @dataclasses.dataclass
@@ -62,6 +64,8 @@ class A2ATask:
     status: str = "submitted"       # submitted | working | completed | failed
     artifacts: List[Dict] = dataclasses.field(default_factory=list)
     history: List[Dict] = dataclasses.field(default_factory=list)
+    # wire-serialized RunEvents of the remote run (to_wire dicts)
+    events: List[Dict] = dataclasses.field(default_factory=list)
 
 
 class A2AServer:
@@ -102,6 +106,7 @@ class A2AServer:
                                "text": result.get("text", "")})
         task.history.append({"role": "agent",
                              "text": result.get("text", "")[:200]})
+        task.events.extend(result.get("events", []))
         return task
 
     def get_task(self, task_id: str) -> Optional[A2ATask]:
@@ -109,9 +114,11 @@ class A2AServer:
 
 
 class A2AClient:
-    def __init__(self, world: World):
+    def __init__(self, world: World,
+                 on_event: Optional[Callable] = None):
         self.world = world
         self.known: Dict[str, A2AServer] = {}
+        self.on_event = on_event   # receives replayed remote RunEvents
 
     def discover(self, server: A2AServer) -> AgentCard:
         self.world.clock.sleep(0.05)          # card fetch
@@ -124,14 +131,24 @@ class A2AClient:
         if server is None:
             raise KeyError(f"unknown agent {agent_name!r}; discover first")
         self.world.clock.sleep(0.08)          # task POST round trip
-        return server.send_task(skill_id, message)
+        task = server.send_task(skill_id, message)
+        if task.events and self.on_event is not None:
+            from ..core.events import from_wire
+            for d in task.events:
+                self.on_event(from_wire(d))
+        return task
 
 
 def expose_app_as_agent(world: World, app_name: str, pattern: str,
                         deployment: str, url: str) -> A2AServer:
-    """Wrap a whole (app, pattern) pipeline as a remote A2A agent."""
+    """Wrap a whole (app, pattern) pipeline as a remote A2A agent.
+
+    The remote run's event stream is wire-streamed back on the task
+    envelope, so callers with an ``on_event`` observer see it live.
+    """
     from ..apps.apps import APPS
     from ..apps.runner import run_app
+    from ..core.events import events_to_wire
 
     app = APPS[app_name]
     skill = AgentSkill(
@@ -149,6 +166,7 @@ def expose_app_as_agent(world: World, app_name: str, pattern: str,
         result = run_app(app_name, instance, pattern, deployment, seed=0)
         # bill the remote agent's virtual time on the caller's clock
         world.clock.sleep(result.total_latency)
-        return {"text": result.artifact or "", "success": result.success}
+        return {"text": result.artifact or "", "success": result.success,
+                "events": events_to_wire(result.extras["events"])}
 
     return A2AServer(card, world, {app_name: handler})

@@ -1,20 +1,36 @@
 """MCP client + transports.
 
 ``McpClient`` is what agent frameworks hold; a ``Transport`` hides whether
-the server runs in-process (local deployment, Fig. 2a) or behind a FaaS
-Function URL (Fig. 2b/2c).
+the server runs in-process (local deployment, Fig. 2a), behind a FaaS
+Function URL (Fig. 2b/2c), or behind an A2A remote agent (``A2ATransport``,
+the ``a2a`` deployment backend).
+
+Remote transports also carry the run-event side channel: when a response
+envelope includes wire-serialized :class:`repro.core.events.RunEvent`
+dicts, the transport replays them into its ``on_event`` observer, so a
+local ``RunMonitor`` sees a remotely executed run live.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from ..env.world import World
 from .protocol import (METHOD_CALL_TOOL, METHOD_DELETE, METHOD_INITIALIZE,
                        METHOD_LIST_TOOLS, McpRequest, McpResponse,
                        RequestIdGenerator, ToolSpec)
 from .server import MCPServer, ToolContext
+
+
+def _replay_events(wire_events, on_event: Optional[Callable]) -> None:
+    """Deserialize wire-streamed run events and feed them to an observer."""
+    if not wire_events or on_event is None:
+        return
+    # deferred import: core.runtime imports this module at package init
+    from ..core.events import from_wire
+    for d in wire_events:
+        on_event(from_wire(d))
 
 
 class Transport:
@@ -38,12 +54,19 @@ class LocalTransport(Transport):
 
 
 class FaaSTransport(Transport):
-    """HTTPS Function-URL transport (paper §4.2)."""
+    """HTTPS Function-URL transport (paper §4.2).
 
-    def __init__(self, platform, url: str, server_name: Optional[str] = None):
+    ``on_event`` (optional) receives deserialized ``RunEvent``s whenever a
+    response envelope wire-streams them (remote orchestrator functions,
+    see ``repro.faas.deployments.deploy_run_service``).
+    """
+
+    def __init__(self, platform, url: str, server_name: Optional[str] = None,
+                 on_event: Optional[Callable] = None):
         self.platform = platform
         self.url = url
         self.server_name = server_name   # set for monolithic deployments
+        self.on_event = on_event
 
     def send(self, req: McpRequest) -> McpResponse:
         if self.server_name is not None:
@@ -51,7 +74,39 @@ class FaaSTransport(Transport):
                              params=dict(req.params, server=self.server_name),
                              id=req.id, session_id=req.session_id)
         raw = self.platform.invoke_url(self.url, req.to_json())
-        return McpResponse.from_json(raw)
+        resp = McpResponse.from_json(raw)
+        _replay_events(resp.events, self.on_event)
+        return resp
+
+
+class A2ATransport(Transport):
+    """MCP-over-A2A transport (the ``a2a`` deployment): each JSON-RPC
+    request is delegated as an A2A task to a remote agent hosting the MCP
+    server; the response envelope rides back in the task artifact.
+
+    Failed tasks with no artifact (unknown skill, agent crash) surface as
+    JSON-RPC errors, so agents see the same ``<tool-error ...>`` shape as
+    on every other deployment.
+    """
+
+    def __init__(self, a2a_client, agent_name: str, skill_id: str,
+                 on_event: Optional[Callable] = None):
+        self.a2a_client = a2a_client
+        self.agent_name = agent_name
+        self.skill_id = skill_id
+        self.on_event = on_event
+
+    def send(self, req: McpRequest) -> McpResponse:
+        task = self.a2a_client.delegate(self.agent_name, self.skill_id,
+                                        req.to_json())
+        _replay_events(task.events, self.on_event)
+        if not task.artifacts:
+            detail = task.history[-1]["text"] if task.history else task.status
+            return McpResponse(req.id, error={"code": -32000,
+                                              "message": f"A2A task "
+                                                         f"{task.status}: "
+                                                         f"{detail}"})
+        return McpResponse.from_json(task.artifacts[0]["text"])
 
 
 @dataclasses.dataclass

@@ -99,6 +99,10 @@ class McpResponse:
     result: Any = None
     error: Optional[Dict[str, Any]] = None
     session_id: Optional[str] = None
+    # wire-streamed run events (``repro.core.events.to_wire`` dicts): set by
+    # remote orchestrators so transports can replay a run's event stream to
+    # local observers.
+    events: Optional[List[Dict[str, Any]]] = None
 
     @property
     def ok(self) -> bool:
@@ -112,6 +116,8 @@ class McpResponse:
             body["result"] = self.result
         if self.session_id:
             body["sessionId"] = self.session_id
+        if self.events:
+            body["events"] = self.events
         return json.dumps(body)
 
     @staticmethod
@@ -119,7 +125,8 @@ class McpResponse:
         d = json.loads(raw)
         return McpResponse(id=d.get("id", 0), result=d.get("result"),
                            error=d.get("error"),
-                           session_id=d.get("sessionId"))
+                           session_id=d.get("sessionId"),
+                           events=d.get("events"))
 
 
 class McpError(Exception):

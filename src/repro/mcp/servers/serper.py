@@ -3,6 +3,7 @@ API — 13 tools per Table 1."""
 from __future__ import annotations
 
 import json
+import zlib
 
 from ..server import MCPServer, ToolContext
 
@@ -77,8 +78,10 @@ class SerperServer(MCPServer):
         @t("trends_search", "Google Trends interest over time.",
            {"query": {"type": "string"}})
         def trends_search(ctx, query: str):
-            return json.dumps({"trend": [50 + (hash(query + str(i)) % 40)
-                                         for i in range(12)]})
+            # crc32, not builtin hash: responses must not vary per process
+            return json.dumps(
+                {"trend": [50 + (zlib.crc32(f"{query}{i}".encode()) % 40)
+                           for i in range(12)]})
 
         @t("patents_search", "Search Google Patents.", {"query": {"type": "string"}})
         def patents_search(ctx, query: str):

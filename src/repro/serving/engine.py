@@ -42,7 +42,6 @@ def pad_cache_to(cfg: ModelConfig, cache, target_len: int):
             # keep last `window` rows in ring layout: row p -> slot p%window
             idx = jnp.arange(s - window, s)
             slots = idx % window
-            taken = jax.lax.index_in_dim(x, 0, 0, keepdims=False) * 0  # noop
             sl = [slice(None)] * x.ndim
             sl[seq_axis] = idx
             vals = x[tuple(sl)]
@@ -121,6 +120,15 @@ class RunMonitor:
                 self.tool_errors += not event.event.ok
             elif isinstance(event, ev.OverheadIncurred):
                 self.framework_events += 1
+
+    def wire_observer(self):
+        """Observer accepting wire-serialized event dicts
+        (``repro.core.events.to_wire``) — subscribe it where raw wire
+        payloads arrive (e.g. an A2A task envelope) without deserializing
+        at the call site."""
+        def observe(wire_dict) -> None:
+            self(run_events.from_wire(wire_dict))
+        return observe
 
     @property
     def in_flight(self) -> int:

@@ -42,8 +42,14 @@ def test_task_lifecycle():
 
 def test_unknown_skill_fails_gracefully():
     world = World(0)
-    task = _server(world).send_task("nope", "x")
+    server = _server(world)
+    task = server.send_task("nope", "x")
     assert task.status == "failed"
+    assert not task.artifacts
+    # the failure is recorded in the task history for the caller to read
+    assert task.history[-1]["role"] == "agent"
+    assert "unknown skill 'nope'" in task.history[-1]["text"]
+    assert server.get_task(task.task_id) is task
 
 
 def test_handler_crash_is_failed_task():
@@ -52,6 +58,10 @@ def test_handler_crash_is_failed_task():
         raise RuntimeError("remote crash")
     task = _server(world, boom).send_task("echo", "x")
     assert task.status == "failed"
+    assert not task.artifacts
+    # history keeps both the request and the crash report
+    assert [h["role"] for h in task.history] == ["user", "agent"]
+    assert "remote crash" in task.history[-1]["text"]
 
 
 def test_expose_app_as_agent_end_to_end():

@@ -1,0 +1,355 @@
+"""Deployment backend API tests: registry resolution, capabilities,
+the a2a deployment, stable cross-process seeding, the content-addressed
+run cache, the RunEvent wire protocol, and RunMonitor parity across
+FaaS / A2A transport boundaries."""
+import dataclasses
+import inspect
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.apps.cache import RunCache, spec_fingerprint
+from repro.apps.session import RunSpec, Session, stable_world_seed
+from repro.core.events import (RunCompleted, RunStarted, events_from_wire,
+                               events_to_wire, derive_trace, from_wire,
+                               to_wire)
+from repro.core.runtime import register_pattern, resolve_pattern
+from repro.core import runtime as rt
+from repro.env.world import World
+from repro.faas.deployments import (DeploymentBackend, RunServiceClient,
+                                    create_deployment, deploy_monolithic,
+                                    deployment_names, register_deployment,
+                                    resolve_deployment)
+from repro.faas import deployments as dep_mod
+from repro.faas.platform import FaaSPlatform
+from repro.mcp.a2a import A2AClient, expose_app_as_agent
+from repro.serving.engine import RunMonitor
+
+SPEC = RunSpec("web_search", "quantum", "react", "local", seed=0)
+
+
+# -- registry ---------------------------------------------------------------
+
+
+def test_all_four_deployments_registered():
+    assert deployment_names() == ["local", "faas", "faas-mono", "a2a"]
+    for name in deployment_names():
+        rd = resolve_deployment(name)
+        assert rd.name == name
+        assert issubclass(rd.backend_cls, DeploymentBackend)
+        assert rd.capabilities.name == name
+        backend = create_deployment(name)
+        assert isinstance(backend, rd.backend_cls)
+        assert backend.capabilities is rd.capabilities
+
+
+def test_unknown_deployment_lists_registered():
+    with pytest.raises(KeyError, match="faas-mono"):
+        resolve_deployment("nope")
+
+
+def test_capability_descriptors():
+    assert not resolve_deployment("local").capabilities.remote
+    assert resolve_deployment("local").capabilities.description_hints
+    faas = resolve_deployment("faas").capabilities
+    assert faas.remote and faas.tool_subset and faas.cost_accounting
+    assert faas.artifact_store == "s3"
+    a2a = resolve_deployment("a2a").capabilities
+    assert a2a.remote and not a2a.cost_accounting
+    assert "paper" in resolve_deployment("faas").capabilities.tags
+    assert deployment_names(tag="paper") == ["local", "faas"]
+
+
+def test_session_execute_has_no_deployment_name_branches():
+    """The acceptance criterion, literally: Session's run path contains no
+    deployment-name string comparisons — everything resolves through the
+    registry."""
+    src = inspect.getsource(Session._execute) + inspect.getsource(
+        Session.execute)
+    for name in ("local", "faas", "faas-mono", "a2a"):
+        assert f'"{name}"' not in src and f"'{name}'" not in src
+
+
+def test_register_deployment_decorator_variant():
+    @register_deployment("test-local-clone", rank=99)
+    class _Clone(resolve_deployment("local").backend_cls):
+        pass
+
+    try:
+        r = Session().execute(dataclasses.replace(
+            SPEC, deployment="test-local-clone"))
+        assert r.success
+        assert r.deployment == "test-local-clone"
+    finally:
+        dep_mod._DEPLOYMENTS.pop("test-local-clone", None)
+
+
+# -- the a2a deployment -----------------------------------------------------
+
+
+def test_a2a_deployment_end_to_end():
+    r = Session().execute(dataclasses.replace(SPEC, deployment="a2a"))
+    assert r.success
+    assert r.artifact_path.startswith("s3://")   # shared object store
+    assert r.faas_cost == 0.0                    # no Lambda platform
+    assert isinstance(r.extras["events"][-1], RunCompleted)
+    # every MCP call paid the A2A task round trip
+    assert r.trace.tool_latency > 0
+
+
+def test_a2a_metrics_deterministic():
+    spec = dataclasses.replace(SPEC, deployment="a2a")
+    r1, r2 = Session().execute(spec), Session().execute(spec)
+    assert r1.total_latency == r2.total_latency
+    assert r1.trace.input_tokens == r2.trace.input_tokens
+
+
+# -- stable seeding ---------------------------------------------------------
+
+
+def test_world_seed_is_hashseed_independent():
+    """builtin hash() is randomized per process; the world seed must not
+    be. Run the derivation under two different PYTHONHASHSEEDs."""
+    code = ("import sys; sys.path.insert(0, 'src');"
+            "from repro.apps.session import RunSpec, stable_world_seed;"
+            "print(stable_world_seed("
+            "RunSpec('web_search', 'quantum', 'react', 'faas', seed=3)))")
+    seeds = []
+    for hashseed in ("1", "2"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed,
+                   JAX_PLATFORMS="cpu")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True,
+                             cwd=os.path.join(os.path.dirname(__file__),
+                                              ".."))
+        assert out.returncode == 0, out.stderr
+        seeds.append(int(out.stdout.strip()))
+    assert seeds[0] == seeds[1]
+    assert seeds[0] == stable_world_seed(
+        RunSpec("web_search", "quantum", "react", "faas", seed=3))
+
+
+# -- run cache --------------------------------------------------------------
+
+
+def test_run_cache_hit_returns_stored_result():
+    cache = RunCache()
+    session = Session(cache=cache)
+    r1 = session.execute(SPEC)
+    r2 = session.execute(SPEC)
+    assert r1 is r2
+    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+
+
+def test_run_cache_keys_distinguish_specs():
+    keys = {spec_fingerprint(RunSpec("web_search", "quantum", p, d, seed=s))
+            for p in ("react", "agentx") for d in ("local", "faas")
+            for s in (0, 1)}
+    assert len(keys) == 8
+
+
+def test_run_cache_invalidates_on_pattern_config_change():
+    base = resolve_pattern("react")
+
+    @register_pattern("test-cached", max_steps=25)
+    class _V1(base.runner_cls):
+        pass
+
+    try:
+        spec = dataclasses.replace(SPEC, pattern="test-cached")
+        key1 = spec_fingerprint(spec)
+        # re-register under the same name with a different knob
+        register_pattern("test-cached", max_steps=3)(_V1)
+        key2 = spec_fingerprint(spec)
+        assert key1 != key2
+    finally:
+        rt._REGISTRY.pop("test-cached", None)
+
+
+def test_run_cache_invalidates_on_deployment_capability_change():
+    local_cls = resolve_deployment("local").backend_cls
+    register_deployment("test-dep")(local_cls)
+    try:
+        spec = dataclasses.replace(SPEC, deployment="test-dep")
+        key1 = spec_fingerprint(spec)
+        register_deployment("test-dep", rank=77)(local_cls)
+        assert spec_fingerprint(spec) != key1
+    finally:
+        dep_mod._DEPLOYMENTS.pop("test-dep", None)
+
+
+def test_custom_backend_factory_is_not_cacheable():
+    spec = dataclasses.replace(SPEC, backend_factory=lambda *a: None)
+    assert spec_fingerprint(spec) is None
+    cache = RunCache()
+    assert cache.get(None) is None
+    assert cache.stats()["misses"] == 0     # None keys don't count
+
+
+def test_execute_many_shares_cache_across_workers():
+    cache = RunCache()
+    session = Session(cache=cache)
+    specs = [SPEC] * 6
+    results = session.execute_many(specs, max_workers=3)
+    assert len(results) == 6
+    stats = cache.stats()
+    assert stats["entries"] == 1
+    assert stats["hits"] + stats["misses"] == 6
+    fps = {(r.total_latency, r.trace.input_tokens) for r in results}
+    assert len(fps) == 1
+
+
+def test_warm_cache_makes_run_sweep_free(tmp_path, monkeypatch):
+    """Acceptance: a repeated run_sweep on a warm session re-executes
+    nothing (misses stay flat, hits grow)."""
+    from benchmarks import experiments
+
+    monkeypatch.setattr(experiments, "CACHE",
+                        str(tmp_path / "agent_runs.json"))
+    monkeypatch.setattr(experiments, "N_SUCCESS", 1)
+    monkeypatch.setattr(experiments, "MAX_RUNS", 2)
+    cache = RunCache()
+    session = Session(cache=cache)
+    first = experiments.run_sweep(full=False, deployments=["local"],
+                                  force=True, session=session)
+    misses_after_cold = cache.stats()["misses"]
+    assert misses_after_cold > 0
+    second = experiments.run_sweep(full=False, deployments=["local"],
+                                   force=True, session=session)
+    assert cache.stats()["misses"] == misses_after_cold   # zero re-runs
+    assert cache.stats()["hits"] >= misses_after_cold
+    assert json.dumps(first) == json.dumps(second)
+
+
+# -- event wire protocol ----------------------------------------------------
+
+
+def test_event_wire_round_trip_identity():
+    r = Session().execute(dataclasses.replace(SPEC, pattern="agentx"))
+    events = r.extras["events"]
+    wire = events_to_wire(events)
+    json.dumps(wire)                       # JSON-safe by construction
+    back = events_from_wire(wire)
+    assert back == events
+    derived = derive_trace(back)
+    assert derived.llm_events == r.trace.llm_events
+    assert derived.tool_events == r.trace.tool_events
+    assert derived.framework_events == r.trace.framework_events
+
+
+def test_event_wire_unknown_type():
+    ev = RunStarted(t=0.0, pattern="react", task="x")
+    d = to_wire(ev)
+    assert d["type"] == "RunStarted"
+    assert from_wire(d) == ev
+    with pytest.raises(KeyError, match="unknown RunEvent"):
+        from_wire({"type": "NotAnEvent"})
+
+
+# -- cross-boundary event streaming -----------------------------------------
+
+
+def _reference_run(monitor):
+    return Session(on_event=monitor).execute(SPEC)
+
+
+def test_run_monitor_parity_across_faas_boundary():
+    mon_local, mon_remote = RunMonitor(), RunMonitor()
+    r = _reference_run(mon_local)
+    seen = []
+
+    def observe(ev):
+        seen.append(ev)
+        mon_remote(ev)
+
+    platform = FaaSPlatform(World(0))
+    svc = RunServiceClient(platform, on_event=observe)
+    remote = svc.execute("web_search", "quantum", "react", "local", 0)
+    assert remote["success"] == r.success
+    assert remote["total_latency"] == r.total_latency
+    assert seen == r.extras["events"]
+    assert mon_remote.snapshot() == mon_local.snapshot()
+    # the remote run's virtual time is billed on the service function
+    assert platform.total_cost() > 0
+
+
+def test_run_monitor_parity_across_a2a_boundary():
+    mon_local, mon_remote = RunMonitor(), RunMonitor()
+    _reference_run(mon_local)
+    world = World(9)
+    client = A2AClient(world, on_event=mon_remote)
+    agent = expose_app_as_agent(world, "web_search", "react", "local",
+                                "https://x/ws")
+    client.discover(agent)
+    task = client.delegate(agent.card.name, "web_search", "quantum")
+    assert task.status == "completed"
+    assert mon_remote.snapshot() == mon_local.snapshot()
+
+
+def test_run_service_rejects_unknown_method():
+    platform = FaaSPlatform(World(0))
+    svc = RunServiceClient(platform)
+    from repro.mcp.protocol import McpRequest
+    resp = svc.transport.send(McpRequest("tools/call", {"name": "x"}, id=7))
+    assert not resp.ok
+    assert "unknown method" in resp.error["message"]
+
+
+def test_run_service_rejects_invalid_spec():
+    """Bad run params come back as a JSON-RPC error envelope, not a raw
+    exception escaping the simulated Lambda."""
+    svc = RunServiceClient(FaaSPlatform(World(0)))
+    with pytest.raises(RuntimeError, match="invalid run spec"):
+        svc.execute("no-such-app", "x", "react")
+    with pytest.raises(RuntimeError, match="invalid run spec"):
+        svc.execute("web_search", "quantum", "no-such-pattern")
+
+
+# -- platform routing -------------------------------------------------------
+
+
+def test_invoke_url_unknown_url_is_jsonrpc_error():
+    platform = FaaSPlatform(World(0))
+    raw = platform.invoke_url("https://nowhere.lambda-url.x.on.aws/",
+                              json.dumps({"jsonrpc": "2.0", "id": 5,
+                                          "method": "tools/list",
+                                          "params": {}}))
+    body = json.loads(raw)
+    assert body["id"] == 5
+    assert body["error"]["code"] == -32601
+    assert "no function at" in body["error"]["message"]
+
+
+def test_invoke_url_is_indexed_after_redeploy():
+    world = World(0)
+    platform = FaaSPlatform(world)
+    fn1 = platform.deploy("mcp-x", dep_mod.SERVER_FACTORIES["serper"],
+                          memory_mb=128)
+    fn2 = platform.deploy("mcp-x", dep_mod.SERVER_FACTORIES["serper"],
+                          memory_mb=256)
+    assert fn1.url == fn2.url                     # AWS redeploy semantics
+    assert platform._by_url[fn1.url] is fn2
+
+
+def test_monolithic_unknown_server_param_is_tool_error():
+    from repro.mcp.client import FaaSTransport, McpClient
+    world = World(0)
+    platform = FaaSPlatform(world)
+    deploy_monolithic(world, platform, ["serper"])
+    fn = platform.functions["mcp-monolith"]
+    client = McpClient(FaaSTransport(platform, fn.url,
+                                     server_name="nosuch"), "nosuch")
+    with pytest.raises(RuntimeError, match="unknown server 'nosuch'"):
+        client.initialize()
+    out_client = McpClient(FaaSTransport(platform, fn.url,
+                                         server_name="serper"), "serper")
+    out_client.initialize()
+    # a bad server param on tools/call surfaces as a tool error string
+    bad = McpClient(FaaSTransport(platform, fn.url, server_name="wrong"),
+                    "wrong")
+    bad.session_id = out_client.session_id
+    out = bad.call_tool("google_search", {"query": "x"})
+    assert out.startswith("<tool-error") and "unknown server" in out
