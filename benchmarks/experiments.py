@@ -69,11 +69,20 @@ def _run_combo(session: Session, spec: RunSpec) -> List[Dict]:
 
 def run_sweep(full: bool = True, deployments=None, force: bool = False,
               max_workers: int = 1,
-              session: Optional[Session] = None) -> List[Dict]:
+              session: Optional[Session] = None,
+              cache_dir: Optional[str] = None) -> List[Dict]:
+    """``cache_dir`` persists every RunResult to disk (wire-serialized);
+    a cold re-sweep in a fresh process then replays stored runs instead
+    of executing — ``score_run`` rebuilds the deterministic world/policy
+    for replayed results."""
     if os.path.exists(CACHE) and not force:
         return json.load(open(CACHE))
     deployments = deployments or DEPLOYMENTS
-    session = session if session is not None else Session(cache=RunCache())
+    if session is not None and cache_dir is not None:
+        raise ValueError("pass cache_dir OR a preconfigured session, "
+                         "not both (the session already owns its cache)")
+    session = session if session is not None else Session(
+        cache=RunCache(cache_dir=cache_dir))
     combos: List[RunSpec] = []
     for app_name, app in APPS.items():
         instances = list(app.instances) if full else list(app.instances)[:1]

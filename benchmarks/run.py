@@ -82,6 +82,9 @@ def main() -> None:
                     help="ignore the agent-run cache")
     ap.add_argument("--workers", type=int, default=1,
                     help="thread-pool fan-out across sweep combos")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist per-run results here (cold re-sweeps "
+                         "replay from disk)")
     args = ap.parse_args()
 
     from .experiments import run_sweep
@@ -89,7 +92,8 @@ def main() -> None:
 
     t0 = time.time()
     records = run_sweep(full=not args.quick, force=args.force,
-                        max_workers=args.workers)
+                        max_workers=args.workers,
+                        cache_dir=args.cache_dir)
     print(f"# agent sweep: {len(records)} runs "
           f"({time.time() - t0:.0f}s wall, virtual-clock latencies)")
     for fig in ALL_FIGURES:

@@ -1,0 +1,137 @@
+"""Serving throughput benchmark: slot-batched decode vs the serial
+per-slot loop.
+
+Measures, on the reduced tinyllama config (CPU CI baseline; pass
+--arch/--full for others):
+
+  * decode-step throughput: tokens/s of ONE jitted ``decode_step`` over
+    the full ``n_slots`` batch vs ``n_slots`` sequential batch-1 calls
+    (the pre-redesign scheduler's inner loop);
+  * end-to-end: ``BatchScheduler.drain`` wall time vs serial
+    ``Engine.generate_ids`` per request.
+
+Writes ``artifacts/BENCH_serving.json`` (uploaded by CI).
+
+    PYTHONPATH=src python -m benchmarks.serving --slots 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.serving import BatchScheduler, Engine
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _time_decode(engine, batch, max_len, reps) -> float:
+    """Steady-state seconds per jitted decode step at the given batch
+    width (the cache is donated, so it threads through the loop)."""
+    from repro.models.model import init_cache
+    cache = init_cache(engine.cfg, batch, max_len,
+                       dtype=engine.params["embed"].dtype)
+    tok = jnp.ones((batch, 1), jnp.int32)
+    pos = jnp.arange(8, 8 + batch, dtype=jnp.int32)   # mixed positions
+    logits, cache = engine._decode(engine.params, cache=cache, token=tok,
+                                   pos=pos)    # warm (compile)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        logits, cache = engine._decode(engine.params, cache=cache,
+                                       token=tok, pos=pos)
+        jax.block_until_ready(logits)
+    return (time.perf_counter() - t0) / reps
+
+
+def measure(arch: str = "tinyllama-1.1b", reduced: bool = True,
+            n_slots: int = 8, max_len: int = 128, max_new: int = 16,
+            reps: int = 20) -> dict:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    engine = Engine(cfg, temperature=0.0)
+
+    # -- decode-step microbench: one batched call vs n_slots serial calls
+    batched_s = _time_decode(engine, n_slots, max_len, reps)
+    serial_1 = _time_decode(engine, 1, max_len, reps)
+    step_batched_tok_s = n_slots / batched_s
+    step_serial_tok_s = 1.0 / serial_1   # per-slot loop: one call per token
+
+    # -- end-to-end: scheduler drain vs serial generate per request
+    prompts = [f"request {i}: summarize the agentic workflow results"
+               for i in range(n_slots)]
+    sched = BatchScheduler(engine, n_slots=n_slots, max_len=max_len)
+    for p in prompts:   # warm prefill/decode/insert compiles before timing
+        sched.submit(p, max_new=2)
+    sched.drain()
+    rids = [sched.submit(p, max_new=max_new) for p in prompts]
+    t0 = time.perf_counter()
+    results = sched.drain()
+    e2e_batched = time.perf_counter() - t0
+    toks = sum(r.new_tokens for r in results.values())
+
+    reqs = [sched.requests[r] for r in rids]
+    for r in reqs:   # warm serial compiles before timing
+        engine.generate_ids(r.prompt_ids, 1, rid=r.rid,
+                            cache_len=sched.max_len)
+    t0 = time.perf_counter()
+    stoks = 0
+    for r in reqs:
+        g = engine.generate_ids(r.prompt_ids, r.max_new, rid=r.rid,
+                                cache_len=sched.max_len)
+        stoks += g.new_tokens
+    e2e_serial = time.perf_counter() - t0
+
+    return {
+        "arch": cfg.name,
+        "n_slots": n_slots,
+        "max_len": max_len,
+        "max_new": max_new,
+        "decode_step": {
+            "batched_tok_s": step_batched_tok_s,
+            "serial_tok_s": step_serial_tok_s,
+            "speedup": step_batched_tok_s / step_serial_tok_s,
+        },
+        "end_to_end": {
+            "batched_tok_s": toks / e2e_batched,
+            "serial_tok_s": stoks / e2e_serial,
+            "speedup": (toks / e2e_batched) / (stoks / e2e_serial),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_serving.json"))
+    args = ap.parse_args()
+
+    rec = measure(args.arch, reduced=not args.full, n_slots=args.slots,
+                  max_len=args.max_len, max_new=args.max_new)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    ds, ee = rec["decode_step"], rec["end_to_end"]
+    print(f"# serving bench on {rec['arch']} n_slots={rec['n_slots']}")
+    print(f"decode_step.batched_tok_s,{ds['batched_tok_s']:.1f},")
+    print(f"decode_step.serial_tok_s,{ds['serial_tok_s']:.1f},")
+    print(f"decode_step.speedup,{ds['speedup']:.2f},x")
+    print(f"end_to_end.batched_tok_s,{ee['batched_tok_s']:.1f},")
+    print(f"end_to_end.serial_tok_s,{ee['serial_tok_s']:.1f},")
+    print(f"end_to_end.speedup,{ee['speedup']:.2f},x")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

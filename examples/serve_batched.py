@@ -1,24 +1,27 @@
-"""End-to-end serving driver (deliverable b): serve a small model with
-batched requests through the continuous-batching scheduler, with the
-real-JAX-engine-backed agent LLM in the loop.
+"""End-to-end serving driver: true continuous batching — one jitted
+decode step advances every live slot — with the real-JAX-engine-backed
+agent LLM in the loop via the ``@register_llm_backend`` registry.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import sys
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 sys.path.insert(0, "src")
 
 from repro.apps.session import RunSpec, Session  # noqa: E402
 from repro.configs import get_config  # noqa: E402
-from repro.core.llm import JaxLLMBackend  # noqa: E402
-from repro.serving import BatchScheduler, Engine, RunMonitor  # noqa: E402
+from repro.serving import (BatchScheduler, Engine, EngineClient,  # noqa: E402
+                           RunMonitor, get_llm_backend, llm_backend_names,
+                           reset_llm_backends)
 
 
 def main():
     cfg = get_config("qwen1.5-4b").reduced()
     engine = Engine(cfg, temperature=0.7)
-    sched = BatchScheduler(engine, n_slots=4)
+    monitor = RunMonitor()
+    sched = BatchScheduler(engine, n_slots=4, max_len=128, on_event=monitor)
 
     print(f"# batched serving on {cfg.name} "
           f"({cfg.n_params() / 1e6:.1f}M params)")
@@ -33,29 +36,45 @@ def main():
     t0 = time.time()
     for p in prompts:
         sched.submit(p, max_new=12)
-    results = sched.run()
+    results = sched.drain()
     wall = time.time() - t0
-    print(f"# served {len(results)} requests in {wall:.1f}s "
-          f"({len(results) * 12 / wall:.1f} tok/s, CPU)")
+    toks = sum(r.new_tokens for r in results.values())
+    print(f"# served {len(results)} requests ({toks} new tokens) in "
+          f"{wall:.1f}s — {monitor.engine_steps} decode steps, "
+          f"peak occupancy {monitor.engine_peak_live}/{sched.n_slots}")
 
-    # real JAX engine as the agents' LLM endpoint (decisions from the
-    # oracle policy, every completion runs actual prefill+decode); the
-    # serving-side RunMonitor observes the run-event stream live
-    print("# AgentX with the JAX engine in the loop:")
-    monitor = RunMonitor()
-    session = Session(on_event=monitor)
+    # concurrent callers multiplexed onto the SAME batch via EngineClient
+    # (fresh monitor: the drain above already peaked the first one)
+    client_monitor = RunMonitor()
+    sched.subscribe(client_monitor)
+    client = EngineClient(sched)
     t0 = time.time()
-    r = session.execute(RunSpec(
-        "web_search", "edge", "agentx", "local", seed=0,
-        backend_factory=lambda world, policy, trace: JaxLLMBackend(
-            world, policy, engine, trace, max_gen=4)))
-    snap = monitor.snapshot()
-    print(f"#   success={r.success} agent_invocations="
-          f"{r.trace.agent_invocations} wall={time.time() - t0:.1f}s "
-          f"(every inference ran real prefill+decode)")
+    with ThreadPoolExecutor(max_workers=6) as pool:
+        outs = list(pool.map(lambda p: client.generate(p, 8), prompts))
+    print(f"# EngineClient: 6 threads, {sum(o.new_tokens for o in outs)} "
+          f"tokens in {time.time() - t0:.1f}s, peak occupancy "
+          f"{client_monitor.engine_peak_live}/{sched.n_slots}")
+
+    # the registry route: RunSpec.llm="jax-batched" puts the real engine
+    # in the agent loop; execute_many fan-out shares the decode batch
+    print(f"# llm backends: {llm_backend_names()}")
+    reset_llm_backends()
+    run_monitor = RunMonitor()
+    get_llm_backend("jax-batched").subscribe(run_monitor)
+    session = Session(on_event=run_monitor)
+    t0 = time.time()
+    rs = session.execute_many(
+        [RunSpec("web_search", "edge", "agentx", seed=s, llm="jax-batched")
+         for s in range(3)], max_workers=3)
+    snap = run_monitor.snapshot()
+    print(f"#   {len(rs)} agent runs success="
+          f"{[r.success for r in rs]} wall={time.time() - t0:.1f}s "
+          f"(every completion through the slot-batched engine)")
     print(f"#   live monitor: llm_calls={snap['llm_calls']} "
           f"tokens={snap['input_tokens']}/{snap['output_tokens']} "
-          f"tool_calls={snap['tool_calls']} in_flight={snap['in_flight']}")
+          f"engine_steps={snap['engine_steps']} "
+          f"peak_occupancy={snap['engine_peak_live']} "
+          f"engine_tokens={snap['engine_tokens']}")
 
 
 if __name__ == "__main__":

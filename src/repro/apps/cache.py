@@ -3,9 +3,10 @@
 Runs are deterministic per spec (seeded ``World``, virtual clock, stable
 seed derivation), so a completed :class:`RunResult` can be replayed for
 free.  The cache key is a digest over the spec identity PLUS the resolved
-:class:`PatternConfig` fingerprint and :class:`DeploymentCapabilities`
-fingerprint — re-registering a pattern or deployment with different knobs
-invalidates every cached run that used it, with no explicit flush.
+:class:`PatternConfig`, :class:`DeploymentCapabilities` AND
+:class:`ServingCapabilities` fingerprints — re-registering a pattern,
+deployment or LLM serving backend with different knobs invalidates every
+cached run that used it, with no explicit flush.
 
     from repro.apps.cache import RunCache
     from repro.apps.session import RunSpec, Session
@@ -18,18 +19,24 @@ invalidates every cached run that used it, with no explicit flush.
 cache is warm.  Specs carrying a ``backend_factory`` are not cacheable
 (arbitrary callables have no stable fingerprint) and always execute.
 
-Entries keep the full ``RunResult`` including ``extras`` (World, policy,
-events) so ``score_run`` works on replayed hits — a warm full-sweep cache
-therefore pins one World per combo.  ``clear()`` releases them; a disk
-layer with slimmed results is future work (see ROADMAP).
+Disk persistence (ROADMAP item): pass ``RunCache(cache_dir=...)`` and
+every completed run is also written as one wire-serialized JSON file
+(trace derived from the run's event stream; ``extras`` dropped except
+the events themselves). A fresh ``RunCache`` on the same directory —
+e.g. a ``Session`` constructed in a new process — loads them back, so
+cold ``run_sweep`` restarts are free too.  In-memory entries keep the
+full ``extras`` (World, policy) so ``score_run`` works on warm hits;
+disk-replayed hits carry only the event stream.
 """
 from __future__ import annotations
 
 import hashlib
 import json
+import os
 import threading
 from typing import Dict, Optional
 
+from ..core.events import derive_trace, events_from_wire, events_to_wire
 from ..core.metrics import RunResult
 
 
@@ -40,29 +47,79 @@ def spec_fingerprint(spec) -> Optional[str]:
         return None
     from ..core.runtime import resolve_pattern
     from ..faas.deployments import resolve_deployment
+    from ..serving.api import resolve_llm_backend
     payload = json.dumps({
         "app": spec.app,
         "instance": spec.instance,
         "pattern": spec.pattern,
         "deployment": spec.deployment,
+        "llm": spec.llm,
         "seed": spec.seed,
         "pattern_config": resolve_pattern(spec.pattern).config.fingerprint(),
         "deployment_caps":
             resolve_deployment(spec.deployment).capabilities.fingerprint(),
+        "serving_caps":
+            resolve_llm_backend(spec.llm).capabilities.fingerprint(),
     }, sort_keys=True)
     return hashlib.sha256(payload.encode()).hexdigest()
 
 
-class RunCache:
-    """Thread-safe in-memory RunResult store addressed by
-    :func:`spec_fingerprint`. Safe under ``Session.execute_many`` worker
-    threads."""
+def result_to_wire(result: RunResult) -> Dict:
+    """JSON-safe dict for one completed run: scalar fields + the run's
+    wire-serialized event stream (``extras`` beyond the events — World,
+    policy, outcome — are dropped; they don't serialize).  The spec seed
+    is kept so ``score_run`` can rebuild the deterministic world/policy
+    for a replayed result."""
+    spec = result.extras.get("spec")
+    return {
+        "app": result.app, "instance": result.instance,
+        "pattern": result.pattern, "deployment": result.deployment,
+        "seed": getattr(spec, "seed", result.extras.get("seed")),
+        "success": result.success, "total_latency": result.total_latency,
+        "artifact_path": result.artifact_path, "artifact": result.artifact,
+        "faas_cost": result.faas_cost,
+        "failure_reason": result.failure_reason,
+        "events": events_to_wire(result.extras.get("events", [])),
+    }
 
-    def __init__(self):
+
+def result_from_wire(d: Dict) -> RunResult:
+    """Inverse of :func:`result_to_wire`: the accounting ``Trace`` is
+    rebuilt from the event stream (``derive_trace``)."""
+    events = events_from_wire(d.get("events", []))
+    return RunResult(
+        app=d["app"], instance=d["instance"], pattern=d["pattern"],
+        deployment=d["deployment"], success=d["success"],
+        total_latency=d["total_latency"], trace=derive_trace(events),
+        artifact_path=d.get("artifact_path"), artifact=d.get("artifact"),
+        faas_cost=d.get("faas_cost", 0.0),
+        failure_reason=d.get("failure_reason", ""),
+        extras={"events": events, "seed": d.get("seed")})
+
+
+class RunCache:
+    """Thread-safe RunResult store addressed by :func:`spec_fingerprint`,
+    optionally persisted under ``cache_dir`` (one JSON file per entry).
+    Safe under ``Session.execute_many`` worker threads."""
+
+    def __init__(self, cache_dir: Optional[str] = None):
         self._lock = threading.Lock()
         self._store: Dict[str, RunResult] = {}
         self.hits = 0
         self.misses = 0
+        self.cache_dir = cache_dir
+        if cache_dir:
+            os.makedirs(cache_dir, exist_ok=True)
+            for fn in sorted(os.listdir(cache_dir)):
+                if not fn.endswith(".json"):
+                    continue
+                try:
+                    with open(os.path.join(cache_dir, fn)) as f:
+                        self._store[fn[:-5]] = result_from_wire(json.load(f))
+                except (OSError, KeyError, ValueError, TypeError):
+                    # corrupt, foreign, or schema-drifted file (TypeError:
+                    # event dataclass kwargs changed): treat as a miss
+                    continue
 
     def get(self, key: Optional[str]) -> Optional[RunResult]:
         if key is None:
@@ -80,12 +137,31 @@ class RunCache:
             return
         with self._lock:
             self._store[key] = result
+        if self.cache_dir:
+            # serialize + write OUTSIDE the lock: execute_many workers
+            # must not queue behind each other's JSON encoding/disk I/O.
+            # Per-key last-writer-wins via atomic rename; same key means
+            # same deterministic result anyway.  Persistence is an
+            # optimization — a full disk must not fail a completed run.
+            path = os.path.join(self.cache_dir, f"{key}.json")
+            tmp = f"{path}.tmp.{threading.get_ident()}"
+            try:
+                with open(tmp, "w") as f:
+                    json.dump(result_to_wire(result), f)
+                os.replace(tmp, path)   # atomic: no partial reads
+            except OSError:
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._store)
 
     def clear(self) -> None:
+        """Release in-memory entries and counters (disk files are kept —
+        a fresh RunCache on the same dir reloads them)."""
         with self._lock:
             self._store.clear()
             self.hits = 0

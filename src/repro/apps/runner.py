@@ -35,13 +35,13 @@ PATTERNS = _PatternView()
 
 def run_app(app_name: str, instance: str, pattern: str,
             deployment: str = "local", seed: int = 0,
-            backend_factory=None) -> RunResult:
-    """Execute one (app, instance, pattern, deployment) run.
+            backend_factory=None, llm: str = "oracle") -> RunResult:
+    """Execute one (app, instance, pattern, deployment, llm) run.
 
     Equivalent to ``Session().execute(RunSpec(...))``.
     """
     return Session().execute(RunSpec(app_name, instance, pattern, deployment,
-                                     seed, backend_factory))
+                                     seed, backend_factory, llm))
 
 
 def run_until_n_successes(app_name: str, instance: str, pattern: str,

@@ -1,14 +1,20 @@
 """Session / RunSpec orchestration API.
 
 ``RunSpec`` names one end-to-end run (app, instance, pattern, deployment,
-seed).  Both the ``pattern`` and the ``deployment`` fields are *registry
-names*: patterns resolve through ``@register_pattern``
-(:mod:`repro.core.runtime`) and deployments through
-``@register_deployment`` (:mod:`repro.faas.deployments`) — ``Session``
-itself never branches on either name.  A run's environment comes from the
-resolved :class:`DeploymentBackend`: ``provision`` builds the MCP clients
-and artifact stores, the backend's :class:`DeploymentCapabilities` shape
-the prompt, and ``teardown``/``cost`` close out the run.
+llm, seed).  The ``pattern``, ``deployment`` and ``llm`` fields are all
+*registry names*: patterns resolve through ``@register_pattern``
+(:mod:`repro.core.runtime`), deployments through ``@register_deployment``
+(:mod:`repro.faas.deployments`) and LLM serving backends through
+``@register_llm_backend`` (:mod:`repro.serving.api`) — ``Session``
+itself never branches on any of the three names.  A run's environment
+comes from the resolved :class:`DeploymentBackend`: ``provision`` builds
+the MCP clients and artifact stores, the backend's
+:class:`DeploymentCapabilities` shape the prompt, and
+``teardown``/``cost`` close out the run.  The run's *brain* comes from
+the resolved :class:`ServingBackend` (``oracle`` stand-in, per-call
+``jax`` engine, or ``jax-batched`` — completions multiplexed onto the
+continuous-batching scheduler, so ``execute_many`` fan-out shares one
+decode batch).
 
     from repro.apps.session import RunSpec, Session
 
@@ -35,26 +41,30 @@ from __future__ import annotations
 import dataclasses
 import zlib
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Iterable, List, Optional, Tuple
+from typing import Any, Callable, Iterable, List, Optional, Tuple
 
-from ..core.llm import OracleLLMBackend
 from ..core.metrics import RunResult, Trace
 from ..core.policies import POLICIES
 from ..core.runtime import RunOutcome, create_runner
 from ..env.world import World
 from ..eval.judge import Score, judge_stock, judge_summary
-from ..faas.deployments import create_deployment
+from ..faas.deployments import create_deployment, resolve_deployment
 from .apps import APPS
 from .cache import RunCache, spec_fingerprint
 
 
 @dataclasses.dataclass(frozen=True)
 class RunSpec:
-    """One (app, instance, pattern, deployment, seed) run.
+    """One (app, instance, pattern, deployment, llm, seed) run.
 
     deployment: any ``@register_deployment`` name — built-ins are
     "local" (Fig. 2a), "faas" (distributed, Fig. 2c), "faas-mono"
     (monolithic, Fig. 2b) and "a2a" (remote delegation).
+
+    llm: any ``@register_llm_backend`` name — built-ins are "oracle"
+    (seeded stand-in), "jax" (real engine, per-call) and "jax-batched"
+    (real engine, continuous batching).  ``backend_factory`` overrides
+    the registry with an arbitrary per-run factory (not cacheable).
     """
     app: str
     instance: str
@@ -62,6 +72,7 @@ class RunSpec:
     deployment: str = "local"
     seed: int = 0
     backend_factory: Optional[Callable] = None
+    llm: str = "oracle"
 
     def with_seed(self, seed: int) -> "RunSpec":
         return dataclasses.replace(self, seed=seed)
@@ -73,7 +84,10 @@ def stable_world_seed(spec: RunSpec) -> int:
     Uses CRC-32 instead of builtin ``hash`` (randomized per process via
     PYTHONHASHSEED), so identical specs produce identical runs everywhere
     — the invariant the run cache and cross-process reproducibility rest
-    on.
+    on.  ``spec.llm`` is deliberately NOT part of the key: the serving
+    backend is the brain's substrate, not the world — decisions come from
+    the seeded policy either way, so swapping oracle/jax/jax-batched must
+    not reshuffle the environment.
     """
     key = f"{spec.app}/{spec.instance}/{spec.pattern}/{spec.deployment}"
     return spec.seed * 9176 + zlib.crc32(key.encode()) % 10_000
@@ -133,9 +147,12 @@ class Session:
 
         policy = POLICIES[spec.app](world, task, spec.deployment, spec.seed)
         trace = Trace()
+        # deferred import: serving.api pulls the JAX stack, which the
+        # default oracle path should not pay at session import time
+        from ..serving.api import get_llm_backend
         llm = (spec.backend_factory(world, policy, trace)
                if spec.backend_factory
-               else OracleLLMBackend(world, policy, trace))
+               else get_llm_backend(spec.llm).make(world, policy, trace))
         runner = create_runner(spec.pattern, llm, env.clients, world, trace,
                                deployment=spec.deployment,
                                remote=backend.capabilities.remote,
@@ -213,10 +230,34 @@ class Session:
 
 
 def score_run(result: RunResult) -> Score:
-    world = result.extras["world"]
-    policy = result.extras["policy"]
+    world = result.extras.get("world")
+    policy = result.extras.get("policy")
+    if world is None or policy is None:
+        world, policy = _rebuild_env(result)
     if result.app == "stock_correlation":
         return judge_stock(world, policy.companies, policy.filename,
                            result.artifact_path, result.artifact)
     query = getattr(policy, "query", getattr(policy, "title", ""))
     return judge_summary(world, query, result.artifact, result.app)
+
+
+def _rebuild_env(result: RunResult) -> Tuple[World, Any]:
+    """Reconstruct the (world, policy) pair for a disk-replayed result.
+
+    Both are deterministic functions of the spec: the World's ground
+    truth derives from the stable spec seed at construction, and
+    policies draw from their own ``random.Random(seed)`` — so a rebuild
+    scores identically to the original in-memory extras."""
+    spec = result.extras.get("spec")
+    if spec is None:
+        seed = result.extras.get("seed")
+        if seed is None:
+            raise KeyError(
+                "cannot score this result: no extras and no stored seed")
+        spec = RunSpec(result.app, result.instance, result.pattern,
+                       result.deployment, seed)
+    world = World(seed=stable_world_seed(spec))
+    remote = resolve_deployment(spec.deployment).capabilities.remote
+    task = APPS[spec.app].prompt(spec.instance, remote)
+    policy = POLICIES[spec.app](world, task, spec.deployment, spec.seed)
+    return world, policy

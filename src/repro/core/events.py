@@ -84,6 +84,20 @@ class RunCompleted(RunEvent):
     data: Dict[str, Any]
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineStepped(RunEvent):
+    """Serving-side event: the continuous-batching scheduler advanced all
+    live decode slots by one step.  Emitted by the *engine*, not a run —
+    ``t`` carries the scheduler's monotonic step counter (the engine has
+    no virtual clock; it serves many runs/worlds at once).  ``live`` is
+    the decode-batch occupancy during the step, ``queued`` the number of
+    requests still waiting for a slot, and ``generated`` how many tokens
+    this step produced (== ``live``)."""
+    live: int
+    queued: int
+    generated: int
+
+
 # ---------------------------------------------------------------------------
 # wire protocol
 
@@ -91,7 +105,7 @@ _EVENT_TYPES: Dict[str, type] = {
     cls.__name__: cls
     for cls in (RunStarted, StageStarted, PlanProduced, LLMCompleted,
                 ToolInvoked, OverheadIncurred, ReflectionEmitted,
-                StageCompleted, RunCompleted)
+                StageCompleted, RunCompleted, EngineStepped)
 }
 
 # events whose ``event`` field is a nested metrics dataclass

@@ -14,8 +14,16 @@ The paper's "brain" is OpenAI gpt-4o-mini. Offline we provide:
   - ``JaxLLMBackend``: wraps the real JAX serving engine
     (``repro.serving``): every completion actually runs prefill+decode for
     the accounted token counts on a ModelConfig from the zoo, while
-    delegating decision content to the oracle policy. Used by integration
-    tests/examples to prove the full serving path.
+    delegating decision content to the oracle policy. Its endpoint is
+    anything exposing ``generate(prompt, max_new_tokens)`` — a plain
+    ``Engine`` (one unbatched generate per call) or an ``EngineClient``
+    (completions multiplexed onto the continuous-batching scheduler's
+    slot batch).
+
+Runs select their backend by *registry name*: ``RunSpec.llm`` resolves
+through ``@register_llm_backend`` (:mod:`repro.serving.api`; built-ins
+``oracle``, ``jax``, ``jax-batched``) — symmetric with the pattern and
+deployment registries, so ``Session`` never branches on a backend name.
 """
 from __future__ import annotations
 

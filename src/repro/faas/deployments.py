@@ -410,7 +410,8 @@ class RunServiceHandler:
         p = req.params
         try:
             spec = RunSpec(p["app"], p["instance"], p["pattern"],
-                           p.get("deployment", "local"), p.get("seed", 0))
+                           p.get("deployment", "local"), p.get("seed", 0),
+                           llm=p.get("llm", "oracle"))
             result = Session().execute(spec)
         except KeyError as e:   # bad params stay a JSON-RPC error envelope
             return McpResponse(req.id, error={
@@ -450,11 +451,12 @@ class RunServiceClient:
         self._ids = RequestIdGenerator()
 
     def execute(self, app: str, instance: str, pattern: str,
-                deployment: str = "local", seed: int = 0) -> Dict[str, Any]:
+                deployment: str = "local", seed: int = 0,
+                llm: str = "oracle") -> Dict[str, Any]:
         req = McpRequest(METHOD_EXECUTE_RUN,
                          {"app": app, "instance": instance,
                           "pattern": pattern, "deployment": deployment,
-                          "seed": seed}, id=self._ids.next())
+                          "seed": seed, "llm": llm}, id=self._ids.next())
         resp = self.transport.send(req)
         if not resp.ok:
             raise RuntimeError(f"run/execute failed: {resp.error}")

@@ -1,5 +1,5 @@
 """Serving launcher: batched requests through the continuous-batching
-scheduler.
+scheduler (one jitted decode step advances all live slots).
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --requests 8 --max-new 16
@@ -10,7 +10,7 @@ import argparse
 import time
 
 from ..configs import ARCHS, get_config
-from ..serving import BatchScheduler, Engine
+from ..serving import BatchScheduler, Engine, RunMonitor
 
 
 def main():
@@ -20,6 +20,7 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -27,7 +28,9 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     engine = Engine(cfg, seed=args.seed)
-    sched = BatchScheduler(engine, n_slots=args.slots)
+    monitor = RunMonitor()
+    sched = BatchScheduler(engine, n_slots=args.slots, max_len=args.max_len,
+                           on_event=monitor)
     prompts = [f"request {i}: summarize the latest agentic workflow results"
                for i in range(args.requests)]
     t0 = time.time()
@@ -35,9 +38,11 @@ def main():
         sched.submit(p, max_new=args.max_new)
     results = sched.run()
     wall = time.time() - t0
-    toks = args.requests * args.max_new
-    print(f"# served {len(results)} requests, ~{toks} new tokens in "
-          f"{wall:.1f}s ({toks / wall:.1f} tok/s on CPU)")
+    toks = monitor.engine_tokens + len(results)   # + first (prefill) tokens
+    print(f"# served {len(results)} requests, {toks} new tokens in "
+          f"{wall:.1f}s ({toks / wall:.1f} tok/s on CPU) — "
+          f"{monitor.engine_steps} decode steps, peak occupancy "
+          f"{monitor.engine_peak_live}/{args.slots}")
     for rid in sorted(results)[:3]:
         print(f"req{rid}: {results[rid][:48]!r}")
 

@@ -139,13 +139,34 @@ def gqa_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
     return out @ params["wo"], cache
 
 
+def decode_positions(pos: jax.Array, batch: int) -> jax.Array:
+    """Normalize a decode position to a per-sequence ``(B,)`` vector.
+
+    Accepts the historical scalar form (one position shared by the whole
+    batch) or a ``(B,)`` vector (continuous batching: every slot sits at
+    its own absolute position).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (batch,))
+    return pos
+
+
+def cache_slots(pos: jax.Array, cache_len: int, window: int) -> jax.Array:
+    """Per-sequence cache row to write the new token into: ring slot for
+    sliding-window caches, clamped absolute position otherwise."""
+    return jnp.where(window > 0, pos % cache_len,
+                     jnp.minimum(pos, cache_len - 1))
+
+
 def gqa_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
                pos: jax.Array, window: int = 0) -> Tuple[jax.Array, dict]:
     """One-token decode against a cache.
 
     x: (B, 1, d). cache: {"k","v"}: (B, C, Hkv, hd) where C is either the
     full context length or the sliding window size (ring buffer).
-    pos: scalar int32 — absolute position of the new token.
+    pos: scalar int32 or (B,) int32 vector — absolute position of each
+    sequence's new token (per-slot under continuous batching).
     """
     b, s, _ = x.shape
     assert s == 1
@@ -158,26 +179,29 @@ def gqa_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
     q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
     k = k.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
-    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    pos = decode_positions(pos, b)
+    posv = pos[:, None]
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
-    slot = jnp.where(window > 0, pos % cache_len, jnp.minimum(pos, cache_len - 1))
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    slot = cache_slots(pos, cache_len, window)
+    rows = jnp.arange(b)
+    ck = cache["k"].at[rows, slot].set(k[:, 0])
+    cv = cache["v"].at[rows, slot].set(v[:, 0])
     ck = constrain(ck, "kv_cache")
     cv = constrain(cv, "kv_cache")
-    # validity: ring slots written so far
+    # validity: cache rows written so far, per sequence
     idx = jnp.arange(cache_len)
     if window > 0:
-        valid = idx <= jnp.minimum(pos, cache_len - 1)  # ring fully valid once warm
+        # ring fully valid once warm
+        valid = idx[None, :] <= jnp.minimum(pos, cache_len - 1)[:, None]
     else:
-        valid = idx <= pos
+        valid = idx[None, :] <= pos[:, None]
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     group = hq // hkv
     qh = q.reshape(b, hkv, group, cfg.head_dim)
     scores = jnp.einsum("bhgd,bthd->bhgt", qh, ck).astype(jnp.float32)
     scores *= 1.0 / math.sqrt(cfg.head_dim)
-    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
     out = jnp.einsum("bhgt,bthd->bhgd", probs, cv).reshape(b, 1, hq * cfg.head_dim)
     return out @ params["wo"], {"k": ck, "v": cv}
@@ -209,6 +233,7 @@ def _mla_attend(params: dict, q_nope, q_rope, ckv, k_pe, cfg: ModelConfig,
 
     q_nope: (b,s,h,dn)  q_rope: (b,s,h,dr)
     ckv: (b,t,r)        k_pe: (b,t,1,dr)
+    mask: broadcastable to the (b,h,s,t) score tensor.
     """
     m = cfg.mla
     h = cfg.n_heads
@@ -220,7 +245,7 @@ def _mla_attend(params: dict, q_nope, q_rope, ckv, k_pe, cfg: ModelConfig,
     scores += jnp.einsum("bshd,btod->bhst", q_rope, k_pe)
     scores = scores.astype(jnp.float32) / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
     if mask is not None:
-        scores = jnp.where(mask[None, None], scores, -1e30)
+        scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
     o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv)          # (b,s,h,r)
     out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)           # (b,s,h,dv)
@@ -260,25 +285,27 @@ def mla_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
     q_nope, q_rope, ckv, k_pe = _mla_qkv(params, x, cfg, positions)
     s = x.shape[1]
     mask = causal_mask(s, s, window=window)
-    out = _mla_attend(params, q_nope, q_rope, ckv, k_pe, cfg, mask)
+    out = _mla_attend(params, q_nope, q_rope, ckv, k_pe, cfg,
+                      mask[None, None])
     return out, {"ckv": ckv, "kpe": k_pe[:, :, 0, :]}
 
 
 def mla_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
                pos: jax.Array, window: int = 0):
-    """cache: {"ckv": (B,C,r), "kpe": (B,C,dr)}."""
+    """cache: {"ckv": (B,C,r), "kpe": (B,C,dr)}.
+    pos: scalar int32 or (B,) int32 vector (per-slot positions)."""
     b = x.shape[0]
     cache_len = cache["ckv"].shape[1]
-    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    pos = decode_positions(pos, b)
+    posv = pos[:, None]
     q_nope, q_rope, ckv_new, k_pe_new = _mla_qkv(params, x, cfg, posv)
-    slot = jnp.where(window > 0, pos % cache_len, jnp.minimum(pos, cache_len - 1))
-    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, slot, 0))
-    kpe = jax.lax.dynamic_update_slice(cache["kpe"], k_pe_new[:, :, 0, :], (0, slot, 0))
+    slot = cache_slots(pos, cache_len, window)
+    rows = jnp.arange(b)
+    ckv = cache["ckv"].at[rows, slot].set(ckv_new[:, 0])
+    kpe = cache["kpe"].at[rows, slot].set(k_pe_new[:, 0, 0, :])
     ckv = constrain(ckv, "mla_cache")
     idx = jnp.arange(cache_len)
-    valid = idx <= (jnp.minimum(pos, cache_len - 1) if window == 0 else pos)
-    if window > 0:
-        valid = idx <= jnp.minimum(pos, cache_len - 1)
-    mask = valid[None, :]                                     # (s=1, C)
+    valid = idx[None, :] <= jnp.minimum(pos, cache_len - 1)[:, None]
+    mask = valid[:, None, None, :]                            # (b,1,s=1,C)
     out = _mla_attend(params, q_nope, q_rope, ckv, kpe[:, :, None, :], cfg, mask)
     return out, {"ckv": ckv, "kpe": kpe}

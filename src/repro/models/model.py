@@ -5,6 +5,7 @@ Entry points (all pure functions over a params pytree):
   loss_fn(params, cfg, batch)                          -> (loss, metrics)
   prefill(params, cfg, tokens, frontend_embeds=None)   -> (last_logits, cache)
   decode_step(params, cfg, cache, token, pos)          -> (logits, cache)
+      pos: scalar OR (B,) per-sequence position vector (slot batching)
   init_cache(cfg, batch, cache_len, dtype)             -> cache pytree
 
 Layers are lax.scan-stacked; hybrid (Zamba2) uses a two-level scan with a
@@ -362,11 +363,14 @@ def _recurrent_prefill(params, cfg, x, positions, window):
 def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
                 token: jax.Array, pos: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """token: (B, 1) int32; pos: scalar int32 absolute position.
-    Returns (logits (B, V), new cache)."""
+    """token: (B, 1) int32; pos: scalar int32 absolute position shared by
+    the batch, OR a (B,) int32 vector of per-sequence positions — the
+    continuous-batching serving path advances all live slots in one call,
+    each at its own position.  Returns (logits (B, V), new cache)."""
     x = jnp.take(params["embed"], token, axis=0)
     x = constrain(x, "activations")
     window = cfg.sliding_window
+    pos = L.decode_positions(pos, token.shape[0])
 
     if cfg.arch_type == "hybrid":
         x, new_cache = _hybrid_decode(params, cfg, cache, x, pos, window)

@@ -1,2 +1,34 @@
-from .engine import Engine, GenerationResult, RunMonitor, pad_cache_to
-from .scheduler import BatchScheduler
+"""Serving package — lazy exports (PEP 562).
+
+``Session`` resolves ``RunSpec.llm`` through :mod:`repro.serving.api`
+on every run, including oracle-only paper sweeps that never touch a
+real model; importing this package therefore must not pull the JAX
+stack. Engine/scheduler symbols load on first attribute access.
+"""
+import importlib
+
+_EXPORTS = {
+    "Engine": "engine", "GenerationResult": "engine",
+    "RunMonitor": "engine", "pad_cache_to": "engine",
+    "BatchScheduler": "scheduler", "EngineClient": "scheduler",
+    "Request": "scheduler", "write_slot": "scheduler",
+    "ServingBackend": "api", "ServingCapabilities": "api",
+    "get_llm_backend": "api", "llm_backend_names": "api",
+    "register_llm_backend": "api", "reset_llm_backends": "api",
+    "resolve_llm_backend": "api",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    return getattr(importlib.import_module(f".{module}", __name__), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,240 @@
+"""Typed serving API: the ``@register_llm_backend`` registry.
+
+Completes the registry trilogy — patterns (``@register_pattern``,
+:mod:`repro.core.runtime`), deployments (``@register_deployment``,
+:mod:`repro.faas.deployments`) and now LLM serving backends:
+``RunSpec.llm`` names a registered :class:`ServingBackend` and
+``Session.execute`` resolves it here with zero backend-name branches.
+
+A :class:`ServingBackend` is a *factory for per-run LLM backends* plus
+the engine lifecycle behind them: ``make(world, policy, trace)`` returns
+the :class:`repro.core.llm.LLMBackend` a run talks to, while expensive
+serving state (the JAX engine, the continuous-batching scheduler) is
+built lazily once and shared across runs.  Its
+:class:`ServingCapabilities` descriptor (real model? batched? which
+arch? token budget?) feeds the run cache's content address
+(:mod:`repro.apps.cache`) — retuning a backend invalidates cached runs
+with no explicit flush — and tells ``Session`` nothing: prompt shaping
+is the deployment's job, the brain's substrate is transparent to it.
+
+Built-ins:
+
+  - ``oracle`` — the deterministic seeded stand-in (paper protocol);
+    decisions from the application policy, token/cost accounting from
+    real prompt text. No model runs.
+  - ``jax`` — the real JAX engine, one *unbatched* generate per agent
+    call (kept as the simple reference path).
+  - ``jax-batched`` — the same engine behind ``EngineClient``: every
+    agent completion is submitted to the continuous-batching scheduler,
+    so concurrent runs share one slot-batched decode.
+
+    @register_llm_backend("jax-tuned", arch="qwen1.5-4b", n_slots=8)
+    class TunedServing(JaxBatchedServing):
+        ...
+
+``reset_llm_backends()`` drops the lazily-built singleton instances
+(tests; also frees engine memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional
+
+from ..configs import get_config
+from ..core.llm import JaxLLMBackend, LLMBackend, OracleLLMBackend
+from ..core.runtime import stable_fingerprint
+
+# NOTE: .engine/.scheduler (the JAX stack) are imported lazily inside the
+# jax-backed backends — resolving "oracle" must stay jax-free.
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingCapabilities:
+    """What a serving backend runs — consumed by the run cache for
+    fingerprinting and by observers/examples for display."""
+    name: str = ""
+    real_model: bool = False    # actual JAX forward passes per completion
+    batched: bool = False       # multiplexed onto the slot-batched engine
+    arch: str = ""              # ModelConfig zoo name (real backends)
+    reduced: bool = True        # serve the smoke-test reduced variant
+    max_gen: int = 0            # per-completion new-token budget (0 = backend default)
+    n_slots: int = 0            # decode batch width (batched backends)
+    max_len: int = 256          # slot context length
+    temperature: float = 0.0    # greedy by default: deterministic serving
+    tags: tuple = ()
+    rank: int = 50              # listing order
+
+    def fingerprint(self) -> str:
+        return stable_fingerprint(self)
+
+
+class ServingBackend:
+    """Base class: a named factory for per-run LLM backends + shared
+    engine lifecycle, described by a :class:`ServingCapabilities`."""
+
+    name = "base"
+    default_capabilities = ServingCapabilities()
+
+    def __init__(self, capabilities: Optional[ServingCapabilities] = None):
+        self.capabilities = (capabilities if capabilities is not None
+                             else type(self).default_capabilities)
+
+    def make(self, world, policy, trace) -> LLMBackend:
+        """Build the LLMBackend one run talks to."""
+        raise NotImplementedError
+
+    def subscribe(self, fn: Callable) -> None:
+        """Subscribe to serving-side run events (``EngineStepped``).
+        No-op for backends without an engine."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredServing:
+    name: str
+    backend_cls: type
+    capabilities: ServingCapabilities
+
+
+_SERVING: Dict[str, RegisteredServing] = {}
+_INSTANCES: Dict[str, ServingBackend] = {}
+_SERVING_LOCK = threading.Lock()
+
+
+def register_llm_backend(name: str, *, tags: tuple = (), **overrides):
+    """Class decorator registering a serving backend class under ``name``
+    with :class:`ServingCapabilities` overrides. Stack for variants."""
+    def deco(cls):
+        caps = dataclasses.replace(cls.default_capabilities, name=name,
+                                   tags=tuple(tags), **overrides)
+        with _SERVING_LOCK:
+            _SERVING[name] = RegisteredServing(name, cls, caps)
+            _INSTANCES.pop(name, None)
+        return cls
+    return deco
+
+
+def resolve_llm_backend(name: str) -> RegisteredServing:
+    try:
+        return _SERVING[name]
+    except KeyError:
+        raise KeyError(f"unknown llm backend {name!r}; registered: "
+                       f"{sorted(_SERVING)}") from None
+
+
+def llm_backend_names(tag: Optional[str] = None) -> List[str]:
+    named = [(rs.capabilities.rank, n) for n, rs in _SERVING.items()
+             if tag is None or tag in rs.capabilities.tags]
+    return [n for _, n in sorted(named)]
+
+
+def get_llm_backend(name: str) -> ServingBackend:
+    """Resolve ``name`` to its shared backend instance (lazily built:
+    engines are expensive and serve many runs)."""
+    rs = resolve_llm_backend(name)
+    with _SERVING_LOCK:
+        inst = _INSTANCES.get(name)
+        if inst is None:
+            inst = rs.backend_cls(capabilities=rs.capabilities)
+            _INSTANCES[name] = inst
+        return inst
+
+
+def reset_llm_backends() -> None:
+    """Drop all shared backend instances (their engines/schedulers)."""
+    with _SERVING_LOCK:
+        _INSTANCES.clear()
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+
+
+@register_llm_backend("oracle", tags=("paper",), rank=10)
+class OracleServing(ServingBackend):
+    """Deterministic seeded stand-in for the paper's gpt-4o-mini brain."""
+
+    name = "oracle"
+
+    def make(self, world, policy, trace) -> LLMBackend:
+        return OracleLLMBackend(world, policy, trace)
+
+
+class _JaxServingBase(ServingBackend):
+    """Shared lazy-engine lifecycle for the real-model backends."""
+
+    default_capabilities = ServingCapabilities(
+        real_model=True, arch="tinyllama-1.1b", max_gen=2)
+
+    def __init__(self, capabilities: Optional[ServingCapabilities] = None):
+        super().__init__(capabilities)
+        self._lock = threading.Lock()
+        self._engine = None
+
+    def engine(self) -> "Engine":
+        from .engine import Engine
+        with self._lock:
+            if self._engine is None:
+                cfg = get_config(self.capabilities.arch)
+                if self.capabilities.reduced:
+                    cfg = cfg.reduced()
+                self._engine = Engine(
+                    cfg, temperature=self.capabilities.temperature)
+            return self._engine
+
+    def endpoint(self):
+        """What ``JaxLLMBackend`` generates against."""
+        return self.engine()
+
+    def make(self, world, policy, trace) -> LLMBackend:
+        return JaxLLMBackend(world, policy, self.endpoint(), trace,
+                             max_gen=self.capabilities.max_gen or 16)
+
+
+@register_llm_backend("jax", rank=20)
+class JaxServing(_JaxServingBase):
+    """Real JAX engine, one unbatched generate per agent completion."""
+
+    name = "jax"
+
+
+@register_llm_backend("jax-batched", rank=30)
+class JaxBatchedServing(_JaxServingBase):
+    """Real JAX engine behind the continuous-batching scheduler: agent
+    completions from concurrent runs multiplex onto one slot-batched
+    decode via a blocking :class:`EngineClient`."""
+
+    name = "jax-batched"
+    # batched-ness lives on the CLASS, not the decorator: subclasses
+    # registered as variants inherit truthful capability metadata
+    default_capabilities = dataclasses.replace(
+        _JaxServingBase.default_capabilities, batched=True, n_slots=4)
+
+    def __init__(self, capabilities: Optional[ServingCapabilities] = None):
+        super().__init__(capabilities)
+        self._client = None
+        self._pending_subs: List[Callable] = []
+
+    def client(self) -> "EngineClient":
+        from .scheduler import BatchScheduler, EngineClient
+        engine = self.engine()
+        with self._lock:
+            if self._client is None:
+                sched = BatchScheduler(engine,
+                                       n_slots=self.capabilities.n_slots or 4,
+                                       max_len=self.capabilities.max_len)
+                for fn in self._pending_subs:
+                    sched.subscribe(fn)
+                self._pending_subs.clear()
+                self._client = EngineClient(sched)
+            return self._client
+
+    def subscribe(self, fn: Callable) -> None:
+        with self._lock:
+            if self._client is not None:
+                self._client.scheduler.subscribe(fn)
+            else:
+                self._pending_subs.append(fn)
+
+    def endpoint(self):
+        return self.client()

@@ -1,9 +1,16 @@
 """Serving engine: batched prefill + decode with per-arch cache handling.
 
-The engine backs ``JaxLLMBackend`` (the agents' LLM endpoint) and the
+The engine backs the ``@register_llm_backend`` serving backends
+(:mod:`repro.serving.api`) — the agents' LLM endpoint — and the
 serving-side benchmarks. Request flow mirrors production servers:
 tokenize -> prefill (cache warm-up) -> sampled decode loop -> detokenize,
-with a slot-based continuous-batching scheduler in ``scheduler.py``.
+with a slot-based continuous-batching scheduler in ``scheduler.py`` that
+multiplexes many concurrent requests onto one jitted ``decode_step``.
+
+Sampling is keyed by ``(engine seed, request id, step)`` — never by
+shared mutable RNG state — so a request samples the identical token
+sequence whether it runs alone, serially after other requests, or inside
+a decode batch (and the engine is thread-safe).
 """
 from __future__ import annotations
 
@@ -22,6 +29,16 @@ from ..models.model import decode_step, init_cache, prefill
 from ..models.params import init_params
 
 
+def cache_leaf_name(path) -> Optional[str]:
+    """Name of a cache leaf ("k"/"v"/"ckv"/"kpe"/"conv"/"ssd") from its
+    tree path — shared by seq-axis padding here and the slot-batch row
+    writes in ``scheduler.write_slot``."""
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return p.key
+    return None
+
+
 def pad_cache_to(cfg: ModelConfig, cache, target_len: int):
     """Grow a prefill cache (len S) to ``target_len`` along the seq axis.
     SSM states are length-free; sliding-window caches are re-rolled into
@@ -29,11 +46,7 @@ def pad_cache_to(cfg: ModelConfig, cache, target_len: int):
     window = cfg.sliding_window
 
     def pad(path, x):
-        name = None
-        for p in reversed(path):
-            if hasattr(p, "key"):
-                name = p.key
-                break
+        name = cache_leaf_name(path)
         if name not in ("k", "v", "ckv", "kpe"):
             return x
         seq_axis = x.ndim - 3 if name in ("k", "v") else x.ndim - 2
@@ -85,6 +98,12 @@ class RunMonitor:
     (``RunCompleted.completed``); artifact location and judge gating
     happen after the run, so it can exceed the number of runs whose
     ``RunResult.success`` is True.
+
+    Subscribe it to a :class:`BatchScheduler` too
+    (``BatchScheduler(..., on_event=monitor)`` or
+    ``scheduler.subscribe(monitor)``) and the serving-side
+    ``EngineStepped`` stream keeps live engine-occupancy gauges:
+    decode-batch fill, queue depth, tokens decoded.
     """
 
     def __init__(self):
@@ -99,6 +118,12 @@ class RunMonitor:
         self.tool_errors = 0
         self.framework_events = 0
         self.calls_per_agent: Dict[str, int] = {}
+        # serving-side gauges (EngineStepped stream)
+        self.engine_steps = 0
+        self.engine_live = 0
+        self.engine_queued = 0
+        self.engine_peak_live = 0
+        self.engine_tokens = 0
 
     def __call__(self, event) -> None:
         ev = run_events   # alias: keep the isinstance chain readable
@@ -120,6 +145,13 @@ class RunMonitor:
                 self.tool_errors += not event.event.ok
             elif isinstance(event, ev.OverheadIncurred):
                 self.framework_events += 1
+            elif isinstance(event, ev.EngineStepped):
+                self.engine_steps += 1
+                self.engine_live = event.live
+                self.engine_queued = event.queued
+                self.engine_peak_live = max(self.engine_peak_live,
+                                            event.live)
+                self.engine_tokens += event.generated
 
     def wire_observer(self):
         """Observer accepting wire-serialized event dicts
@@ -149,7 +181,33 @@ class RunMonitor:
                 "tool_errors": self.tool_errors,
                 "framework_events": self.framework_events,
                 "calls_per_agent": dict(self.calls_per_agent),
+                "engine_steps": self.engine_steps,
+                "engine_live": self.engine_live,
+                "engine_queued": self.engine_queued,
+                "engine_peak_live": self.engine_peak_live,
+                "engine_tokens": self.engine_tokens,
             }
+
+
+def _sample_row(logits: jax.Array, key: jax.Array, temperature: float,
+                top_p: float) -> jax.Array:
+    """Sample one token from a single (V,) logits row.
+
+    The batched scheduler vmaps this over slot rows and the serial path
+    calls it on a 1-row batch, so a request's sampled tokens are identical
+    either way (given the same per-request key).
+    """
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1)
 
 
 class Engine:
@@ -164,43 +222,83 @@ class Engine:
         self.temperature = temperature
         self.top_p = top_p
         self._prefill = jax.jit(functools.partial(prefill, cfg=cfg))
-        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
-        self._rng = jax.random.key(seed + 1)
+        # cache is donated: the decode loop threads it linearly, and the
+        # in-place update keeps the per-step cost flat in cache size
+        # (without donation XLA copies the whole slot batch every step)
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg),
+                               donate_argnames=("cache",))
+        self._base_key = jax.random.key(seed + 1)
+        self._sampler = None
+        self._sampler_knobs = None
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        self._rng, sub = jax.random.split(self._rng)
-        if self.temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        logits = logits / self.temperature
-        if self.top_p < 1.0:
-            sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
-            probs = jax.nn.softmax(sorted_logits, axis=-1)
-            cum = jnp.cumsum(probs, axis=-1)
-            cutoff_idx = jnp.sum(cum < self.top_p, axis=-1, keepdims=True)
-            cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-            logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-        return jax.random.categorical(sub, logits, axis=-1)
+    def _get_sampler(self):
+        """Jitted sampler for the CURRENT (temperature, top_p) — the
+        knobs steer python-level branches, so they are baked into the
+        trace; mutating them rebuilds the sampler (one retrace)."""
+        knobs = (self.temperature, self.top_p)
+        if knobs != self._sampler_knobs:
+            base_key, (temperature, top_p) = self._base_key, knobs
 
-    def generate(self, prompt: str, max_new_tokens: int = 32
-                 ) -> GenerationResult:
+            def sampler(logits, rids, steps):
+                keys = jax.vmap(lambda r, s: jax.random.fold_in(
+                    jax.random.fold_in(base_key, r), s))(rids, steps)
+                row = functools.partial(_sample_row, temperature=temperature,
+                                        top_p=top_p)
+                return jax.vmap(row)(logits, keys)
+
+            self._sampler = jax.jit(sampler)
+            self._sampler_knobs = knobs
+        return self._sampler
+
+    def sample(self, logits: jax.Array, rids, steps) -> jax.Array:
+        """Per-row sampling keyed by (engine seed, request id, step).
+
+        logits: (B, V); rids/steps: length-B int sequences. Stateless —
+        results are independent of request interleaving and of whether
+        rows share a batch.
+        """
+        return self._get_sampler()(logits, jnp.asarray(rids, jnp.int32),
+                                   jnp.asarray(steps, jnp.int32))
+
+    def generate(self, prompt: str, max_new_tokens: int = 32,
+                 rid: int = 0) -> GenerationResult:
         ids = self.tokenizer.encode(prompt)
-        return self.generate_ids(ids, max_new_tokens)
+        return self.generate_ids(ids, max_new_tokens, rid=rid)
 
-    def generate_ids(self, ids: List[int], max_new_tokens: int
-                     ) -> GenerationResult:
+    def prefill_ids(self, ids: List[int], cache_len: int):
+        """Prefill one request (batch 1) and pad its cache to
+        ``cache_len`` (+ frontend offset). Returns (last logits (1, V),
+        padded cache). THE prefill recipe — the serial loop below and
+        the batched scheduler's admission both call it, which is what
+        keeps batched decode bit-identical to serial generation."""
         cfg = self.cfg
         prompt = jnp.asarray([ids], jnp.int32)
-        total = len(ids) + max_new_tokens
         fe = None
         if cfg.frontend:
             fe = jnp.zeros((1, cfg.frontend_positions, cfg.d_model),
                            self.params["embed"].dtype)
         logits, cache = self._prefill(self.params, tokens=prompt,
                                       frontend_embeds=fe)
-        cache = pad_cache_to(cfg, cache, total + (cfg.frontend_positions
-                                                  if cfg.frontend else 0))
+        cache = pad_cache_to(cfg, cache, cache_len +
+                             (cfg.frontend_positions if cfg.frontend else 0))
+        return logits, cache
+
+    def generate_ids(self, ids: List[int], max_new_tokens: int,
+                     rid: int = 0, cache_len: Optional[int] = None
+                     ) -> GenerationResult:
+        """Serial per-request generation.
+
+        ``rid`` keys the sampling RNG; ``cache_len`` fixes the decode
+        cache length (defaults to exactly prompt+new tokens — pass the
+        scheduler's ``max_len`` to compare against batched decode under
+        identical shapes).
+        """
+        cfg = self.cfg
+        total = cache_len if cache_len is not None else (
+            len(ids) + max_new_tokens)
+        logits, cache = self.prefill_ids(ids, total)
         new_ids: List[int] = []
-        tok = self._sample(logits)
+        tok = self.sample(logits, [rid], [0])
         offset = cfg.frontend_positions if cfg.frontend else 0
         for i in range(max_new_tokens):
             new_ids.append(int(tok[0]))
@@ -209,7 +307,7 @@ class Engine:
             pos = jnp.int32(offset + len(ids) + i)
             logits, cache = self._decode(self.params, cache=cache,
                                          token=tok[:, None], pos=pos)
-            tok = self._sample(logits)
+            tok = self.sample(logits, [rid], [i + 1])
         return GenerationResult(self.tokenizer.decode(new_ids), len(ids),
                                 len(new_ids), new_ids)
 

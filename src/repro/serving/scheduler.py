@@ -1,23 +1,43 @@
-"""Continuous-batching scheduler.
+"""Continuous-batching scheduler: one jitted decode advances ALL slots.
 
-Slot-based: a fixed decode batch of ``n_slots`` sequences; finished
-sequences free their slot and the next queued request is prefilled into it
-(vLLM-style continuous batching, TPU-friendly fixed shapes — no paged
-indirection, which doesn't map well onto dense XLA buffers).
+Slot-based, vLLM-style, TPU-friendly fixed shapes (no paged indirection,
+which doesn't map well onto dense XLA buffers):
+
+  * the decode cache carries an ``n_slots`` batch axis allocated once
+    (``init_cache(cfg, n_slots, max_len)``);
+  * admission prefills a request on its own (batch-1) and writes the
+    padded prefill cache into the free slot's row (:func:`write_slot`);
+  * every :meth:`BatchScheduler.step` runs ONE jitted ``decode_step``
+    over the whole slot batch with a per-slot position *vector* — live
+    slots advance together, finished slots free their row and the next
+    queued request is admitted into it.
+
+Sampling is keyed by (engine seed, request id, step) via
+``Engine.sample``, so a request's token sequence is bit-identical to
+serial ``Engine.generate_ids`` — greedy parity is enforced by test.
+
+``EngineClient`` is the blocking handle that multiplexes many concurrent
+agent runs onto one scheduler: callers block in ``generate`` while one of
+them pumps ``step()`` — fan-out runs (``Session.execute_many`` workers)
+therefore share the decode batch instead of serializing on the engine.
+
+Observability: each step emits a serving-side
+:class:`repro.core.events.EngineStepped` run event (occupancy, queue
+depth, tokens decoded) to subscribers — ``RunMonitor`` consumes it live.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig
-from ..data.tokenizer import HashTokenizer
-from ..models.model import decode_step, init_cache, prefill
-from .engine import Engine, pad_cache_to
+from ..core.events import EngineStepped
+from ..models.model import init_cache
+from .engine import Engine, GenerationResult, cache_leaf_name
 
 
 @dataclasses.dataclass
@@ -28,44 +48,218 @@ class Request:
     out_ids: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
+    def to_result(self, tokenizer) -> GenerationResult:
+        return GenerationResult(tokenizer.decode(self.out_ids),
+                                len(self.prompt_ids), len(self.out_ids),
+                                list(self.out_ids))
+
+
+# cache leaves carry their slot (batch) axis at a name-dependent offset
+# from the right: (*stack, B, C, Hkv, hd) for k/v, (*stack, B, nh, hd, ds)
+# for ssd states, (*stack, B, C, r) for MLA, (*stack, B, W-1, ch) for conv.
+_ROW_AXIS_OFFSET = {"k": 4, "v": 4, "ssd": 4, "ckv": 3, "kpe": 3, "conv": 3}
+
+
+def write_slot(batched_cache, row_cache, slot):
+    """Write a batch-1 cache (already padded to the batched cache's seq
+    length, see ``pad_cache_to``) into row ``slot`` of the slot-batched
+    decode cache. Works for every cache family (GQA/MLA/SSM/hybrid) via
+    the leaf-name -> batch-axis table."""
+    def ins(path, big, small):
+        axis = big.ndim - _ROW_AXIS_OFFSET[cache_leaf_name(path)]
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis)
+    return jax.tree_util.tree_map_with_path(ins, batched_cache, row_cache)
+
 
 class BatchScheduler:
-    """Drives an Engine's model with a fixed slot batch."""
+    """Drives an Engine's model with a fixed slot batch.
+
+    ``submit()`` enqueues; ``step()`` admits queued requests into free
+    slots (prefill + slot write) then advances all live slots by one
+    batched decode; ``drain()`` steps to completion. ``run()`` is the
+    historical drain-to-text entry point.
+
+    ``requests`` keeps per-rid bookkeeping for inspection after a
+    bounded submit/drain cycle; long-lived callers should go through
+    :class:`EngineClient`, which prunes completed entries.
+    """
 
     def __init__(self, engine: Engine, n_slots: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512,
+                 on_event: Optional[Callable] = None):
         self.engine = engine
         self.cfg = engine.cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        self._offset = self.cfg.frontend_positions if self.cfg.frontend else 0
+        self._cache_len = max_len + self._offset
         self.queue: Deque[Request] = deque()
+        self._qlock = threading.Lock()
         self.slots: List[Optional[Request]] = [None] * n_slots
+        self.requests: Dict[int, Request] = {}
         self._next_rid = 0
+        self._steps = 0
+        self._pos = [0] * n_slots   # next decode position per slot
+        self._tok = [0] * n_slots   # last sampled token per slot
+        self._cache = init_cache(self.cfg, n_slots, self._cache_len,
+                                 dtype=self.engine.params["embed"].dtype)
+        # batched cache is donated through admission writes too: the slot
+        # row update happens in place instead of copying all slots
+        self._insert = jax.jit(write_slot, donate_argnums=(0,))
+        self._subscribers: List[Callable] = []
+        if on_event is not None:
+            self._subscribers.append(on_event)
 
-    def submit(self, prompt: str, max_new: int = 32) -> int:
-        ids = self.engine.tokenizer.encode(prompt)[-(self.max_len // 2):]
-        req = Request(self._next_rid, ids, max_new)
-        self._next_rid += 1
-        self.queue.append(req)
+    # -- events -------------------------------------------------------------
+    def subscribe(self, fn: Callable) -> None:
+        self._subscribers.append(fn)
+
+    def _emit(self, event) -> None:
+        for fn in self._subscribers:
+            fn(event)
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, prompt: Optional[str] = None, max_new: int = 32,
+               prompt_ids: Optional[List[int]] = None) -> int:
+        """Enqueue one request; returns its rid. Thread-safe.
+
+        The prompt is truncated to half the slot context and ``max_new``
+        clamped so prompt+generation always fit the fixed cache."""
+        ids = (list(prompt_ids) if prompt_ids is not None
+               else self.engine.tokenizer.encode(prompt))
+        ids = ids[-(self.max_len // 2):]
+        max_new = max(1, min(max_new, self.max_len - len(ids)))
+        with self._qlock:
+            req = Request(self._next_rid, ids, max_new)
+            self._next_rid += 1
+            self.requests[req.rid] = req
+            self.queue.append(req)
         return req.rid
 
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                self.slots[i] = self.queue.popleft()
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        """Prefill one request (``Engine.prefill_ids`` — the same recipe
+        the serial path uses) and, if it survives its first token, write
+        the padded cache into the free slot's row."""
+        logits, cache = self.engine.prefill_ids(req.prompt_ids, self.max_len)
+        tok = int(self.engine.sample(logits, [req.rid], [0])[0])
+        req.out_ids.append(tok)
+        if tok == self.engine.tokenizer.eos or len(req.out_ids) >= req.max_new:
+            req.done = True   # finished on the prefill token: skip the
+            return            # whole-batch slot write, nothing reads it
+        self._cache = self._insert(self._cache, cache, slot)
+        self.slots[slot] = req
+        self._pos[slot] = self._offset + len(req.prompt_ids)
+        self._tok[slot] = tok
+
+    def _admit(self, finished: List[Request]) -> None:
+        for i in range(self.n_slots):
+            while self.slots[i] is None:
+                with self._qlock:
+                    if not self.queue:
+                        return
+                    req = self.queue.popleft()
+                self._prefill_into(i, req)
+                if req.done:   # eos/budget hit on the prefill logits
+                    finished.append(req)
+
+    # -- the batched decode step --------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit into free slots, then advance ALL live slots one token
+        with a single jitted decode over the slot batch. Returns the
+        requests that finished this step."""
+        finished: List[Request] = []
+        self._admit(finished)
+        live = [i for i in range(self.n_slots) if self.slots[i] is not None]
+        if live:
+            tokens = jnp.asarray([[t] for t in self._tok], jnp.int32)
+            pos = jnp.asarray(self._pos, jnp.int32)
+            logits, self._cache = self.engine._decode(
+                self.engine.params, cache=self._cache, token=tokens, pos=pos)
+            rids = [r.rid if (r := self.slots[i]) is not None else 0
+                    for i in range(self.n_slots)]
+            steps = [len(r.out_ids) if (r := self.slots[i]) is not None else 0
+                     for i in range(self.n_slots)]
+            toks = [int(t) for t in self.engine.sample(logits, rids, steps)]
+            eos = self.engine.tokenizer.eos
+            for i in live:
+                req = self.slots[i]
+                req.out_ids.append(toks[i])
+                self._pos[i] += 1
+                self._tok[i] = toks[i]
+                if toks[i] == eos or len(req.out_ids) >= req.max_new:
+                    req.done = True
+                    finished.append(req)
+                    self.slots[i] = None   # slot freed -> next admission
+        self._steps += 1
+        with self._qlock:
+            queued = len(self.queue)
+        self._emit(EngineStepped(t=float(self._steps), live=len(live),
+                                 queued=queued, generated=len(live)))
+        return finished
+
+    # -- draining -----------------------------------------------------------
+    def has_work(self) -> bool:
+        with self._qlock:
+            queued = bool(self.queue)
+        return queued or any(s is not None for s in self.slots)
+
+    def occupancy(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def drain(self) -> Dict[int, GenerationResult]:
+        """Step to completion; returns {rid: GenerationResult}."""
+        done: Dict[int, GenerationResult] = {}
+        while self.has_work():
+            for req in self.step():
+                done[req.rid] = req.to_result(self.engine.tokenizer)
+        return done
 
     def run(self) -> Dict[int, str]:
-        """Run to completion (simple synchronous loop; per-slot decode)."""
-        results: Dict[int, str] = {}
-        self._admit()
-        while any(s is not None for s in self.slots) or self.queue:
-            for i, req in enumerate(self.slots):
-                if req is None:
+        """Historical entry point: drain and return {rid: text}."""
+        return {rid: r.text for rid, r in self.drain().items()}
+
+
+class EngineClient:
+    """Blocking, thread-safe handle multiplexing concurrent callers onto
+    one :class:`BatchScheduler`.
+
+    ``generate`` submits and blocks until its request completes. While
+    any request is in flight exactly one blocked caller "pumps" the
+    scheduler (``step()``) with the lock released, so other threads keep
+    submitting into the SAME decode batch — this is the pump mode that
+    lets ``Session.execute_many`` fan-out share the engine. Duck-types
+    ``Engine.generate``, so ``JaxLLMBackend`` can point at either.
+    """
+
+    def __init__(self, scheduler: BatchScheduler):
+        self.scheduler = scheduler
+        self._cv = threading.Condition()
+        self._pumping = False
+        self._results: Dict[int, GenerationResult] = {}
+
+    def generate(self, prompt: str, max_new_tokens: int = 32
+                 ) -> GenerationResult:
+        with self._cv:
+            rid = self.scheduler.submit(prompt, max_new=max_new_tokens)
+            while rid not in self._results:
+                if self._pumping:
+                    # someone else is driving the engine; wake on step end
+                    self._cv.wait(timeout=0.002)
                     continue
-                gen = self.engine.generate_ids(req.prompt_ids, req.max_new)
-                req.out_ids = gen.token_ids
-                req.done = True
-                results[req.rid] = gen.text
-                self.slots[i] = None
-            self._admit()
-        return results
+                self._pumping = True
+                self._cv.release()
+                try:
+                    finished = self.scheduler.step()
+                finally:
+                    self._cv.acquire()
+                    self._pumping = False
+                tokenizer = self.scheduler.engine.tokenizer
+                for req in finished:
+                    self._results[req.rid] = req.to_result(tokenizer)
+                    # the client is the long-lived path (backend
+                    # singleton): drop completed bookkeeping so the
+                    # scheduler doesn't grow without bound
+                    self.scheduler.requests.pop(req.rid, None)
+                self._cv.notify_all()
+            return self._results.pop(rid)

@@ -1,0 +1,336 @@
+"""Serving API redesign: LLM-backend registry + continuous-batching
+slot decode.
+
+Covers the acceptance criteria of the redesign:
+  * greedy batched decode is BIT-IDENTICAL to serial per-request
+    generation (per arch family: GQA, MLA, SSM, sliding-window ring);
+  * sampled decode too — sampling is keyed by (seed, rid, step), never
+    by shared mutable RNG state, so interleaving cannot change results;
+  * scheduler admission / slot-free / re-admission under mixed lengths;
+  * EngineClient multiplexes concurrent callers onto one decode batch;
+  * all LLM backends resolve via @register_llm_backend and
+    Session.execute carries no backend-name branches;
+  * RunCache persists wire-serialized results to disk.
+"""
+import dataclasses
+import tempfile
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.apps.cache import RunCache, spec_fingerprint
+from repro.apps.session import RunSpec, Session
+from repro.configs import get_config
+from repro.core.events import EngineStepped, from_wire, to_wire
+from repro.serving import (BatchScheduler, Engine, EngineClient, RunMonitor,
+                           get_llm_backend, llm_backend_names,
+                           register_llm_backend, reset_llm_backends,
+                           resolve_llm_backend, write_slot)
+from repro.serving.api import JaxServing
+
+
+PROMPTS = ["hello world", "a much longer prompt about agents and tools",
+           "x", "another prompt", "fifth!", "sixth prompt here"]
+
+
+def _parity_engine(arch, **over):
+    cfg = get_config(arch).reduced()
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    return Engine(cfg, temperature=0.0)
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-serial parity
+
+
+@pytest.mark.parametrize("arch,over", [
+    ("tinyllama-1.1b", {}),                      # GQA
+    ("deepseek-v2-236b", {}),                    # MLA compressed cache
+    ("mamba2-370m", {}),                         # SSM (position-free state)
+    ("zamba2-7b", {}),                           # hybrid two-level stacks
+    ("tinyllama-1.1b", {"sliding_window": 16}),  # ring-buffer cache
+], ids=["gqa", "mla", "ssm", "hybrid", "window"])
+def test_greedy_batched_matches_serial_bit_identical(arch, over):
+    eng = _parity_engine(arch, **over)
+    sched = BatchScheduler(eng, n_slots=3, max_len=64)
+    maxn = [8, 5, 12, 7, 9, 6]
+    rids = [sched.submit(p, max_new=m) for p, m in zip(PROMPTS, maxn)]
+    results = sched.drain()
+    assert set(results) == set(rids)
+    for rid, m in zip(rids, maxn):
+        req = sched.requests[rid]
+        ref = eng.generate_ids(req.prompt_ids, m, rid=rid,
+                               cache_len=sched.max_len)
+        assert results[rid].token_ids == ref.token_ids, \
+            f"rid {rid}: batched decode diverged from serial"
+
+
+def test_sampled_batched_matches_serial():
+    """Per-request RNG: (seed, rid, step)-keyed sampling makes batched
+    and serial runs sample identically even at temperature > 0."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    eng = Engine(cfg, temperature=0.8, top_p=0.9, seed=3)
+    sched = BatchScheduler(eng, n_slots=2, max_len=64)
+    rids = [sched.submit(p, max_new=6) for p in PROMPTS[:4]]
+    results = sched.drain()
+    for rid in rids:
+        req = sched.requests[rid]
+        ref = eng.generate_ids(req.prompt_ids, 6, rid=rid,
+                               cache_len=sched.max_len)
+        assert results[rid].token_ids == ref.token_ids
+
+
+def test_sampling_independent_of_interleaving():
+    """The engine no longer mutates shared RNG state: a request's tokens
+    do not depend on what was generated before it (thread-safety)."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    eng = Engine(cfg, temperature=1.0, seed=7)
+    ids = eng.tokenizer.encode("interleaving probe")
+    a = eng.generate_ids(ids, 6, rid=5)
+    eng.generate_ids(eng.tokenizer.encode("other traffic"), 4, rid=1)
+    eng.generate_ids(eng.tokenizer.encode("more traffic"), 3, rid=2)
+    b = eng.generate_ids(ids, 6, rid=5)
+    assert a.token_ids == b.token_ids
+
+
+def test_write_slot_covers_hybrid_cache():
+    """Slot insertion handles every cache family, including the hybrid
+    two-level stacks (groups of SSM states + shared-attn KV)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.model import init_cache
+    cfg = get_config("zamba2-7b").reduced()
+    big = init_cache(cfg, 3, 32)
+    # batch-1 row of the same tree shapes, filled with ones
+    row = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), _take_row(big, 0))
+    out = write_slot(big, row, 1)
+    flat_out = jax.tree_util.tree_leaves(_take_row(out, 1))
+    assert all(bool(jnp.all(x == 1)) for x in flat_out)
+    flat_other = jax.tree_util.tree_leaves(_take_row(out, 0))
+    assert all(bool(jnp.all(x == 0)) for x in flat_other)
+
+
+def _take_row(cache, slot):
+    import jax
+    from repro.serving.engine import cache_leaf_name
+    from repro.serving.scheduler import _ROW_AXIS_OFFSET
+
+    def take(path, x):
+        axis = x.ndim - _ROW_AXIS_OFFSET[cache_leaf_name(path)]
+        return jax.lax.slice_in_dim(x, slot, slot + 1, axis=axis)
+    return jax.tree_util.tree_map_with_path(take, cache)
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics
+
+
+def test_scheduler_admission_slot_free_and_reuse():
+    """Mixed lengths: finished sequences free their slot mid-flight and
+    queued requests are admitted into it (continuous batching)."""
+    eng = _parity_engine("tinyllama-1.1b")
+    monitor = RunMonitor()
+    sched = BatchScheduler(eng, n_slots=2, max_len=64, on_event=monitor)
+    maxn = [2, 10, 3, 8, 2]
+    rids = [sched.submit(f"prompt {i}", max_new=m)
+            for i, m in enumerate(maxn)]
+    seen_queued = False
+    occupancies = []
+    while sched.has_work():
+        sched.step()
+        occupancies.append(sched.occupancy())
+        seen_queued = seen_queued or monitor.engine_queued > 0
+    assert seen_queued, "5 requests on 2 slots must queue"
+    assert max(occupancies + [0]) <= 2
+    assert monitor.engine_peak_live == 2
+    assert all(sched.requests[r].done for r in rids)
+    assert all(s is None for s in sched.slots)
+    for r, m in zip(rids, maxn):
+        assert 1 <= len(sched.requests[r].out_ids) <= m
+
+
+def test_scheduler_clamps_to_slot_context():
+    eng = _parity_engine("tinyllama-1.1b")
+    sched = BatchScheduler(eng, n_slots=1, max_len=32)
+    rid = sched.submit("p" * 500, max_new=99)   # overlong prompt + budget
+    req = sched.requests[rid]
+    assert len(req.prompt_ids) <= 16
+    assert len(req.prompt_ids) + req.max_new <= 32
+    results = sched.drain()
+    assert rid in results
+
+
+def test_engine_client_multiplexes_threads():
+    """Concurrent generate() callers share the decode batch and each gets
+    exactly the tokens serial generation would produce."""
+    eng = _parity_engine("tinyllama-1.1b")
+    monitor = RunMonitor()
+    sched = BatchScheduler(eng, n_slots=4, max_len=64, on_event=monitor)
+    client = EngineClient(sched)
+    with ThreadPoolExecutor(max_workers=6) as pool:
+        outs = list(pool.map(lambda p: client.generate(p, 8), PROMPTS))
+    assert not sched.requests, "client must prune completed bookkeeping"
+    for out, prompt in zip(outs, PROMPTS):
+        ids = eng.tokenizer.encode(prompt)[-(sched.max_len // 2):]
+        # greedy sampling ignores the rid key, so one serial reference
+        # per prompt covers whatever rid the thread's submission drew
+        ref = eng.generate_ids(ids, 8, cache_len=sched.max_len)
+        assert out.token_ids == ref.token_ids
+    assert monitor.engine_peak_live >= 2, "threads should share the batch"
+
+
+# ---------------------------------------------------------------------------
+# registry + session integration
+
+
+def test_registry_resolves_all_builtin_backends():
+    names = llm_backend_names()
+    assert names[:3] == ["oracle", "jax", "jax-batched"]
+    for n in names:
+        rs = resolve_llm_backend(n)
+        assert rs.capabilities.name == n
+    caps = resolve_llm_backend("jax-batched").capabilities
+    assert caps.real_model and caps.batched and caps.n_slots >= 1
+
+
+def test_unknown_backend_lists_registered():
+    with pytest.raises(KeyError, match="oracle"):
+        resolve_llm_backend("gpt-4o-mini")
+
+
+def test_register_variant_and_fingerprint():
+    @register_llm_backend("jax-test-variant", arch="qwen1.5-4b", n_slots=2)
+    class _Variant(JaxServing):
+        name = "jax-test-variant"
+
+    spec = RunSpec("web_search", "quantum", "agentx", llm="jax-test-variant")
+    base = RunSpec("web_search", "quantum", "agentx", llm="jax")
+    oracle = RunSpec("web_search", "quantum", "agentx")
+    fps = {spec_fingerprint(s) for s in (spec, base, oracle)}
+    assert len(fps) == 3, "serving capabilities must address the cache"
+
+
+def test_jax_batched_end_to_end_agent_run():
+    """The full agent loop with the slot-batched engine as its LLM
+    endpoint, selected purely by registry name."""
+    reset_llm_backends()
+    monitor = RunMonitor()
+    get_llm_backend("jax-batched").subscribe(monitor)
+    r = Session(on_event=monitor).execute(
+        RunSpec("web_search", "quantum", "react", llm="jax-batched"))
+    assert r.success
+    assert r.trace.agent_invocations >= 3
+    assert monitor.engine_steps > 0, "completions must go through the batch"
+    assert monitor.engine_tokens > 0
+    reset_llm_backends()
+
+
+def test_oracle_path_stays_jax_free():
+    """Registry resolution and a full oracle run must not pull the JAX
+    stack (serving exports are lazy; api defers engine imports)."""
+    import subprocess
+    import sys
+    code = (
+        "import sys\n"
+        "from repro.apps.session import RunSpec, Session\n"
+        "r = Session().execute(RunSpec('web_search', 'quantum', 'agentx'))\n"
+        "assert r.trace.agent_invocations >= 1\n"
+        "assert 'jax' not in sys.modules, 'oracle run imported jax'\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+
+def test_run_service_carries_llm_field():
+    """run/execute plumbs RunSpec.llm symmetrically with deployment."""
+    from repro.env.world import World
+    from repro.faas.deployments import RunServiceClient
+    from repro.faas.platform import FaaSPlatform
+    world = World(seed=0)
+    client = RunServiceClient(FaaSPlatform(world))
+    out = client.execute("web_search", "quantum", "react", llm="oracle")
+    assert out["success"] in (True, False)
+    assert out["input_tokens"] > 0
+
+
+def test_oracle_runs_identical_across_llm_field_default():
+    """Registry-resolved oracle == the historical hardwired oracle."""
+    a = Session().execute(RunSpec("web_search", "quantum", "agentx", seed=2))
+    b = Session().execute(RunSpec("web_search", "quantum", "agentx", seed=2,
+                                  llm="oracle"))
+    assert a.success == b.success
+    assert a.trace.input_tokens == b.trace.input_tokens
+    assert a.total_latency == pytest.approx(b.total_latency)
+
+
+# ---------------------------------------------------------------------------
+# serving-side events + disk cache
+
+
+def test_engine_stepped_wire_roundtrip():
+    ev = EngineStepped(t=3.0, live=2, queued=5, generated=2)
+    assert from_wire(to_wire(ev)) == ev
+
+
+def test_run_monitor_sees_engine_occupancy():
+    eng = _parity_engine("tinyllama-1.1b")
+    monitor = RunMonitor()
+    sched = BatchScheduler(eng, n_slots=2, max_len=64)
+    sched.subscribe(monitor)
+    for p in PROMPTS[:3]:
+        sched.submit(p, max_new=4)
+    results = sched.drain()
+    snap = monitor.snapshot()
+    assert snap["engine_steps"] == sched._steps
+    assert snap["engine_peak_live"] == 2
+    assert snap["engine_tokens"] == sum(
+        r.new_tokens for r in results.values()) - len(results)  # prefill tok
+    # engine_live reports occupancy DURING the last step (>=1: something
+    # finished in it); the drained scheduler itself is idle
+    assert 1 <= snap["engine_live"] <= 2
+    assert sched.occupancy() == 0 and not sched.has_work()
+
+
+def test_run_cache_persists_to_disk():
+    spec = RunSpec("web_search", "quantum", "agentx", seed=4)
+    with tempfile.TemporaryDirectory() as d:
+        warm = RunCache(cache_dir=d)
+        r1 = Session(cache=warm).execute(spec)
+        assert warm.stats()["misses"] == 1
+
+        cold = RunCache(cache_dir=d)      # fresh process simulation
+        assert len(cold) == 1
+        r2 = Session(cache=cold).execute(spec)
+        assert cold.stats() == {"entries": 1, "hits": 1, "misses": 0}
+        assert r2.success == r1.success
+        assert r2.total_latency == pytest.approx(r1.total_latency)
+        assert r2.trace.input_tokens == r1.trace.input_tokens
+        assert r2.trace.tool_invocations == r1.trace.tool_invocations
+        assert len(r2.extras["events"]) == len(r1.extras["events"])
+        assert r2.artifact == r1.artifact
+
+
+def test_score_run_on_disk_replayed_result():
+    """Disk entries drop World/policy extras; score_run rebuilds the
+    deterministic pair and scores identically to the warm path."""
+    from repro.apps.session import score_run
+    spec = RunSpec("web_search", "quantum", "agentx", seed=1)
+    with tempfile.TemporaryDirectory() as d:
+        r1 = Session(cache=RunCache(cache_dir=d)).execute(spec)
+        warm_score = score_run(r1)
+        r2 = Session(cache=RunCache(cache_dir=d)).execute(spec)
+        assert "world" not in r2.extras   # genuinely replayed from disk
+        cold_score = score_run(r2)
+        assert cold_score.attributes == warm_score.attributes
+
+
+def test_run_cache_skips_corrupt_disk_entries():
+    with tempfile.TemporaryDirectory() as d:
+        with open(f"{d}/deadbeef.json", "w") as f:
+            f.write("{not json")
+        with open(f"{d}/readme.txt", "w") as f:
+            f.write("ignore me")
+        cache = RunCache(cache_dir=d)
+        assert len(cache) == 0
