@@ -1,5 +1,5 @@
 """Serving throughput benchmark: slot-batched decode vs the serial
-per-slot loop.
+per-slot loop, and scheduler-v2 admission latency.
 
 Measures, on the reduced tinyllama config (CPU CI baseline; pass
 --arch/--full for others):
@@ -8,7 +8,11 @@ Measures, on the reduced tinyllama config (CPU CI baseline; pass
     the full ``n_slots`` batch vs ``n_slots`` sequential batch-1 calls
     (the pre-redesign scheduler's inner loop);
   * end-to-end: ``BatchScheduler.drain`` wall time vs serial
-    ``Engine.generate_ids`` per request.
+    ``Engine.generate_ids`` per request;
+  * admission latency: time-to-first-token percentiles (p50/p95) under a
+    bursty arrival of mixed-length prompts — bucketed batched prefill
+    (scheduler v2) vs the v1 per-request exact-length admission, whose
+    per-length jit recompiles dominate cold TTFT.
 
 Writes ``artifacts/BENCH_serving.json`` (uploaded by CI).
 
@@ -19,6 +23,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import random
 import time
 
 import jax
@@ -47,6 +52,62 @@ def _time_decode(engine, batch, max_len, reps) -> float:
                                        token=tok, pos=pos)
         jax.block_until_ready(logits)
     return (time.perf_counter() - t0) / reps
+
+
+def _pct(sorted_vals, q: float) -> float:
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
+def measure_admission(engine, n_slots: int = 4, max_len: int = 64,
+                      n_requests: int = 12, max_new: int = 4,
+                      seed: int = 0) -> dict:
+    """TTFT under a bursty arrival: ``n_requests`` mixed-length prompts
+    submitted at once, drained by the scheduler step loop.
+
+    Compares scheduler-v2 bucketed batched prefill against the v1
+    per-request exact-length admission (``batched_prefill=False``). Both
+    run cold on the prefill path: the v1 mode pays one jit compile per
+    distinct prompt length, the bucketed mode one per power-of-two
+    bucket — plus it prefills same-bucket requests together — which is
+    where the admission-latency win comes from. Decode and sampler
+    traces at the admission shapes are warmed up front so the timed
+    drains measure admission, not decode compiles.
+    """
+    from repro.models.model import init_cache
+    cache = init_cache(engine.cfg, n_slots, max_len,
+                       dtype=engine.params["embed"].dtype)
+    tok = jnp.ones((n_slots, 1), jnp.int32)
+    pos = jnp.arange(n_slots, dtype=jnp.int32)
+    logits, _ = engine._decode(engine.params, cache=cache, token=tok, pos=pos)
+    engine.sample(logits, [0] * n_slots, [0] * n_slots)
+    engine.sample(logits[:1], [0], [0])
+    jax.block_until_ready(logits)
+
+    rng = random.Random(seed)
+    lengths = [rng.randint(4, max_len // 2) for _ in range(n_requests)]
+    prompts = [[rng.randrange(1, engine.cfg.vocab_size) for _ in range(n)]
+               for n in lengths]
+    out = {"n_requests": n_requests,
+           "prompt_lengths": sorted(set(lengths))}
+    for mode, flag in (("bucketed", True), ("per_request", False)):
+        sched = BatchScheduler(engine, n_slots=n_slots, max_len=max_len,
+                               batched_prefill=flag)
+        rids = [sched.submit(prompt_ids=ids, max_new=max_new)
+                for ids in prompts]
+        t0 = time.perf_counter()
+        sched.drain()
+        wall = time.perf_counter() - t0
+        ttfts = sorted(sched.requests[r].t_first_token -
+                       sched.requests[r].t_submit for r in rids)
+        out[mode] = {"ttft_p50_s": _pct(ttfts, 0.50),
+                     "ttft_p95_s": _pct(ttfts, 0.95),
+                     "wall_s": wall}
+    out["ttft_p95_speedup"] = (out["per_request"]["ttft_p95_s"] /
+                               out["bucketed"]["ttft_p95_s"])
+    out["ttft_p50_speedup"] = (out["per_request"]["ttft_p50_s"] /
+                               out["bucketed"]["ttft_p50_s"])
+    return out
 
 
 def measure(arch: str = "tinyllama-1.1b", reduced: bool = True,
@@ -88,6 +149,13 @@ def measure(arch: str = "tinyllama-1.1b", reduced: bool = True,
         stoks += g.new_tokens
     e2e_serial = time.perf_counter() - t0
 
+    # -- admission latency: bursty arrivals on a FRESH engine (shared
+    # weights), so both modes pay their prefill compiles — the quantity
+    # being measured; measure_admission warms decode/sampler itself
+    adm_engine = Engine(cfg, params=engine.params, temperature=0.0)
+    admission = measure_admission(adm_engine, n_slots=n_slots,
+                                  max_len=min(max_len, 64))
+
     return {
         "arch": cfg.name,
         "n_slots": n_slots,
@@ -103,6 +171,7 @@ def measure(arch: str = "tinyllama-1.1b", reduced: bool = True,
             "serial_tok_s": stoks / e2e_serial,
             "speedup": (toks / e2e_batched) / (stoks / e2e_serial),
         },
+        "admission": admission,
     }
 
 
@@ -122,7 +191,7 @@ def main() -> None:
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
-    ds, ee = rec["decode_step"], rec["end_to_end"]
+    ds, ee, adm = rec["decode_step"], rec["end_to_end"], rec["admission"]
     print(f"# serving bench on {rec['arch']} n_slots={rec['n_slots']}")
     print(f"decode_step.batched_tok_s,{ds['batched_tok_s']:.1f},")
     print(f"decode_step.serial_tok_s,{ds['serial_tok_s']:.1f},")
@@ -130,6 +199,13 @@ def main() -> None:
     print(f"end_to_end.batched_tok_s,{ee['batched_tok_s']:.1f},")
     print(f"end_to_end.serial_tok_s,{ee['serial_tok_s']:.1f},")
     print(f"end_to_end.speedup,{ee['speedup']:.2f},x")
+    print(f"admission.bucketed.ttft_p50_s,{adm['bucketed']['ttft_p50_s']:.3f},")
+    print(f"admission.bucketed.ttft_p95_s,{adm['bucketed']['ttft_p95_s']:.3f},")
+    print(f"admission.per_request.ttft_p50_s,"
+          f"{adm['per_request']['ttft_p50_s']:.3f},")
+    print(f"admission.per_request.ttft_p95_s,"
+          f"{adm['per_request']['ttft_p95_s']:.3f},")
+    print(f"admission.ttft_p95_speedup,{adm['ttft_p95_speedup']:.2f},x")
     print(f"# wrote {args.out}")
 
 

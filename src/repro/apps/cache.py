@@ -42,7 +42,12 @@ from ..core.metrics import RunResult
 
 def spec_fingerprint(spec) -> Optional[str]:
     """Deterministic content address of one run, or ``None`` if the spec
-    is not cacheable (custom ``backend_factory``)."""
+    is not cacheable (custom ``backend_factory``).
+
+    ``spec.priority`` is deliberately NOT part of the address: serving
+    priority steers admission order and preemption — latency, never
+    tokens (preempted requests resume bit-identically) — so runs that
+    differ only in priority share a cache entry."""
     if spec.backend_factory is not None:
         return None
     from ..core.runtime import resolve_pattern

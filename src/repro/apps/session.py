@@ -65,6 +65,14 @@ class RunSpec:
     (seeded stand-in), "jax" (real engine, per-call) and "jax-batched"
     (real engine, continuous batching).  ``backend_factory`` overrides
     the registry with an arbitrary per-run factory (not cacheable).
+
+    priority: serving-side priority class for this run's LLM
+    completions (higher = more urgent).  Against the continuous-batching
+    backend, completions jump the scheduler's admission queue and may
+    preempt lower-priority slots (which resume bit-identically, so
+    priority affects latency, never tokens).  Like ``llm``, it does NOT
+    enter the ``World`` seed: scheduling urgency must not reshuffle the
+    environment.
     """
     app: str
     instance: str
@@ -73,6 +81,7 @@ class RunSpec:
     seed: int = 0
     backend_factory: Optional[Callable] = None
     llm: str = "oracle"
+    priority: int = 0
 
     def with_seed(self, seed: int) -> "RunSpec":
         return dataclasses.replace(self, seed=seed)
@@ -152,7 +161,8 @@ class Session:
         from ..serving.api import get_llm_backend
         llm = (spec.backend_factory(world, policy, trace)
                if spec.backend_factory
-               else get_llm_backend(spec.llm).make(world, policy, trace))
+               else get_llm_backend(spec.llm).make(world, policy, trace,
+                                                   priority=spec.priority))
         runner = create_runner(spec.pattern, llm, env.clients, world, trace,
                                deployment=spec.deployment,
                                remote=backend.capabilities.remote,

@@ -92,10 +92,18 @@ class EngineStepped(RunEvent):
     no virtual clock; it serves many runs/worlds at once).  ``live`` is
     the decode-batch occupancy during the step, ``queued`` the number of
     requests still waiting for a slot, and ``generated`` how many tokens
-    this step produced (== ``live``)."""
+    this step produced (== ``live``).
+
+    Scheduler-v2 admission gauges (default 0, so pre-v2 wire payloads
+    still deserialize): ``prefilled`` counts the prompt tokens prefilled
+    during the step's admission phase (bucketed batches, one chunk of a
+    chunked admission, or a preemption-resume replay), ``preempted`` the
+    number of live slots evicted for a higher-priority request."""
     live: int
     queued: int
     generated: int
+    prefilled: int = 0
+    preempted: int = 0
 
 
 # ---------------------------------------------------------------------------

@@ -115,14 +115,22 @@ class OracleLLMBackend(LLMBackend):
 
 class JaxLLMBackend(LLMBackend):
     """Real JAX model in the loop: per completion, runs engine.generate for
-    the same output-token budget the oracle decision implies."""
+    the same output-token budget the oracle decision implies.
+
+    ``priority`` (from ``RunSpec.priority``) rides along on every
+    completion: against an ``EngineClient`` endpoint it steers the
+    continuous-batching scheduler's admission queue and slot preemption,
+    so a latency-sensitive run's completions jump ahead of bulk
+    traffic."""
 
     def __init__(self, world: World, policy, engine,
-                 trace: Optional[Trace] = None, max_gen: int = 16):
+                 trace: Optional[Trace] = None, max_gen: int = 16,
+                 priority: int = 0):
         self.world = world
         self.policy = policy
         self.engine = engine
         self.max_gen = max_gen
+        self.priority = priority
         self.trace = trace if trace is not None else Trace()
 
     def complete(self, request: LLMRequest) -> LLMResponse:
@@ -133,7 +141,9 @@ class JaxLLMBackend(LLMBackend):
         prompt = request.system + "\n" + "\n".join(
             m.get("content", "") for m in request.messages)
         # real forward passes (prefill + decode) on the JAX engine
-        self.engine.generate(prompt[-512:], max_new_tokens=min(tout, self.max_gen))
+        self.engine.generate(prompt[-512:],
+                             max_new_tokens=min(tout, self.max_gen),
+                             priority=self.priority)
         latency = self.world.latency.llm_latency(tin, tout)
         self.world.clock.sleep(latency)
         self.trace.llm_events.append(

@@ -140,6 +140,9 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
     t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        # older jax (<= 0.4.x) returns a one-element list of dicts
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_info = {

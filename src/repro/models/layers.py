@@ -139,6 +139,81 @@ def gqa_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
     return out @ params["wo"], cache
 
 
+def gqa_prefill_attend(params: dict, x: jax.Array, cache: dict,
+                       cfg: ModelConfig, positions: jax.Array
+                       ) -> Tuple[jax.Array, dict]:
+    """Fixed-shape GQA prefill against an explicit cache (serving
+    admission path: bucketed and chunked prefill).
+
+    x: (B, L, d) — a whole right-padded prompt bucket or one prompt
+    chunk. cache: {"k","v"}: (B, C, Hkv, hd) holding the already-prefilled
+    prefix (zeros on the first call). positions: (1, L) or (B, L) absolute
+    positions of this call's tokens (``off + arange(L)``).
+
+    This call's K/V rows are scattered into the cache at their absolute
+    positions FIRST, then every query attends over the full C-column
+    cache under a validity mask (col <= q_pos) — so the attention
+    reduction has the exact same shape as ``gqa_decode``'s and as every
+    other chunk's, which is what keeps chunked, bucketed-batch and serial
+    prefill bit-identical (out-of-range scatter rows are dropped; padded
+    rows beyond a prompt's true length are masked for real queries and
+    later overwritten by decode before ever becoming visible).
+    Non-ring caches only: sliding-window archs keep the exact-length
+    prefill + ring re-roll recipe.
+    """
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    rows = jnp.arange(b)[:, None]
+    ck = cache["k"].at[rows, positions].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, positions].set(v.astype(cache["v"].dtype))
+    ck = constrain(ck, "kv_cache")
+    cv = constrain(cv, "kv_cache")
+    cache_len = ck.shape[1]
+    valid = jnp.arange(cache_len)[None, None, :] <= positions[..., None]
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    group = hq // hkv
+    qh = q.reshape(b, s, hkv, group, cfg.head_dim)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qh, ck).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(cfg.head_dim)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, cv)
+    out = out.reshape(b, s, hq * cfg.head_dim)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def mla_prefill_attend(params: dict, x: jax.Array, cache: dict,
+                       cfg: ModelConfig, positions: jax.Array
+                       ) -> Tuple[jax.Array, dict]:
+    """Fixed-shape MLA prefill against an explicit compressed cache —
+    the MLA counterpart of :func:`gqa_prefill_attend` (same scatter +
+    validity-mask scheme over {"ckv","kpe"} rows, absorbed-form
+    attention)."""
+    b, s, _ = x.shape
+    q_nope, q_rope, ckv_new, k_pe_new = _mla_qkv(params, x, cfg, positions)
+    rows = jnp.arange(b)[:, None]
+    ckv = cache["ckv"].at[rows, positions].set(
+        ckv_new.astype(cache["ckv"].dtype))
+    kpe = cache["kpe"].at[rows, positions].set(
+        k_pe_new[:, :, 0, :].astype(cache["kpe"].dtype))
+    ckv = constrain(ckv, "mla_cache")
+    cache_len = ckv.shape[1]
+    valid = jnp.arange(cache_len)[None, None, :] <= positions[..., None]
+    mask = valid[:, None]                                 # (b,1,s,C)
+    out = _mla_attend(params, q_nope, q_rope, ckv, kpe[:, :, None, :],
+                      cfg, mask)
+    return out, {"ckv": ckv, "kpe": kpe}
+
+
 def decode_positions(pos: jax.Array, batch: int) -> jax.Array:
     """Normalize a decode position to a per-sequence ``(B,)`` vector.
 

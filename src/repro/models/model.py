@@ -357,6 +357,79 @@ def _recurrent_prefill(params, cfg, x, positions, window):
 
 
 # ---------------------------------------------------------------------------
+# Fixed-shape prefill (serving admission: bucketed batches + chunks)
+
+
+def prefill_attend(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+                   tokens: jax.Array, off: jax.Array, lengths: jax.Array
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prefill ``tokens`` (B, L) into an explicit full-length cache at
+    absolute offset ``off``.
+
+    The serving engine's fixed-shape prefill recipe: rows are
+    right-padded to a shared length L (a power-of-two bucket or a chunk),
+    K/V are scattered into the cache at absolute positions, and every
+    query attends over the full cache width under a validity mask — so
+    the attention reduction shape never depends on the prompt length.
+    One jitted trace serves a whole bucket (no per-length recompiles),
+    and a prompt prefilled whole, in chunks, or inside a batch produces
+    bit-identical cache rows and logits.
+
+    tokens: (B, L) int32 right-padded rows; off: scalar int32 absolute
+    position of column 0 (0 for whole prompts, the running offset for
+    chunk continuation); lengths: (B,) valid token counts in this call.
+    Returns (logits (B, V) at each row's last valid position, new cache).
+    Attention-cache archs without sliding window / frontend only —
+    recurrent-state archs keep the exact-length recipe
+    (:func:`prefill`).
+    """
+    if cfg.arch_type in ("ssm", "hybrid") or cfg.sliding_window or cfg.frontend:
+        raise NotImplementedError(
+            "fixed-shape prefill covers non-windowed attention caches; "
+            f"{cfg.name} ({cfg.arch_type}) uses the exact-length recipe")
+    x = _embed(params, cfg, tokens, None)
+    b, s, _ = x.shape
+    positions = off + jnp.arange(s)[None, :]
+
+    def body(x, inp):
+        lp, kv = inp
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        if cfg.attention == "mla":
+            a, kv2 = L.mla_prefill_attend(lp["attn"], h, kv, cfg, positions)
+        else:
+            a, kv2 = L.gqa_prefill_attend(lp["attn"], h, kv, cfg, positions)
+        x = x + a
+        h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.is_moe:
+            if MOE_SHARDMAP_MESH is not None:
+                from .moe_shardmap import moe_ffn_shardmap
+                y, _ = moe_ffn_shardmap(lp["moe"], h, cfg, MOE_SHARDMAP_MESH)
+            else:
+                y, _ = moe_ffn(lp["moe"], h, cfg)
+        else:
+            y = L.mlp(lp["mlp"], h, cfg.mlp_type)
+        return x + y, kv2
+
+    x, kvs = _scan(body, x, (params["layers"], cache["layers"]))
+    idx = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
+    hid = jnp.take_along_axis(x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])),
+                              axis=1)
+    logits = _lm_head(params, cfg, hid)
+    return logits[:, 0], {"layers": kvs}
+
+
+def prefill_fresh(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  lengths: jax.Array, cache_len: int
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Whole-prompt fixed-shape prefill: a zero cache of ``cache_len``
+    built inside the jit, then :func:`prefill_attend` at offset 0 —
+    THE admission recipe for bucketed (batched) prefill."""
+    cache = init_cache(cfg, tokens.shape[0], cache_len,
+                       dtype=params["embed"].dtype)
+    return prefill_attend(params, cfg, cache, tokens, jnp.int32(0), lengths)
+
+
+# ---------------------------------------------------------------------------
 # Decode
 
 

@@ -10,8 +10,10 @@ import importlib
 _EXPORTS = {
     "Engine": "engine", "GenerationResult": "engine",
     "RunMonitor": "engine", "pad_cache_to": "engine",
+    "PrefillJob": "engine", "prefill_bucket": "engine",
     "BatchScheduler": "scheduler", "EngineClient": "scheduler",
     "Request": "scheduler", "write_slot": "scheduler",
+    "take_slot": "scheduler",
     "ServingBackend": "api", "ServingCapabilities": "api",
     "get_llm_backend": "api", "llm_backend_names": "api",
     "register_llm_backend": "api", "reset_llm_backends": "api",

@@ -62,6 +62,7 @@ class ServingCapabilities:
     n_slots: int = 0            # decode batch width (batched backends)
     max_len: int = 256          # slot context length
     temperature: float = 0.0    # greedy by default: deterministic serving
+    prefill_chunk: int = 0      # chunked-prefill budget (0 = whole-prompt)
     tags: tuple = ()
     rank: int = 50              # listing order
 
@@ -80,8 +81,12 @@ class ServingBackend:
         self.capabilities = (capabilities if capabilities is not None
                              else type(self).default_capabilities)
 
-    def make(self, world, policy, trace) -> LLMBackend:
-        """Build the LLMBackend one run talks to."""
+    def make(self, world, policy, trace, priority: int = 0) -> LLMBackend:
+        """Build the LLMBackend one run talks to.
+
+        ``priority`` comes from ``RunSpec.priority``: scheduler-backed
+        backends hand it to the serving engine's priority queue
+        (admission order + slot preemption); others ignore it."""
         raise NotImplementedError
 
     def subscribe(self, fn: Callable) -> None:
@@ -156,7 +161,7 @@ class OracleServing(ServingBackend):
 
     name = "oracle"
 
-    def make(self, world, policy, trace) -> LLMBackend:
+    def make(self, world, policy, trace, priority: int = 0) -> LLMBackend:
         return OracleLLMBackend(world, policy, trace)
 
 
@@ -179,16 +184,18 @@ class _JaxServingBase(ServingBackend):
                 if self.capabilities.reduced:
                     cfg = cfg.reduced()
                 self._engine = Engine(
-                    cfg, temperature=self.capabilities.temperature)
+                    cfg, temperature=self.capabilities.temperature,
+                    prefill_chunk=self.capabilities.prefill_chunk)
             return self._engine
 
     def endpoint(self):
         """What ``JaxLLMBackend`` generates against."""
         return self.engine()
 
-    def make(self, world, policy, trace) -> LLMBackend:
+    def make(self, world, policy, trace, priority: int = 0) -> LLMBackend:
         return JaxLLMBackend(world, policy, self.endpoint(), trace,
-                             max_gen=self.capabilities.max_gen or 16)
+                             max_gen=self.capabilities.max_gen or 16,
+                             priority=priority)
 
 
 @register_llm_backend("jax", rank=20)

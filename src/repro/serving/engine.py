@@ -25,8 +25,17 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..core import events as run_events
 from ..data.tokenizer import HashTokenizer
-from ..models.model import decode_step, init_cache, prefill
+from ..models.model import (decode_step, init_cache, prefill, prefill_attend,
+                            prefill_fresh)
 from ..models.params import init_params
+
+
+def prefill_bucket(n: int, floor: int = 8) -> int:
+    """Power-of-two length bucket for an ``n``-token prompt (min
+    ``floor``).  Admission pads prompts to their bucket so one jitted
+    prefill trace serves every length in it — the lever that removes
+    per-length recompiles from the admission path."""
+    return max(floor, 1 << max(n - 1, 0).bit_length())
 
 
 def cache_leaf_name(path) -> Optional[str]:
@@ -124,6 +133,8 @@ class RunMonitor:
         self.engine_queued = 0
         self.engine_peak_live = 0
         self.engine_tokens = 0
+        self.engine_prefill_tokens = 0
+        self.engine_preemptions = 0
 
     def __call__(self, event) -> None:
         ev = run_events   # alias: keep the isinstance chain readable
@@ -152,6 +163,8 @@ class RunMonitor:
                 self.engine_peak_live = max(self.engine_peak_live,
                                             event.live)
                 self.engine_tokens += event.generated
+                self.engine_prefill_tokens += event.prefilled
+                self.engine_preemptions += event.preempted
 
     def wire_observer(self):
         """Observer accepting wire-serialized event dicts
@@ -186,6 +199,8 @@ class RunMonitor:
                 "engine_queued": self.engine_queued,
                 "engine_peak_live": self.engine_peak_live,
                 "engine_tokens": self.engine_tokens,
+                "engine_prefill_tokens": self.engine_prefill_tokens,
+                "engine_preemptions": self.engine_preemptions,
             }
 
 
@@ -211,9 +226,19 @@ def _sample_row(logits: jax.Array, key: jax.Array, temperature: float,
 
 
 class Engine:
+    """The serving model runner: prefill + decode + keyed sampling.
+
+    ``prefill_chunk`` > 0 enables chunked prefill as part of the
+    CANONICAL prefill recipe: prompts longer than the chunk budget are
+    prefilled in fixed-shape chunks (``prefill_job``) by *both* the
+    serial ``generate_ids`` path and the batch scheduler's admission —
+    sharing the recipe is what keeps chunked admission bit-identical to
+    serial generation.
+    """
+
     def __init__(self, cfg: ModelConfig, params=None, seed: int = 0,
                  dtype=jnp.float32, temperature: float = 1.0,
-                 top_p: float = 1.0):
+                 top_p: float = 1.0, prefill_chunk: int = 0):
         self.cfg = cfg
         self.tokenizer = HashTokenizer(cfg.vocab_size)
         key = jax.random.key(seed)
@@ -221,7 +246,17 @@ class Engine:
             cfg, key, dtype=dtype)
         self.temperature = temperature
         self.top_p = top_p
+        self.prefill_chunk = int(prefill_chunk)
         self._prefill = jax.jit(functools.partial(prefill, cfg=cfg))
+        # fixed-shape prefill pair (bucketed whole prompts / chunks):
+        # one trace per (batch, bucket, cache_len) — lengths and offset
+        # are traced values, so every prompt length in a bucket shares it
+        self._prefill_fixed = jax.jit(
+            functools.partial(prefill_fresh, cfg=cfg),
+            static_argnames=("cache_len",))
+        self._prefill_extend = jax.jit(
+            functools.partial(prefill_attend, cfg=cfg),
+            donate_argnames=("cache",))
         # cache is donated: the decode loop threads it linearly, and the
         # in-place update keeps the per-step cost flat in cache size
         # (without donation XLA copies the whole slot batch every step)
@@ -230,6 +265,24 @@ class Engine:
         self._base_key = jax.random.key(seed + 1)
         self._sampler = None
         self._sampler_knobs = None
+
+    @property
+    def supports_fixed_shape_prefill(self) -> bool:
+        """True when the arch can use the bucketed/chunked admission
+        recipe (:func:`repro.models.model.prefill_attend`): attention
+        caches written at absolute positions.
+
+        Excluded (they keep the exact-length recipe): recurrent-state
+        archs (SSM/hybrid — padded tokens would pollute conv/SSD
+        states), sliding-window ring caches (the ring re-roll would
+        rotate padded rows in), frontend archs, and MoE — the
+        capacity-factor dispatch routes over every token in the call, so
+        padded rows change which real tokens get dropped and padding
+        invariance cannot hold bitwise."""
+        cfg = self.cfg
+        return (cfg.arch_type not in ("ssm", "hybrid")
+                and not cfg.sliding_window and not cfg.frontend
+                and not cfg.is_moe)
 
     def _get_sampler(self):
         """Jitted sampler for the CURRENT (temperature, top_p) — the
@@ -261,16 +314,47 @@ class Engine:
                                    jnp.asarray(steps, jnp.int32))
 
     def generate(self, prompt: str, max_new_tokens: int = 32,
-                 rid: int = 0) -> GenerationResult:
+                 rid: int = 0, priority: int = 0) -> GenerationResult:
+        """``priority`` is accepted (and ignored) so ``Engine`` and
+        ``EngineClient`` stay interchangeable endpoints for
+        ``JaxLLMBackend``; only the scheduler-backed client uses it."""
         ids = self.tokenizer.encode(prompt)
         return self.generate_ids(ids, max_new_tokens, rid=rid)
 
     def prefill_ids(self, ids: List[int], cache_len: int):
-        """Prefill one request (batch 1) and pad its cache to
-        ``cache_len`` (+ frontend offset). Returns (last logits (1, V),
-        padded cache). THE prefill recipe — the serial loop below and
-        the batched scheduler's admission both call it, which is what
-        keeps batched decode bit-identical to serial generation."""
+        """Prefill one request (batch 1) into a ``cache_len``-length
+        cache (+ frontend offset). Returns (last logits (1, V), cache).
+
+        THE canonical prefill recipe — the serial ``generate_ids`` loop,
+        the batch scheduler's admission and preemption-resume replay all
+        call it (or its batched row-stable equivalent), which is what
+        keeps batched/chunked decode bit-identical to serial generation.
+        On archs supporting fixed-shape prefill the prompt is padded to
+        its power-of-two bucket (one compile per bucket instead of one
+        per length) and, when ``prefill_chunk`` is set and the prompt
+        exceeds it, prefilled chunk-by-chunk via :meth:`prefill_job`."""
+        if not self.supports_fixed_shape_prefill:
+            return self.prefill_ids_exact(ids, cache_len)
+        if self.prefill_chunk and len(ids) > self.prefill_chunk:
+            job = self.prefill_job(ids, cache_len)
+            while not job.done:
+                job.step()
+            return job.logits, job.cache
+        bucket = prefill_bucket(len(ids))
+        tokens = jnp.asarray([list(ids) + [0] * (bucket - len(ids))],
+                             jnp.int32)
+        lengths = jnp.asarray([len(ids)], jnp.int32)
+        return self._prefill_fixed(self.params, tokens=tokens,
+                                   lengths=lengths,
+                                   cache_len=int(cache_len))
+
+    def prefill_ids_exact(self, ids: List[int], cache_len: int):
+        """The historical exact-length prefill: one trace per prompt
+        length, cache padded (or ring re-rolled) to ``cache_len``
+        afterwards. Canonical for SSM/hybrid/sliding-window/frontend
+        archs; kept callable everywhere as the pre-bucketing baseline
+        (``benchmarks/serving.py`` measures admission latency against
+        it)."""
         cfg = self.cfg
         prompt = jnp.asarray([ids], jnp.int32)
         fe = None
@@ -282,6 +366,58 @@ class Engine:
         cache = pad_cache_to(cfg, cache, cache_len +
                              (cfg.frontend_positions if cfg.frontend else 0))
         return logits, cache
+
+    def prefill_batch_ids(self, ids_list: List[List[int]], cache_len: int,
+                          width: Optional[int] = None):
+        """Bucketed BATCHED prefill: stack several prompts (padded to the
+        shared power-of-two bucket of the longest, batch padded to
+        ``width`` rows) and prefill them in ONE jitted call.
+
+        Row results are bit-identical to batch-1 :meth:`prefill_ids` of
+        each prompt (batch stacking at a fixed padded length is
+        row-stable), so the scheduler can admit a burst of requests
+        together without breaking serial parity. Returns
+        (logits (width, V), cache with a ``width`` batch axis); callers
+        read the first ``len(ids_list)`` rows.
+        """
+        width = width if width is not None else len(ids_list)
+        bucket = prefill_bucket(max(len(i) for i in ids_list))
+        rows = [list(i) for i in ids_list] + [[0]] * (width - len(ids_list))
+        tokens = jnp.asarray([r + [0] * (bucket - len(r)) for r in rows],
+                             jnp.int32)
+        lengths = jnp.asarray([len(r) for r in rows], jnp.int32)
+        return self._prefill_fixed(self.params, tokens=tokens,
+                                   lengths=lengths,
+                                   cache_len=int(cache_len))
+
+    def prefill_job(self, ids: List[int], cache_len: int) -> "PrefillJob":
+        """Incremental chunked prefill: a :class:`PrefillJob` whose
+        ``step()`` prefills ONE ``prefill_chunk``-sized chunk — the
+        scheduler interleaves these steps with live decode so a long
+        prompt bounds (instead of monopolizing) the stall it causes."""
+        return PrefillJob(self, ids, cache_len)
+
+    def replay_ids(self, ids: List[int], kept: List[int], cache_len: int):
+        """Rebuild the exact decode state of a request that already
+        generated ``kept`` tokens (preemption resume): canonical prefill
+        of the prompt, then per-token decode replay of ``kept[:-1]``.
+
+        Replay — not re-prefill of prompt+kept — because prefill and
+        decode group their float reductions differently: a prefilled row
+        is not bitwise the row decode would have written.  Replaying the
+        identical jitted decode calls in the identical order *is* bitwise
+        (already-sampled tokens are never resampled), so a preempted
+        request resumes onto exactly the uninterrupted token stream.
+        Returns (cache, next_pos, next_token) ready for ``write_slot``.
+        """
+        _, cache = self.prefill_ids(ids, cache_len)
+        offset = self.cfg.frontend_positions if self.cfg.frontend else 0
+        base = offset + len(ids)
+        for i, tok in enumerate(kept[:-1]):
+            _, cache = self._decode(self.params, cache=cache,
+                                    token=jnp.asarray([[tok]], jnp.int32),
+                                    pos=jnp.int32(base + i))
+        return cache, base + len(kept) - 1, kept[-1]
 
     def generate_ids(self, ids: List[int], max_new_tokens: int,
                      rid: int = 0, cache_len: Optional[int] = None
@@ -318,3 +454,52 @@ class Engine:
         batch = {"tokens": jnp.asarray([ids], jnp.int32)}
         loss, _ = loss_fn(self.params, self.cfg, batch)
         return float(loss)
+
+
+class PrefillJob:
+    """Chunk-at-a-time prefill of one prompt (batch 1).
+
+    Every ``step()`` runs one fixed-shape ``prefill_chunk``-token chunk
+    through :func:`repro.models.model.prefill_attend` against the
+    accumulating cache (the final partial chunk is right-padded to the
+    same shape, so ONE jitted trace serves every chunk of every prompt).
+    ``done`` flips once the whole prompt is in; ``logits`` then holds the
+    last-position logits to sample the first token from, and ``cache``
+    the full prefilled cache ready for ``write_slot``.
+
+    Both ``Engine.prefill_ids`` (synchronous drain: the serial recipe)
+    and ``BatchScheduler`` (one chunk per scheduler step, interleaved
+    with live decode) drive the same job, so chunked admission stays
+    bit-identical to serial generation.
+    """
+
+    def __init__(self, engine: Engine, ids: List[int], cache_len: int):
+        if not engine.supports_fixed_shape_prefill:
+            raise NotImplementedError(
+                f"chunked prefill needs fixed-shape prefill support; "
+                f"{engine.cfg.name} uses the exact-length recipe")
+        self.engine = engine
+        self.ids = list(ids)
+        self.cache_len = int(cache_len)
+        self.chunk = max(1, engine.prefill_chunk or len(self.ids))
+        self.off = 0
+        self.logits = None
+        self.cache = init_cache(engine.cfg, 1, self.cache_len,
+                                dtype=engine.params["embed"].dtype)
+
+    @property
+    def done(self) -> bool:
+        return self.off >= len(self.ids)
+
+    def step(self) -> int:
+        """Prefill the next chunk; returns how many prompt tokens it
+        consumed (the scheduler's ``prefilled`` gauge)."""
+        chunk = self.ids[self.off:self.off + self.chunk]
+        valid = len(chunk)
+        tokens = jnp.asarray([chunk + [0] * (self.chunk - valid)], jnp.int32)
+        self.logits, self.cache = self.engine._prefill_extend(
+            self.engine.params, cache=self.cache, tokens=tokens,
+            off=jnp.int32(self.off),
+            lengths=jnp.asarray([valid], jnp.int32))
+        self.off += valid
+        return valid

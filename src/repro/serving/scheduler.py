@@ -1,20 +1,42 @@
-"""Continuous-batching scheduler: one jitted decode advances ALL slots.
+"""Continuous-batching scheduler v2: batched + chunked prefill with
+priority preemption.
 
 Slot-based, vLLM-style, TPU-friendly fixed shapes (no paged indirection,
 which doesn't map well onto dense XLA buffers):
 
   * the decode cache carries an ``n_slots`` batch axis allocated once
     (``init_cache(cfg, n_slots, max_len)``);
-  * admission prefills a request on its own (batch-1) and writes the
-    padded prefill cache into the free slot's row (:func:`write_slot`);
   * every :meth:`BatchScheduler.step` runs ONE jitted ``decode_step``
     over the whole slot batch with a per-slot position *vector* — live
-    slots advance together, finished slots free their row and the next
-    queued request is admitted into it.
+    slots advance together, finished slots free their row and queued
+    requests are admitted into it.
+
+Admission (the v2 overhaul) no longer prefills one request per exact
+prompt length:
+
+  * **bucketed batched prefill** — waiting requests are padded to shared
+    power-of-two length buckets (:func:`repro.serving.engine.prefill_bucket`)
+    and a same-bucket group is prefilled into the freed slots with ONE
+    jitted call per bucket (``Engine.prefill_batch_ids``), eliminating
+    per-length recompiles from the admission path;
+  * **chunked prefill** — a prompt longer than the engine's
+    ``prefill_chunk`` budget is prefilled one fixed-shape chunk per
+    scheduler step (:class:`repro.serving.engine.PrefillJob`) while live
+    slots keep decoding, so a long prompt *bounds* rather than
+    monopolizes the stall it imposes;
+  * **priority classes + preemption** — ``submit(priority=...)`` feeds a
+    priority queue (FIFO within a class); when a waiting request
+    outranks the lowest-priority live slot and no slot is free, that
+    slot is evicted and requeued *keeping its generated tokens*; on
+    re-admission the engine replays them through the identical decode
+    recipe (``Engine.replay_ids``), so a preempted request's token
+    stream is bit-identical to an uninterrupted run.
 
 Sampling is keyed by (engine seed, request id, step) via
-``Engine.sample``, so a request's token sequence is bit-identical to
-serial ``Engine.generate_ids`` — greedy parity is enforced by test.
+``Engine.sample``, and all three admission paths share the engine's
+canonical prefill recipe — a request's token sequence is bit-identical
+to serial ``Engine.generate_ids`` whether it was admitted alone, inside
+a bucket batch, in chunks, or after an eviction (enforced by test).
 
 ``EngineClient`` is the blocking handle that multiplexes many concurrent
 agent runs onto one scheduler: callers block in ``generate`` while one of
@@ -23,30 +45,47 @@ therefore share the decode batch instead of serializing on the engine.
 
 Observability: each step emits a serving-side
 :class:`repro.core.events.EngineStepped` run event (occupancy, queue
-depth, tokens decoded) to subscribers — ``RunMonitor`` consumes it live.
+depth, tokens decoded, prompt tokens prefilled, slots preempted) to
+subscribers — ``RunMonitor`` consumes it live.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
-from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.events import EngineStepped
 from ..models.model import init_cache
-from .engine import Engine, GenerationResult, cache_leaf_name
+from .engine import (Engine, GenerationResult, PrefillJob, cache_leaf_name,
+                     prefill_bucket)
 
 
 @dataclasses.dataclass
 class Request:
+    """One in-flight generation request.
+
+    ``priority``: higher jumps the queue (FIFO within a class).
+    ``seq``: the submission ticket — preserved across preemptions so a
+    requeued request keeps its place among equal-priority peers.
+    ``t_submit`` / ``t_first_token``: wall-clock stamps (``time.perf_counter``)
+    used by ``benchmarks/serving.py`` for admission-latency (TTFT)
+    percentiles.
+    """
     rid: int
     prompt_ids: List[int]
     max_new: int
+    priority: int = 0
     out_ids: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    seq: int = 0
+    preemptions: int = 0
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
 
     def to_result(self, tokenizer) -> GenerationResult:
         return GenerationResult(tokenizer.decode(self.out_ids),
@@ -72,33 +111,75 @@ def write_slot(batched_cache, row_cache, slot):
     return jax.tree_util.tree_map_with_path(ins, batched_cache, row_cache)
 
 
+def take_slot(batched_cache, slot):
+    """Inverse of :func:`write_slot`: slice row ``slot`` out of a
+    slot-batched cache as a batch-1 cache (used to move rows of a
+    bucketed batch-prefill result into their target slots)."""
+    def take(path, big):
+        axis = big.ndim - _ROW_AXIS_OFFSET[cache_leaf_name(path)]
+        return jax.lax.dynamic_slice_in_dim(big, slot, 1, axis)
+    return jax.tree_util.tree_map_with_path(take, batched_cache)
+
+
 class BatchScheduler:
     """Drives an Engine's model with a fixed slot batch.
 
-    ``submit()`` enqueues; ``step()`` admits queued requests into free
-    slots (prefill + slot write) then advances all live slots by one
-    batched decode; ``drain()`` steps to completion. ``run()`` is the
-    historical drain-to-text entry point.
+    ``submit()`` enqueues (with a priority class); ``step()`` runs one
+    scheduler cycle — preempt, admit, decode — and ``drain()`` steps to
+    completion. ``run()`` is the historical drain-to-text entry point.
+
+    One ``step()`` performs, in order:
+
+    1. *preempt*: if the queue head outranks the lowest-priority live
+       slot and no slot is free, that slot is evicted and requeued (at
+       most one eviction per step — bounds thrash); equal priority never
+       preempts;
+    2. *admit*: advance the in-flight chunked admission by ONE chunk,
+       then fill free slots in strict priority order — same-bucket
+       groups via one batched prefill call, preempted requests via
+       decode replay, long prompts by starting a chunk job;
+    3. *decode*: ONE jitted ``decode_step`` over the whole slot batch
+       advances every live slot by a token.
+
+    ``batched_prefill=False`` restores the v1 admission (one
+    exact-length prefill per request, a trace per prompt length) — kept
+    as the benchmark baseline; the bit-identical-to-serial contract is
+    guaranteed for the default ``True``.
 
     ``requests`` keeps per-rid bookkeeping for inspection after a
     bounded submit/drain cycle; long-lived callers should go through
     :class:`EngineClient`, which prunes completed entries.
+
+    Invariants (tested):
+      * a request's tokens are bit-identical to serial
+        ``Engine.generate_ids(prompt_ids, max_new, rid, cache_len=max_len)``
+        across bucketed, chunked and preempted admission;
+      * a preempted request never loses generated tokens, and never
+        resumes with different ones;
+      * slots are preempted only by strictly higher priority.
     """
 
     def __init__(self, engine: Engine, n_slots: int = 4,
                  max_len: int = 512,
-                 on_event: Optional[Callable] = None):
+                 on_event: Optional[Callable] = None,
+                 batched_prefill: bool = True):
         self.engine = engine
         self.cfg = engine.cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        self.batched_prefill = batched_prefill
         self._offset = self.cfg.frontend_positions if self.cfg.frontend else 0
         self._cache_len = max_len + self._offset
-        self.queue: Deque[Request] = deque()
+        # priority queue of (-priority, seq, Request): highest priority
+        # first, FIFO (submission ticket) within a class
+        self._heap: List[Tuple[int, int, Request]] = []
         self._qlock = threading.Lock()
         self.slots: List[Optional[Request]] = [None] * n_slots
+        self._reserved: set = set()   # slots held by an in-flight chunk job
+        self._chunk_job: Optional[Tuple[PrefillJob, Request, int]] = None
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
+        self._seq = 0
         self._steps = 0
         self._pos = [0] * n_slots   # next decode position per slot
         self._tok = [0] * n_slots   # last sampled token per slot
@@ -107,6 +188,7 @@ class BatchScheduler:
         # batched cache is donated through admission writes too: the slot
         # row update happens in place instead of copying all slots
         self._insert = jax.jit(write_slot, donate_argnums=(0,))
+        self._take = jax.jit(take_slot)
         self._subscribers: List[Callable] = []
         if on_event is not None:
             self._subscribers.append(on_event)
@@ -121,55 +203,214 @@ class BatchScheduler:
 
     # -- admission ----------------------------------------------------------
     def submit(self, prompt: Optional[str] = None, max_new: int = 32,
-               prompt_ids: Optional[List[int]] = None) -> int:
+               prompt_ids: Optional[List[int]] = None,
+               priority: int = 0) -> int:
         """Enqueue one request; returns its rid. Thread-safe.
 
-        The prompt is truncated to half the slot context and ``max_new``
-        clamped so prompt+generation always fit the fixed cache."""
+        ``priority``: higher-priority requests are admitted first and may
+        preempt lower-priority live slots; within a class admission is
+        FIFO. The prompt is truncated to half the slot context and
+        ``max_new`` clamped so prompt+generation always fit the fixed
+        cache."""
         ids = (list(prompt_ids) if prompt_ids is not None
                else self.engine.tokenizer.encode(prompt))
         ids = ids[-(self.max_len // 2):]
         max_new = max(1, min(max_new, self.max_len - len(ids)))
         with self._qlock:
-            req = Request(self._next_rid, ids, max_new)
+            req = Request(self._next_rid, ids, max_new, priority=priority,
+                          seq=self._seq, t_submit=time.perf_counter())
             self._next_rid += 1
+            self._seq += 1
             self.requests[req.rid] = req
-            self.queue.append(req)
+            heapq.heappush(self._heap, (-req.priority, req.seq, req))
         return req.rid
 
-    def _prefill_into(self, slot: int, req: Request) -> None:
-        """Prefill one request (``Engine.prefill_ids`` — the same recipe
-        the serial path uses) and, if it survives its first token, write
-        the padded cache into the free slot's row."""
-        logits, cache = self.engine.prefill_ids(req.prompt_ids, self.max_len)
-        tok = int(self.engine.sample(logits, [req.rid], [0])[0])
+    def queue_depth(self) -> int:
+        with self._qlock:
+            return len(self._heap)
+
+    def _peek(self) -> Optional[Request]:
+        with self._qlock:
+            return self._heap[0][2] if self._heap else None
+
+    def _pop(self) -> Optional[Request]:
+        with self._qlock:
+            return heapq.heappop(self._heap)[2] if self._heap else None
+
+    def _push(self, req: Request) -> None:
+        with self._qlock:
+            heapq.heappush(self._heap, (-req.priority, req.seq, req))
+
+    def _needs_chunk(self, req: Request) -> bool:
+        return bool(self.engine.prefill_chunk
+                    and len(req.prompt_ids) > self.engine.prefill_chunk
+                    and self.engine.supports_fixed_shape_prefill)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.n_slots)
+                if self.slots[i] is None and i not in self._reserved]
+
+    def _first_token(self, req: Request, tok: int,
+                     finished: List[Request]) -> bool:
+        """Record a request's prefill-sampled first token; returns True
+        when the request stays live (False: finished on the prefill
+        token — the slot write is skipped, nothing would read it)."""
         req.out_ids.append(tok)
+        req.t_first_token = time.perf_counter()
         if tok == self.engine.tokenizer.eos or len(req.out_ids) >= req.max_new:
-            req.done = True   # finished on the prefill token: skip the
-            return            # whole-batch slot write, nothing reads it
-        self._cache = self._insert(self._cache, cache, slot)
+            req.done = True
+            finished.append(req)
+            return False
+        return True
+
+    def _occupy(self, slot: int, req: Request, pos: int, tok: int) -> None:
         self.slots[slot] = req
-        self._pos[slot] = self._offset + len(req.prompt_ids)
+        self._pos[slot] = pos
         self._tok[slot] = tok
 
-    def _admit(self, finished: List[Request]) -> None:
-        for i in range(self.n_slots):
-            while self.slots[i] is None:
-                with self._qlock:
-                    if not self.queue:
-                        return
-                    req = self.queue.popleft()
-                self._prefill_into(i, req)
-                if req.done:   # eos/budget hit on the prefill logits
-                    finished.append(req)
+    def _prefill_into(self, slot: int, req: Request,
+                      finished: List[Request], stats: Dict[str, int]) -> None:
+        """Admit one request on its own: the engine's canonical prefill
+        (bucketed where supported), or the v1 exact-length recipe when
+        ``batched_prefill=False``."""
+        prefill = (self.engine.prefill_ids if self.batched_prefill
+                   else self.engine.prefill_ids_exact)
+        logits, cache = prefill(req.prompt_ids, self.max_len)
+        stats["prefilled"] += len(req.prompt_ids)
+        tok = int(self.engine.sample(logits, [req.rid], [0])[0])
+        if self._first_token(req, tok, finished):
+            self._cache = self._insert(self._cache, cache, slot)
+            self._occupy(slot, req, self._offset + len(req.prompt_ids), tok)
+
+    def _admit_bucket(self, group: List[Request], free: List[int],
+                      finished: List[Request], stats: Dict[str, int]) -> None:
+        """Admit a same-bucket group with ONE jitted batched prefill
+        (batch padded to ``n_slots`` rows so every group size shares the
+        same trace)."""
+        logits, cache = self.engine.prefill_batch_ids(
+            [r.prompt_ids for r in group], self.max_len, width=self.n_slots)
+        slot_iter = iter(free)
+        for j, req in enumerate(group):
+            stats["prefilled"] += len(req.prompt_ids)
+            tok = int(self.engine.sample(logits[j:j + 1], [req.rid], [0])[0])
+            if self._first_token(req, tok, finished):
+                slot = next(slot_iter)
+                row = self._take(cache, j)
+                self._cache = self._insert(self._cache, row, slot)
+                self._occupy(req=req, slot=slot, tok=tok,
+                             pos=self._offset + len(req.prompt_ids))
+
+    def _resume_into(self, slot: int, req: Request,
+                     stats: Dict[str, int]) -> None:
+        """Re-admit a preempted request: canonical prefill of the prompt
+        plus decode replay of its kept tokens (``Engine.replay_ids``) —
+        the state rebuild is bit-identical, generated tokens are never
+        resampled."""
+        cache, pos, tok = self.engine.replay_ids(
+            req.prompt_ids, req.out_ids, self.max_len)
+        stats["prefilled"] += len(req.prompt_ids) + len(req.out_ids) - 1
+        self._cache = self._insert(self._cache, cache, slot)
+        self._occupy(slot, req, pos, tok)
+
+    def _admit(self, finished: List[Request], stats: Dict[str, int]) -> None:
+        """Fill free slots from the priority queue (strict priority
+        order), advancing the in-flight chunked admission by one chunk
+        first."""
+        if self._chunk_job is not None:
+            job, req, slot = self._chunk_job
+            stats["prefilled"] += job.step()
+            if job.done:
+                self._chunk_job = None
+                self._reserved.discard(slot)
+                tok = int(self.engine.sample(job.logits, [req.rid], [0])[0])
+                if self._first_token(req, tok, finished):
+                    self._cache = self._insert(self._cache, job.cache, slot)
+                    self._occupy(slot, req,
+                                 self._offset + len(req.prompt_ids), tok)
+        while True:
+            free = self._free_slots()
+            if not free:
+                return
+            req = self._pop()
+            if req is None:
+                return
+            if req.out_ids:                     # preempted: replay resume
+                self._resume_into(free[0], req, stats)
+                continue
+            if self._needs_chunk(req):
+                if self._chunk_job is not None:
+                    # strict priority order: wait for the running chunk
+                    # admission rather than admitting around the head
+                    self._push(req)
+                    return
+                slot = free[0]
+                self._reserved.add(slot)
+                job = self.engine.prefill_job(req.prompt_ids, self.max_len)
+                stats["prefilled"] += job.step()   # first chunk this step
+                self._chunk_job = (job, req, slot)
+                continue
+            if self.batched_prefill and self.engine.supports_fixed_shape_prefill:
+                group = [req]
+                bucket = prefill_bucket(len(req.prompt_ids))
+                while len(group) < len(free):
+                    nxt = self._pop_matching(bucket)
+                    if nxt is None:
+                        break
+                    group.append(nxt)
+                self._admit_bucket(group, free, finished, stats)
+            else:
+                self._prefill_into(free[0], req, finished, stats)
+
+    def _pop_matching(self, bucket: int) -> Optional[Request]:
+        """Pop the queue head iff it is a plain same-bucket admission
+        (no resume, no chunking) — grows a bucket group without
+        reordering across priorities."""
+        with self._qlock:
+            if not self._heap:
+                return None
+            req = self._heap[0][2]
+            if req.out_ids or self._needs_chunk(req):
+                return None
+            if prefill_bucket(len(req.prompt_ids)) != bucket:
+                return None
+            return heapq.heappop(self._heap)[2]
+
+    # -- preemption ---------------------------------------------------------
+    def _preempt(self, stats: Dict[str, int]) -> None:
+        """Evict the lowest-priority live slot when the queue head
+        strictly outranks it and no slot is free (at most one eviction
+        per step; equal priority never preempts — no thrash). The victim
+        keeps its generated tokens and requeues with its original
+        submission ticket."""
+        head = self._peek()
+        if head is None or self._free_slots():
+            return
+        if self._needs_chunk(head) and self._chunk_job is not None:
+            return   # head cannot be admitted yet; don't waste a slot
+        live = [(self.slots[i].priority, -self.slots[i].rid, i)
+                for i in range(self.n_slots) if self.slots[i] is not None]
+        if not live:
+            return
+        pri, _, victim = min(live)   # lowest priority; tie: youngest rid
+        if head.priority <= pri:
+            return
+        req = self.slots[victim]
+        self.slots[victim] = None
+        req.preemptions += 1
+        stats["preempted"] += 1
+        self._push(req)
 
     # -- the batched decode step --------------------------------------------
     def step(self) -> List[Request]:
-        """Admit into free slots, then advance ALL live slots one token
-        with a single jitted decode over the slot batch. Returns the
-        requests that finished this step."""
+        """One scheduler cycle: preempt if a waiting request outranks a
+        live slot, admit into free slots (chunked / bucketed / resume),
+        then advance ALL live slots one token with a single jitted decode
+        over the slot batch. Returns the requests that finished this
+        step."""
         finished: List[Request] = []
-        self._admit(finished)
+        stats = {"prefilled": 0, "preempted": 0}
+        self._preempt(stats)
+        self._admit(finished, stats)
         live = [i for i in range(self.n_slots) if self.slots[i] is not None]
         if live:
             tokens = jnp.asarray([[t] for t in self._tok], jnp.int32)
@@ -192,17 +433,18 @@ class BatchScheduler:
                     finished.append(req)
                     self.slots[i] = None   # slot freed -> next admission
         self._steps += 1
-        with self._qlock:
-            queued = len(self.queue)
         self._emit(EngineStepped(t=float(self._steps), live=len(live),
-                                 queued=queued, generated=len(live)))
+                                 queued=self.queue_depth(),
+                                 generated=len(live),
+                                 prefilled=stats["prefilled"],
+                                 preempted=stats["preempted"]))
         return finished
 
     # -- draining -----------------------------------------------------------
     def has_work(self) -> bool:
-        with self._qlock:
-            queued = bool(self.queue)
-        return queued or any(s is not None for s in self.slots)
+        if self.queue_depth() or self._chunk_job is not None:
+            return True
+        return any(s is not None for s in self.slots)
 
     def occupancy(self) -> int:
         return sum(s is not None for s in self.slots)
@@ -230,6 +472,10 @@ class EngineClient:
     submitting into the SAME decode batch — this is the pump mode that
     lets ``Session.execute_many`` fan-out share the engine. Duck-types
     ``Engine.generate``, so ``JaxLLMBackend`` can point at either.
+
+    ``priority`` flows through to ``BatchScheduler.submit``:
+    latency-sensitive agent runs (``RunSpec.priority``) jump the
+    admission queue and may preempt lower-priority slots.
     """
 
     def __init__(self, scheduler: BatchScheduler):
@@ -238,10 +484,11 @@ class EngineClient:
         self._pumping = False
         self._results: Dict[int, GenerationResult] = {}
 
-    def generate(self, prompt: str, max_new_tokens: int = 32
-                 ) -> GenerationResult:
+    def generate(self, prompt: str, max_new_tokens: int = 32,
+                 priority: int = 0) -> GenerationResult:
         with self._cv:
-            rid = self.scheduler.submit(prompt, max_new=max_new_tokens)
+            rid = self.scheduler.submit(prompt, max_new=max_new_tokens,
+                                        priority=priority)
             while rid not in self._results:
                 if self._pumping:
                     # someone else is driving the engine; wake on step end
