@@ -1,0 +1,184 @@
+"""Traffic SLO benchmark: success rate, latency/TTFT percentiles and
+Eq. 1/Eq. 2 cost per scenario under open-loop load — clean, faulted, and
+faulted-with-resilience.
+
+Four passes over the same seeded workload (identical specs, identical
+worlds — the ``world_alias`` guarantee):
+
+  1. **clean** — the no-fault baseline;
+  2. **faults** — transient errors + cold starts + throttling injected
+     at the deployment transport (``repro.traffic.faults``), no
+     mitigation;
+  3. **faults+retry** — the same fault plan countered by
+     ``Session(retry=RetryPolicy(...))``: success rate should recover
+     to the clean baseline (the paper's *robust orchestration* claim,
+     quantified), and every injected error is reconciled against a
+     ``ToolRetried`` event — the retry-only pass is what makes that
+     accounting exact (a hedge can absorb an injected error without a
+     retry event);
+  4. **faults+retry+hedge** — adds ``HedgePolicy``: the latency/cost
+     premium of full resilience, priced against the clean baseline.
+
+Writes ``artifacts/BENCH_traffic.json`` (uploaded by CI).
+
+    PYTHONPATH=src python -m benchmarks.traffic --requests 60 --rate 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.apps.session import Session
+from repro.core.policies import HedgePolicy, RetryPolicy
+from repro.traffic import (DEFAULT_MIX, FaultPlan, Scenario, SLOTarget,
+                           TrafficDriver, Workload, aggregate_report,
+                           register_fault_plan)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+FAULT_PLAN = FaultPlan(transient_rate=0.2, transient_delay_s=0.1,
+                       throttle_rate=0.05, throttle_delay_s=1.0,
+                       cold_start_rate=0.08, cold_start_s=2.5,
+                       first_call_cold=False)
+RETRY = RetryPolicy(max_attempts=8, backoff_s=0.25, backoff_mult=2.0)
+HEDGE = HedgePolicy(hedge_after_s=8.0)
+
+
+def _faulty_mix(stats_sink) -> tuple:
+    """The DEFAULT_MIX with every deployment swapped for its registered
+    faulty twin (one shared FaultStats across all of them)."""
+    scenarios = []
+    for s in DEFAULT_MIX:
+        name = f"{s.deployment}+faults"
+        register_fault_plan(name, s.deployment, FAULT_PLAN, stats=stats_sink)
+        scenarios.append(Scenario(s.name, s.app, s.instance, s.pattern,
+                                  name, s.llm, s.priority, s.weight))
+    return tuple(scenarios)
+
+
+def measure(n_requests: int = 100, rate: float = 2.0, seed: int = 0,
+            arrival: str = "poisson", max_concurrency: int = 0) -> dict:
+    from repro.traffic.faults import FaultStats
+    slo = SLOTarget(latency_s=180.0, ttft_s=30.0, success_rate=0.85)
+    wl = Workload(arrival=arrival, rate=rate, n_requests=n_requests,
+                  seed=seed)
+
+    # pass 1: clean baseline
+    clean = TrafficDriver(Session(),
+                          max_concurrency=max_concurrency).run(wl)
+
+    # pass 2/3: identical workload over the faulty deployment twins
+    stats = FaultStats()
+    faulty_wl = Workload(scenarios=_faulty_mix(stats), arrival=arrival,
+                         rate=rate, n_requests=n_requests, seed=seed)
+    faulted = TrafficDriver(Session(),
+                            max_concurrency=max_concurrency).run(faulty_wl)
+    injected_no_retry = stats.snapshot()
+
+    stats.reset()
+    retry_only = TrafficDriver(Session(retry=RETRY),
+                               max_concurrency=max_concurrency).run(faulty_wl)
+    injected_with_retry = stats.snapshot()
+
+    stats.reset()
+    hedged = TrafficDriver(Session(retry=RETRY, hedge=HEDGE),
+                           max_concurrency=max_concurrency).run(faulty_wl)
+
+    agg_clean = aggregate_report(clean, slo)
+    agg_fault = aggregate_report(faulted, slo)
+    agg_retry = aggregate_report(retry_only, slo)
+    agg_hedge = aggregate_report(hedged, slo)
+    retried = agg_retry["overall"]["resilience"]["retries"]
+    return {
+        "workload": wl.describe(),
+        "slo": slo.describe(),
+        "scenarios": agg_clean["scenarios"],
+        "overall": agg_clean["overall"],
+        "replay": agg_clean["replay"],
+        "fault_injection": {
+            "plan": {
+                "transient_rate": FAULT_PLAN.transient_rate,
+                "throttle_rate": FAULT_PLAN.throttle_rate,
+                "cold_start_rate": FAULT_PLAN.cold_start_rate,
+                "cold_start_s": FAULT_PLAN.cold_start_s,
+            },
+            "no_mitigation": {
+                "injected": injected_no_retry,
+                "scenarios": agg_fault["scenarios"],
+                "overall": agg_fault["overall"],
+            },
+            "with_retry": {
+                "injected": injected_with_retry,
+                "retried": retried,
+                "retry_accounts_for_all_faults":
+                    retried == injected_with_retry["errors"],
+                "scenarios": agg_retry["scenarios"],
+                "overall": agg_retry["overall"],
+            },
+            "with_retry_hedge": {
+                "hedges": agg_hedge["overall"]["resilience"]["hedges"],
+                "scenarios": agg_hedge["scenarios"],
+                "overall": agg_hedge["overall"],
+            },
+            "success_rate": {
+                "clean": agg_clean["overall"]["success_rate"],
+                "faulted": agg_fault["overall"]["success_rate"],
+                "recovered": agg_retry["overall"]["success_rate"],
+            },
+            "latency_premium_p95_s":
+                (agg_hedge["overall"]["latency_s"]["p95"]
+                 - agg_clean["overall"]["latency_s"]["p95"]),
+            "cost_premium_usd":
+                (agg_hedge["overall"]["cost_usd"]["total_sum"]
+                 - agg_clean["overall"]["cost_usd"]["total_sum"]),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean arrivals per virtual second")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "uniform"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="in-flight run cap (0 = unbounded)")
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_traffic.json"))
+    args = ap.parse_args()
+
+    rec = measure(n_requests=args.requests, rate=args.rate, seed=args.seed,
+                  arrival=args.arrival, max_concurrency=args.concurrency)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+
+    ov, rp = rec["overall"], rec["replay"]
+    fi = rec["fault_injection"]
+    print(f"# traffic bench: {rec['workload']['n_requests']} requests, "
+          f"{rec['workload']['arrival']} arrivals @ "
+          f"{rec['workload']['rate']}/s")
+    print(f"replay.virtual_s,{rp['virtual_s']:.0f},")
+    print(f"replay.wall_s,{rp['wall_s']:.2f},")
+    print(f"replay.speedup,{rp['speedup']:.0f},x")
+    print(f"replay.peak_concurrency,{rp['peak_concurrency']},")
+    print(f"clean.success_rate,{ov['success_rate']:.3f},")
+    print(f"clean.latency_p95_s,{ov['latency_s']['p95']:.1f},")
+    print(f"clean.ttft_p95_s,{ov['ttft_s']['p95']:.1f},")
+    print(f"clean.cost_mean_usd,{ov['cost_usd']['total_mean']:.5f},")
+    sr = fi["success_rate"]
+    print(f"faults.success_rate,{sr['faulted']:.3f},")
+    print(f"faults.recovered_success_rate,{sr['recovered']:.3f},")
+    print(f"faults.injected,{fi['with_retry']['injected']['errors']},")
+    print(f"faults.retried,{fi['with_retry']['retried']},")
+    print(f"faults.accounted,"
+          f"{fi['with_retry']['retry_accounts_for_all_faults']},")
+    print(f"faults.hedges,{fi['with_retry_hedge']['hedges']},")
+    print(f"faults.latency_premium_p95_s,{fi['latency_premium_p95_s']:.1f},")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,7 +44,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Iterable, List, Optional, Tuple
 
 from ..core.metrics import RunResult, Trace
-from ..core.policies import POLICIES
+from ..core.policies import POLICIES, HedgePolicy, RetryPolicy
 from ..core.runtime import RunOutcome, create_runner
 from ..env.world import World
 from ..eval.judge import Score, judge_stock, judge_summary
@@ -96,9 +96,18 @@ def stable_world_seed(spec: RunSpec) -> int:
     on.  ``spec.llm`` is deliberately NOT part of the key: the serving
     backend is the brain's substrate, not the world — decisions come from
     the seeded policy either way, so swapping oracle/jax/jax-batched must
-    not reshuffle the environment.
+    not reshuffle the environment.  A deployment whose capabilities set
+    ``world_alias`` (fault-injecting wrappers, :mod:`repro.traffic.faults`)
+    seeds as the aliased name: injected faults perturb the run, never the
+    world it runs in.
     """
-    key = f"{spec.app}/{spec.instance}/{spec.pattern}/{spec.deployment}"
+    deployment = spec.deployment
+    try:
+        caps = resolve_deployment(deployment).capabilities
+        deployment = caps.world_alias or deployment
+    except KeyError:
+        pass   # unregistered name (direct construction in tests)
+    key = f"{spec.app}/{spec.instance}/{spec.pattern}/{deployment}"
     return spec.seed * 9176 + zlib.crc32(key.encode()) % 10_000
 
 
@@ -121,13 +130,27 @@ def _artifact(policy, workspace, s3) -> Tuple[Optional[str], Optional[str]]:
 
 
 class Session:
-    """Executes RunSpecs against fresh per-run environments."""
+    """Executes RunSpecs against fresh per-run environments.
+
+    ``retry`` / ``hedge`` (:class:`repro.core.policies.RetryPolicy` /
+    :class:`repro.core.policies.HedgePolicy`) are handed to every
+    runner: tool invocations that fail with retryable errors (e.g. the
+    fault injection of :mod:`repro.traffic.faults`) are re-dispatched
+    with virtual-time backoff, slow calls are hedged — the agent's
+    history, and therefore every decision, stays identical to a
+    fault-free run as long as the budget holds.  Specs run under a
+    retry/hedge policy are NOT cached: resilience changes latency/cost
+    accounting, and the cache key does not cover the policies."""
 
     def __init__(self,
                  on_event: Optional[Callable] = None,
-                 cache: Optional[RunCache] = None):
+                 cache: Optional[RunCache] = None,
+                 retry: Optional["RetryPolicy"] = None,
+                 hedge: Optional["HedgePolicy"] = None):
         self.on_event = on_event
         self.cache = cache
+        self.retry = retry
+        self.hedge = hedge
 
     # ------------------------------------------------------------------
     def execute(self, spec: RunSpec,
@@ -136,13 +159,15 @@ class Session:
         run the pattern, locate + judge the artifact, account costs.
 
         With a warm cache, returns the stored RunResult instead."""
-        key = spec_fingerprint(spec) if self.cache is not None else None
-        if self.cache is not None:
+        cacheable = (self.cache is not None
+                     and self.retry is None and self.hedge is None)
+        key = spec_fingerprint(spec) if cacheable else None
+        if cacheable:
             hit = self.cache.get(key)
             if hit is not None:
                 return hit
         result = self._execute(spec, on_event)
-        if self.cache is not None:
+        if cacheable:
             self.cache.put(key, result)
         return result
 
@@ -166,7 +191,8 @@ class Session:
         runner = create_runner(spec.pattern, llm, env.clients, world, trace,
                                deployment=spec.deployment,
                                remote=backend.capabilities.remote,
-                               on_event=self._combined_observer(on_event))
+                               on_event=self._combined_observer(on_event),
+                               retry=self.retry, hedge=self.hedge)
 
         t0 = world.clock.now()
         failure = ""
@@ -219,6 +245,30 @@ class Session:
             return [self.execute(s) for s in specs]
         with ThreadPoolExecutor(max_workers=max_workers) as pool:
             return list(pool.map(self.execute, specs))
+
+    # ------------------------------------------------------------------
+    async def execute_many_async(self, specs: Iterable[RunSpec],
+                                 arrivals: Optional[Iterable[float]] = None,
+                                 max_concurrency: int = 0) -> List[RunResult]:
+        """Asyncio fan-out: interleave many runs on ONE event loop with a
+        shared virtual-clock timeline (:mod:`repro.traffic.driver`) — no
+        thread per run.  Results preserve spec order and are bit-identical
+        to serial :meth:`execute` (every run still builds its own
+        World/clock/clients; the timeline only *interleaves* their
+        recorded latencies).
+
+        ``arrivals`` (virtual seconds, one per spec) staggers run start
+        times; ``max_concurrency`` caps in-flight runs — excess arrivals
+        queue in FIFO order and their wait shows up on the timeline, not
+        in ``RunResult.total_latency``.  Call from an event loop::
+
+            results = asyncio.run(session.execute_many_async(specs))
+        """
+        # deferred import: the traffic layer sits above the session API
+        from ..traffic.driver import drive_specs
+        records = await drive_specs(self, list(specs), arrivals=arrivals,
+                                    max_concurrency=max_concurrency)
+        return [r.result for r in records]
 
     # ------------------------------------------------------------------
     def run_until_n_successes(self, spec: RunSpec, n: int = 5,

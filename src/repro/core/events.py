@@ -85,6 +85,37 @@ class RunCompleted(RunEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class ToolRetried(RunEvent):
+    """A tool invocation failed with a *retryable* error (fault-injected
+    transient failure, throttling — see :mod:`repro.traffic.faults`) and
+    the runtime's :class:`repro.core.policies.RetryPolicy` re-dispatched
+    it after ``backoff_s`` of virtual time.  ``attempt`` is the 1-based
+    index of the attempt that FAILED, so a call that succeeds on its
+    third try emits two ``ToolRetried`` events (attempts 1 and 2)."""
+    server: str
+    tool: str
+    attempt: int
+    error: str
+    backoff_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RunHedged(RunEvent):
+    """A slow tool invocation was hedged: the runtime's
+    :class:`repro.core.policies.HedgePolicy` issued a backup call at
+    ``hedge_after_s`` into the primary's flight and took whichever
+    finished first.  ``winner`` is ``"primary"`` or ``"hedge"``;
+    ``saved_s`` is the virtual latency the hedge shaved off the
+    primary's completion time (0.0 when the primary won)."""
+    server: str
+    tool: str
+    winner: str
+    primary_s: float
+    hedge_s: float
+    saved_s: float
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineStepped(RunEvent):
     """Serving-side event: the continuous-batching scheduler advanced all
     live decode slots by one step.  Emitted by the *engine*, not a run —
@@ -113,7 +144,8 @@ _EVENT_TYPES: Dict[str, type] = {
     cls.__name__: cls
     for cls in (RunStarted, StageStarted, PlanProduced, LLMCompleted,
                 ToolInvoked, OverheadIncurred, ReflectionEmitted,
-                StageCompleted, RunCompleted, EngineStepped)
+                StageCompleted, RunCompleted, ToolRetried, RunHedged,
+                EngineStepped)
 }
 
 # events whose ``event`` field is a nested metrics dataclass
@@ -143,8 +175,19 @@ def to_wire(event: RunEvent) -> Dict[str, Any]:
     return d
 
 
+def _known_fields(cls: type, d: Dict[str, Any]) -> Dict[str, Any]:
+    """Drop wire fields the local dataclass doesn't know: a NEWER peer
+    (remote orchestrator Lambda, disk cache written by a later version)
+    may attach extra gauges; tolerating them keeps the wire protocol
+    forward-compatible (missing fields still need defaults, as with
+    ``EngineStepped``'s v2 gauges)."""
+    known = {f.name for f in dataclasses.fields(cls)}
+    return {k: v for k, v in d.items() if k in known}
+
+
 def from_wire(d: Dict[str, Any]) -> RunEvent:
-    """Inverse of :func:`to_wire`. Raises ``KeyError`` on unknown type."""
+    """Inverse of :func:`to_wire`. Raises ``KeyError`` on unknown type;
+    unknown *fields* of a known type are ignored (forward compat)."""
     d = dict(d)
     name = d.pop("type")
     try:
@@ -152,9 +195,10 @@ def from_wire(d: Dict[str, Any]) -> RunEvent:
     except KeyError:
         raise KeyError(f"unknown RunEvent type {name!r}; known: "
                        f"{sorted(_EVENT_TYPES)}") from None
+    d = _known_fields(cls, d)
     nested = _NESTED_EVENT.get(name)
     if nested is not None:
-        d["event"] = nested(**d["event"])
+        d["event"] = nested(**_known_fields(nested, d["event"]))
     return cls(**d)
 
 

@@ -1,19 +1,75 @@
-"""Application policies for the oracle LLM backend.
+"""Application policies for the oracle LLM backend, plus the
+orchestrator-level *resilience* policies (retry / hedge).
 
-Each policy encodes how a gpt-4o-mini-class model *behaves* on one of the
-paper's three applications under each of the three patterns — including the
-anomalies catalogued in §6 (seeded, so success rates land in the paper's
-regimes). The agent frameworks (agentx/react/magentic) stay fully generic;
-everything app-specific lives here.
+Each app policy encodes how a gpt-4o-mini-class model *behaves* on one of
+the paper's three applications under each of the three patterns — including
+the anomalies catalogued in §6 (seeded, so success rates land in the
+paper's regimes). The agent frameworks (agentx/react/magentic) stay fully
+generic; everything app-specific lives here.
+
+:class:`RetryPolicy` and :class:`HedgePolicy` are what makes the
+orchestration *robust* under the fault injection of
+:mod:`repro.traffic.faults`: ``Session(retry=..., hedge=...)`` hands them
+to every runner, and :meth:`repro.core.runtime.AgentRuntime.invoke`
+re-dispatches retryable tool failures (emitting
+:class:`repro.core.events.ToolRetried`) and hedges slow calls (emitting
+:class:`repro.core.events.RunHedged`).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import random
 import re
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .llm import Decision, LLMRequest, ToolCall
+
+
+# ===========================================================================
+# Resilience policies (orchestrator-level, pattern-agnostic)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Re-dispatch tool invocations that fail with a *retryable* error.
+
+    ``max_attempts`` counts the first dispatch: 3 means one call plus up
+    to two retries.  Backoff is exponential in virtual time
+    (``backoff_s * backoff_mult**(attempt-1)``), billed to the run like
+    any other latency.  A result is retryable when it is a
+    ``<tool-error ...>`` whose message contains one of ``retry_on`` —
+    the markers the fault injector stamps on transient failures; real
+    tool errors (unknown tool, bad arguments) never match and are
+    surfaced to the agent unchanged, exactly as without a policy.
+    """
+    max_attempts: int = 3
+    backoff_s: float = 0.5
+    backoff_mult: float = 2.0
+    retry_on: Tuple[str, ...] = ("transient:", "throttled:", "timeout:")
+
+    def is_retryable(self, result: str) -> bool:
+        return (result.startswith("<tool-error")
+                and any(marker in result for marker in self.retry_on))
+
+    def backoff(self, attempt: int) -> float:
+        """Virtual-time backoff after the ``attempt``-th failure (1-based)."""
+        return self.backoff_s * (self.backoff_mult ** (attempt - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    """Tail-latency hedging for tool invocations.
+
+    When a call's virtual latency exceeds ``hedge_after_s``, the runtime
+    models a backup call issued at that deadline and completes with
+    whichever copy finished first (the loser's tail is discarded from
+    the clock, its cost is not — both invocations are billed).  Classic
+    FaaS cold-start mitigation: the hedge usually lands on a warm
+    instance.  ``min_saving_s`` suppresses the hedge when it would not
+    shave at least that much off the primary's completion."""
+    hedge_after_s: float = 8.0
+    min_saving_s: float = 0.0
 
 
 def _is_remote(deployment: str) -> bool:

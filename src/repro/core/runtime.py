@@ -58,10 +58,11 @@ from ..env.clock import Stopwatch
 from ..env.world import World
 from ..mcp.client import McpClient, ToolHandle
 from .events import (LLMCompleted, OverheadIncurred, ReflectionEmitted,
-                     RunCompleted, RunEvent, RunStarted, ToolInvoked,
-                     reduce_into_trace)
+                     RunCompleted, RunEvent, RunHedged, RunStarted,
+                     ToolInvoked, ToolRetried, reduce_into_trace)
 from .llm import LLMBackend, LLMRequest, LLMResponse, ToolCall
 from .metrics import FrameworkEvent, LLMEvent, ToolEvent, Trace
+from .policies import HedgePolicy, RetryPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +147,8 @@ class AgentRuntime:
                  config: Optional[PatternConfig] = None,
                  on_event: Optional[Callable[[RunEvent], None]] = None,
                  remote: Optional[bool] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 hedge: Optional[HedgePolicy] = None,
                  **overrides):
         cfg = config if config is not None else type(self).default_config
         if overrides:
@@ -156,6 +159,8 @@ class AgentRuntime:
         self.world = world
         self.trace = trace
         self.deployment = deployment
+        self.retry = retry
+        self.hedge = hedge
         # off-workstation tooling: from the deployment backend's capability
         # descriptor when driven through Session, else the string heuristic
         self.remote = (deployment != "local") if remote is None else remote
@@ -213,7 +218,15 @@ class AgentRuntime:
     # -- the single validated tool-invocation path ---------------------------
     def invoke(self, call: ToolCall) -> str:
         """Validate server AND tool name identically for every pattern,
-        then dispatch with virtual-time accounting."""
+        then dispatch with virtual-time accounting.
+
+        Resilience (``retry`` / ``hedge`` policies, when set) lives
+        HERE, below the pattern: a retried or hedged call returns one
+        result string, so the agent's history — and therefore every
+        policy decision — is identical to a fault-free run.  The single
+        ``ToolInvoked`` event carries the end-to-end latency (backoffs
+        and losing hedges included) and the final ok flag; per-attempt
+        detail rides on ``ToolRetried`` / ``RunHedged`` events."""
         server = call.server or self.tool_server.get(call.tool, "")
         client = self.clients.get(server)
         with Stopwatch(self.world.clock) as sw:
@@ -224,12 +237,69 @@ class AgentRuntime:
                          for h in self.server_tools.get(server, [])):
                 result = f"<tool-error unknown tool {call.tool!r}>"
             else:
-                result = client.call_tool(call.tool, call.args)
+                result = self._dispatch(client, server, call)
         ok = not result.startswith("<tool-error")
         self.emit(ToolInvoked(
             t=self.now(),
             event=ToolEvent(server, call.tool, sw.elapsed, ok, self.now())))
         return result
+
+    def _dispatch(self, client: McpClient, server: str, call: ToolCall) -> str:
+        """One validated dispatch: hedged call inside a retry loop."""
+        attempt = 1
+        while True:
+            result = self._call_hedged(client, server, call)
+            if (self.retry is None
+                    or not self.retry.is_retryable(result)
+                    or attempt >= self.retry.max_attempts):
+                return result
+            backoff = self.retry.backoff(attempt)
+            self.emit(ToolRetried(t=self.now(), server=server, tool=call.tool,
+                                  attempt=attempt, error=result[:200],
+                                  backoff_s=backoff))
+            self.world.clock.sleep(backoff)
+            attempt += 1
+
+    def _call_hedged(self, client: McpClient, server: str,
+                     call: ToolCall) -> str:
+        """Call the tool; when a hedge policy is set and the primary ran
+        past the hedge deadline, model a backup call fired AT the
+        deadline and complete with whichever copy finished first.  Both
+        calls' latency draws and platform billing happen for real; the
+        loser's *tail* is then discarded from the clock (virtual time
+        rewinds to the winner's completion — the paid-but-wasted work
+        stays on the bill, which is exactly how hedging prices out)."""
+        clock = self.world.clock
+        t0 = clock.now()
+        result = client.call_tool(call.tool, call.args)
+        primary_s = clock.now() - t0
+        h = self.hedge
+        if h is None or primary_s <= h.hedge_after_s:
+            return result
+        backup = client.call_tool(call.tool, call.args)
+        hedge_s = clock.now() - t0 - primary_s
+        backup_done = h.hedge_after_s + hedge_s
+        # a fast *failure* must not beat a slow success: the client keeps
+        # waiting for the other copy when one errors out, so the race is
+        # decided among successful responses first, by latency only when
+        # both succeeded (or both failed)
+        primary_ok = not result.startswith("<tool-error")
+        backup_ok = not backup.startswith("<tool-error")
+        if primary_ok and not backup_ok:
+            effective = primary_s
+        elif backup_ok and not primary_ok:
+            effective = backup_done
+        else:
+            effective = min(primary_s, backup_done)
+        if primary_ok >= backup_ok and primary_s - effective < h.min_saving_s:
+            effective = primary_s
+        winner = "primary" if effective == primary_s else "hedge"
+        clock.reset(t0 + effective)
+        self.emit(RunHedged(t=self.now(), server=server, tool=call.tool,
+                            winner=winner, primary_s=primary_s,
+                            hedge_s=hedge_s,
+                            saved_s=max(primary_s - effective, 0.0)))
+        return backup if winner == "hedge" else result
 
     # -- run contract --------------------------------------------------------
     def run(self, task: str) -> RunOutcome:
@@ -317,8 +387,11 @@ def create_runner(name: str, backend: LLMBackend,
                   clients: Dict[str, McpClient], world: World, trace: Trace,
                   deployment: str = "local",
                   on_event: Optional[Callable[[RunEvent], None]] = None,
-                  remote: Optional[bool] = None) -> AgentRuntime:
+                  remote: Optional[bool] = None,
+                  retry: Optional[RetryPolicy] = None,
+                  hedge: Optional[HedgePolicy] = None) -> AgentRuntime:
     rp = resolve_pattern(name)
     return rp.runner_cls(backend, clients, world, trace,
                          deployment=deployment, config=rp.config,
-                         on_event=on_event, remote=remote)
+                         on_event=on_event, remote=remote,
+                         retry=retry, hedge=hedge)

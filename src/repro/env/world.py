@@ -4,6 +4,15 @@ Replaces the paper's live services (Google Serper, the web, Yahoo Finance,
 arXiv) with seeded corpora whose response *sizes* are calibrated so token
 accounting lands in the paper's regimes (e.g. a search result ≈ 883 prompt
 tokens, one fetch chunk ≈ 1063 tokens / 5000 chars).
+
+Corpus synthesis is LAZY: a ``World`` is built per run, but text synthesis
+(``_prose``) dominates construction cost, which matters once the traffic
+subsystem (``repro.traffic``) replays thousands of runs per process.  Web
+pages and arXiv papers derive their content from item-local string seeds
+(``f"{topic}-{i}"``), NOT the world seed, so they are built on first
+access into process-wide caches shared by every ``World``; stock series
+DO depend on the world seed and are synthesized per ticker on demand.
+Content is byte-identical to the historical eager construction.
 """
 from __future__ import annotations
 
@@ -11,6 +20,8 @@ import dataclasses
 import hashlib
 import math
 import random
+import re
+import threading
 import zlib
 from typing import Dict, List, Tuple
 
@@ -48,6 +59,47 @@ class WebPage:
     content: str
 
 
+# page content derives from item-local seeds only -> identical in every
+# World; synthesized once per process, shared by all corpus instances
+_PAGE_CACHE: Dict[str, WebPage] = {}
+
+
+def _build_page(url: str) -> WebPage:
+    m = re.match(r"https://example\.org/([a-z]+)/article-(\d+)$", url)
+    if m is None or m.group(1) not in WebCorpus.TOPICS:
+        raise KeyError(url)
+    topic, i = m.group(1), int(m.group(2))
+    query = WebCorpus.TOPICS[topic]
+    title = f"{query.split(' and ')[0].title()} — Part {i + 1}"
+    # ~2 fetch chunks of 5000 chars each (paper Fig. 10: ReAct
+    # re-fetches each truncated page once -> ~2 calls/URL)
+    content = (f"# {title}\n\n"
+               + _prose(f"{topic}-{i}", 980 + 60 * (i % 4)))
+    return WebPage(url, title, content[120:540], content)
+
+
+class _PageMap(dict):
+    """Lazy ``{url: WebPage}``: pages synthesize on first subscript (via
+    the shared process-wide cache); URLs outside the corpus — foreign
+    hosts OR article indices past ``pages_per_topic`` — raise
+    ``KeyError`` exactly as the eager dict did (404 on fetch)."""
+
+    def __init__(self, pages_per_topic: int):
+        super().__init__()
+        self._limit = pages_per_topic
+
+    def __missing__(self, url: str) -> WebPage:
+        m = re.match(r"https://example\.org/[a-z]+/article-(\d+)$", url)
+        if m is not None and int(m.group(1)) >= self._limit:
+            raise KeyError(url)   # past this corpus's page count
+        page = _PAGE_CACHE.get(url)
+        if page is None:
+            page = _build_page(url)
+            _PAGE_CACHE[url] = page
+        self[url] = page
+        return page
+
+
 class WebCorpus:
     TOPICS = {
         "quantum": "Recent advancements in quantum computing hardware development",
@@ -56,21 +108,11 @@ class WebCorpus:
     }
 
     def __init__(self, seed: int = 7, pages_per_topic: int = 10):
-        self.pages: Dict[str, WebPage] = {}
-        self.by_topic: Dict[str, List[str]] = {}
-        for topic, query in self.TOPICS.items():
-            urls = []
-            for i in range(pages_per_topic):
-                url = f"https://example.org/{topic}/article-{i}"
-                title = f"{query.split(' and ')[0].title()} — Part {i + 1}"
-                # ~2 fetch chunks of 5000 chars each (paper Fig. 10: ReAct
-                # re-fetches each truncated page once -> ~2 calls/URL)
-                content = (f"# {title}\n\n"
-                           + _prose(f"{topic}-{i}", 980 + 60 * (i % 4)))
-                snippet = content[120:540]
-                self.pages[url] = WebPage(url, title, snippet, content)
-                urls.append(url)
-            self.by_topic[topic] = urls
+        self.pages: Dict[str, WebPage] = _PageMap(pages_per_topic)
+        self.by_topic: Dict[str, List[str]] = {
+            topic: [f"https://example.org/{topic}/article-{i}"
+                    for i in range(pages_per_topic)]
+            for topic in self.TOPICS}
 
     def topic_of(self, query: str) -> str:
         q = query.lower()
@@ -91,9 +133,10 @@ class WebCorpus:
     def fetch(self, url: str, start_index: int = 0,
               max_length: int = 5000) -> Tuple[str, bool]:
         """Returns (chunk, truncated)."""
-        page = self.pages.get(url)
-        if page is None:
-            raise KeyError(f"404: {url}")
+        try:
+            page = self.pages[url]   # dict.get would bypass lazy synthesis
+        except KeyError:
+            raise KeyError(f"404: {url}") from None
         chunk = page.content[start_index:start_index + max_length]
         truncated = start_index + max_length < len(page.content)
         return chunk, truncated
@@ -101,6 +144,29 @@ class WebCorpus:
 
 # ---------------------------------------------------------------------------
 # Stock market
+
+
+class _SeriesMap(dict):
+    """Lazy ``{ticker: [close...]}``: a series synthesizes on first
+    subscript with the identical per-ticker RNG the eager loop used
+    (``Random(seed + sum(ord))``), so order of access never matters."""
+
+    def __init__(self, seed: int, days: int):
+        super().__init__()
+        self._seed = seed
+        self._days = days
+
+    def __missing__(self, tic: str) -> List[float]:
+        base = StockMarket._BASE.get(tic)
+        if base is None:
+            raise KeyError(tic)
+        rng = random.Random(self._seed + sum(map(ord, tic)))
+        px, out = base, []
+        for _ in range(self._days):
+            px *= math.exp(rng.gauss(0.0004, 0.015))
+            out.append(round(px, 2))
+        self[tic] = out
+        return out
 
 
 class StockMarket:
@@ -116,18 +182,11 @@ class StockMarket:
 
     def __init__(self, seed: int = 11, days: int = 160):
         self.days = days
-        self.series: Dict[str, List[float]] = {}
-        for tic, base in self._BASE.items():
-            rng = random.Random(seed + sum(map(ord, tic)))
-            px, out = base, []
-            for _ in range(days):
-                px *= math.exp(rng.gauss(0.0004, 0.015))
-                out.append(round(px, 2))
-            self.series[tic] = out
+        self.series: Dict[str, List[float]] = _SeriesMap(seed, days)
 
     def resolve(self, name: str) -> str:
         name = name.strip().lower()
-        if name.upper() in self.series:
+        if name.upper() in self._BASE:
             return name.upper()
         for k, v in self.TICKERS.items():
             if k in name:
@@ -172,20 +231,32 @@ class ArxivCorpus:
     SECTIONS = ("Core Contributions", "Methodology", "Experimental Results",
                 "Limitations")
 
+    # paper content derives from key-local seeds only -> identical in
+    # every World; synthesized once per process, shared by all instances.
+    # Lock-guarded: concurrent World construction (execute_many workers)
+    # must never observe a partially built corpus.
+    _CACHE: Dict[str, ArxivPaper] = {}
+    _CACHE_LOCK = threading.Lock()
+
     def __init__(self, seed: int = 13):
-        self.papers: Dict[str, ArxivPaper] = {}
-        for key, (aid, title) in self.TITLES.items():
-            sections = {}
-            for sec in self.SECTIONS:
-                # interleave the section name so RAG retrieval has signal
-                body_parts = []
-                for j in range(6):
-                    body_parts.append(f"{sec} of this work include the "
-                                      f"following aspects.")
-                    body_parts.append(_prose(f"{key}-{sec}-{j}", 220))
-                sections[sec] = " ".join(body_parts)
-            abstract = _prose(f"{key}-abs", 180)
-            self.papers[aid] = ArxivPaper(aid, title, abstract, sections)
+        with ArxivCorpus._CACHE_LOCK:
+            if not ArxivCorpus._CACHE:
+                built = {}
+                for key, (aid, title) in self.TITLES.items():
+                    sections = {}
+                    for sec in self.SECTIONS:
+                        # interleave the section name so RAG retrieval
+                        # has signal
+                        body_parts = []
+                        for j in range(6):
+                            body_parts.append(f"{sec} of this work include "
+                                              f"the following aspects.")
+                            body_parts.append(_prose(f"{key}-{sec}-{j}", 220))
+                        sections[sec] = " ".join(body_parts)
+                    abstract = _prose(f"{key}-abs", 180)
+                    built[aid] = ArxivPaper(aid, title, abstract, sections)
+                ArxivCorpus._CACHE.update(built)
+        self.papers: Dict[str, ArxivPaper] = ArxivCorpus._CACHE
 
     def search(self, query: str, max_results: int = 5) -> List[ArxivPaper]:
         q = query.lower()

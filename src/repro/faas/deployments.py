@@ -226,6 +226,11 @@ class DeploymentCapabilities:
     description_hints: bool = False   # LOCAL_HINTS applied
     artifact_store: str = "workspace"  # "workspace" | "s3"
     cost_accounting: bool = False  # per-invocation platform billing
+    world_alias: str = ""          # seed the World as if deployed under
+    #   this name ("" = own name).  Wrapper backends (fault injection,
+    #   repro.traffic.faults) alias to the wrapped deployment so
+    #   injecting faults never reshuffles the simulated environment —
+    #   the invariant the recover-to-baseline contract rests on.
     tags: tuple = ()
     rank: int = 50                 # listing order
 
@@ -291,6 +296,15 @@ def register_deployment(name: str, *, tags: tuple = (), **overrides):
             _DEPLOYMENTS[name] = RegisteredDeployment(name, cls, caps)
         return cls
     return deco
+
+
+def unregister_deployment(name: str) -> bool:
+    """Drop a registered deployment (tests; transient fault-injection
+    twins from :mod:`repro.traffic.faults`).  Returns whether it was
+    registered.  Built-ins re-register only on module import, so don't
+    unregister those outside a snapshot/restore."""
+    with _DEPLOYMENTS_LOCK:
+        return _DEPLOYMENTS.pop(name, None) is not None
 
 
 def resolve_deployment(name: str) -> RegisteredDeployment:

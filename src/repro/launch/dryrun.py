@@ -33,6 +33,18 @@ from .sharding import (cache_shardings, effective_config,        # noqa: E402
                        input_specs, make_activation_policy,
                        param_shardings)
 
+# Combinations that die in NATIVE code (uncatchable abort, not a Python
+# exception) on the emulated-host-device path.  --all sweeps write a
+# {"skipped": ...} artifact instead of crashing the whole sweep; an
+# explicit --arch/--shape request still runs them (reproducing the abort
+# is the point then).  Tracked in ROADMAP "Open items".
+KNOWN_BAD = {
+    ("mamba2-370m", "long_500k"):
+        "native XLA abort (free(): invalid pointer) while compiling the "
+        "500k-token SSM scan on forced-host devices — pre-existing since "
+        "the seed, unrelated to any PR; see ROADMAP open items",
+}
+
 # TPU v5e constants (roofline)
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
@@ -215,6 +227,13 @@ def main():
     for arch, shape, mp in combos:
         tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
         print(f"=== dry-run {tag} ===", flush=True)
+        if args.all and (arch, shape) in KNOWN_BAD:
+            res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "skipped": KNOWN_BAD[(arch, shape)]}
+            print("SKIPPED:", res["skipped"], flush=True)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=2)
+            continue
         try:
             res = dryrun_one(arch, shape, multi_pod=mp,
                              debug_mesh=args.debug_mesh)

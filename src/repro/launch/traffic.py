@@ -1,0 +1,141 @@
+"""Traffic launcher: drive a seeded workload through the asyncio
+virtual-clock driver (or the wall-clock real mode) and print per-scenario
+SLO telemetry.
+
+    # 500-request bursty day over the default mix, faults + retry:
+    PYTHONPATH=src python -m repro.launch.traffic --requests 500 \
+        --arrival bursty --rate 5 --transient-rate 0.2 --retry
+
+    # closed loop, 16 users:
+    PYTHONPATH=src python -m repro.launch.traffic --arrival closed \
+        --users 16 --requests 64
+
+    # real wall-clock mode against the batched JAX engine (CPU):
+    PYTHONPATH=src python -m repro.launch.traffic --real \
+        --llm jax-batched --requests 8 --rate 1 --time-scale 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from ..apps.session import Session
+from ..core.policies import HedgePolicy, RetryPolicy
+from ..traffic import (DEFAULT_MIX, FaultPlan, SLOTarget, Scenario,
+                       TrafficDriver, Workload, aggregate_report,
+                       register_fault_plan)
+from ..traffic.faults import FaultStats
+
+
+def _mix(args) -> tuple:
+    if args.scenario:
+        scenarios = []
+        for i, raw in enumerate(args.scenario):
+            parts = raw.split(":")
+            if len(parts) < 3:
+                raise SystemExit(f"--scenario {raw!r}: expected "
+                                 f"app:instance:pattern[:deployment[:weight]]")
+            app, inst, pat = parts[:3]
+            dep = parts[3] if len(parts) > 3 else "local"
+            weight = float(parts[4]) if len(parts) > 4 else 1.0
+            scenarios.append(Scenario(f"{app}/{dep}/{pat}", app, inst, pat,
+                                      dep, weight=weight))
+        mix = tuple(scenarios)
+    else:
+        mix = DEFAULT_MIX
+    if args.llm != "oracle":
+        mix = tuple(dataclasses.replace(s, llm=args.llm) for s in mix)
+    return mix
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", action="append", default=[],
+                    help="app:instance:pattern[:deployment[:weight]] "
+                         "(repeatable; default: the built-in mix)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "uniform", "closed"])
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--users", type=int, default=8,
+                    help="closed-loop virtual users")
+    ap.add_argument("--think", type=float, default=5.0,
+                    help="closed-loop mean think time (virtual s)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="in-flight run cap (0 = unbounded)")
+    ap.add_argument("--llm", default="oracle")
+    # fault injection + resilience
+    ap.add_argument("--transient-rate", type=float, default=0.0)
+    ap.add_argument("--throttle-rate", type=float, default=0.0)
+    ap.add_argument("--cold-start-rate", type=float, default=0.0)
+    ap.add_argument("--cold-start-s", type=float, default=2.5)
+    ap.add_argument("--retry", action="store_true",
+                    help="enable RetryPolicy on the session")
+    ap.add_argument("--hedge-after", type=float, default=0.0,
+                    help="enable HedgePolicy at this deadline (virtual s)")
+    # real (wall-clock) mode
+    ap.add_argument("--real", action="store_true",
+                    help="wall-clock mode: thread-pool dispatch at scaled "
+                         "arrival times (use with --llm jax-batched)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="real mode: compress arrival time by this factor")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full aggregate as JSON")
+    args = ap.parse_args()
+
+    mix = _mix(args)
+    stats = None
+    if args.transient_rate or args.throttle_rate or args.cold_start_rate:
+        plan = FaultPlan(transient_rate=args.transient_rate,
+                         throttle_rate=args.throttle_rate,
+                         cold_start_rate=args.cold_start_rate,
+                         cold_start_s=args.cold_start_s,
+                         first_call_cold=False, seed=args.seed)
+        stats = FaultStats()
+        faulty = []
+        for s in mix:
+            name = f"{s.deployment}+faults"
+            register_fault_plan(name, s.deployment, plan, stats=stats)
+            faulty.append(dataclasses.replace(s, deployment=name))
+        mix = tuple(faulty)
+
+    session = Session(
+        retry=RetryPolicy(max_attempts=8, backoff_s=0.25)
+        if args.retry else None,
+        hedge=HedgePolicy(hedge_after_s=args.hedge_after)
+        if args.hedge_after > 0 else None)
+    wl = Workload(scenarios=mix, arrival=args.arrival, rate=args.rate,
+                  n_requests=args.requests, seed=args.seed,
+                  users=args.users, think_s=args.think)
+    driver = TrafficDriver(session, max_concurrency=args.concurrency,
+                           mode="real" if args.real else "virtual",
+                           time_scale=args.time_scale)
+    report = driver.run(wl)
+    agg = aggregate_report(report, SLOTarget())
+
+    if args.json:
+        print(json.dumps(agg, indent=2))
+        return
+    rp = agg["replay"]
+    print(f"# {len(report.records)} runs | virtual {rp['virtual_s']:.0f}s "
+          f"in wall {rp['wall_s']:.2f}s ({rp['speedup']:.0f}x) | peak "
+          f"{rp['peak_concurrency']} in flight | "
+          f"{rp['throughput_rps']:.2f} runs/s")
+    if stats is not None:
+        print(f"# injected faults: {stats.snapshot()}")
+    hdr = (f"{'scenario':28s} {'n':>4s} {'ok%':>6s} {'p50':>7s} {'p95':>7s} "
+           f"{'ttft95':>7s} {'qwait95':>8s} {'$/run':>9s} {'retry':>5s}")
+    print(hdr)
+    rows = list(agg["scenarios"].items()) + [("TOTAL", agg["overall"])]
+    for name, a in rows:
+        print(f"{name:28s} {a['n']:4d} {a['success_rate'] * 100:5.1f}% "
+              f"{a['latency_s']['p50']:7.1f} {a['latency_s']['p95']:7.1f} "
+              f"{a['ttft_s']['p95']:7.1f} {a['queue_wait_s']['p95']:8.1f} "
+              f"{a['cost_usd']['total_mean']:9.5f} "
+              f"{a['resilience']['retries']:5d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -501,12 +501,54 @@ class EngineClient:
                 finally:
                     self._cv.acquire()
                     self._pumping = False
-                tokenizer = self.scheduler.engine.tokenizer
-                for req in finished:
-                    self._results[req.rid] = req.to_result(tokenizer)
-                    # the client is the long-lived path (backend
-                    # singleton): drop completed bookkeeping so the
-                    # scheduler doesn't grow without bound
-                    self.scheduler.requests.pop(req.rid, None)
-                self._cv.notify_all()
+                self._collect(finished)
             return self._results.pop(rid)
+
+    def _collect(self, finished: List[Request]) -> None:
+        """Bank finished requests and drop the scheduler's completed
+        bookkeeping — the client is the long-lived path (backend
+        singleton), so the scheduler must not grow without bound.
+        Caller holds ``_cv``."""
+        tokenizer = self.scheduler.engine.tokenizer
+        for req in finished:
+            self._results[req.rid] = req.to_result(tokenizer)
+            self.scheduler.requests.pop(req.rid, None)
+        self._cv.notify_all()
+
+    async def generate_async(self, prompt: str, max_new_tokens: int = 32,
+                             priority: int = 0) -> GenerationResult:
+        """Asyncio-friendly pump: like :meth:`generate`, but awaitable —
+        many coroutines on ONE event loop multiplex onto the shared
+        decode batch with no thread per request.
+
+        While its request is in flight, exactly one waiter pumps
+        ``scheduler.step()`` on the loop's default executor (the step is
+        a blocking jitted call — running it off-loop keeps other
+        coroutines submitting into the same batch); the rest yield.
+        Thread-safe alongside blocking ``generate`` callers: both paths
+        share the ``_pumping`` baton and the results table."""
+        import asyncio
+        loop = asyncio.get_running_loop()
+        with self._cv:
+            rid = self.scheduler.submit(prompt, max_new=max_new_tokens,
+                                        priority=priority)
+        while True:
+            with self._cv:
+                if rid in self._results:
+                    return self._results.pop(rid)
+                pump = not self._pumping
+                if pump:
+                    self._pumping = True
+            if pump:
+                try:
+                    finished = await loop.run_in_executor(
+                        None, self.scheduler.step)
+                finally:
+                    with self._cv:
+                        self._pumping = False
+                with self._cv:
+                    self._collect(finished)
+            else:
+                # another caller (thread or coroutine) drives the
+                # engine; yield the loop until the next step lands
+                await asyncio.sleep(0.001)

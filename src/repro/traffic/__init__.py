@@ -1,0 +1,31 @@
+"""Traffic subsystem: load generation, fault injection, SLO benchmarking.
+
+The layer that turns the per-run reproducer into a traffic-scale
+evaluation system (ROADMAP "Traffic"):
+
+  * :mod:`repro.traffic.workload` — seeded arrival processes (Poisson,
+    bursty MMPP, uniform, closed-loop) over weighted scenario mixes;
+  * :mod:`repro.traffic.driver` — the asyncio virtual-clock driver: one
+    event loop interleaves thousands of in-flight runs on a shared
+    deterministic timeline (``Session.execute_many_async`` wraps it);
+  * :mod:`repro.traffic.faults` — transport-level fault injection (cold
+    starts, transient errors, throttling) for any deployment backend,
+    countered by ``Session(retry=..., hedge=...)``;
+  * :mod:`repro.traffic.slo` — per-scenario success/latency/TTFT/cost
+    aggregation against SLO targets (``benchmarks/traffic.py`` writes
+    it to ``artifacts/BENCH_traffic.json``).
+"""
+from .driver import (TrafficDriver, TrafficRecord, TrafficReport,
+                     VirtualSemaphore, VirtualTimeline, drive_specs)
+from .faults import (FaultInjectingTransport, FaultPlan, FaultStats,
+                     FaultyDeployment, register_fault_plan)
+from .slo import SLOTarget, aggregate_report, percentile
+from .workload import DEFAULT_MIX, Arrival, Scenario, Workload
+
+__all__ = [
+    "Arrival", "DEFAULT_MIX", "FaultInjectingTransport", "FaultPlan",
+    "FaultStats", "FaultyDeployment", "SLOTarget", "Scenario",
+    "TrafficDriver", "TrafficRecord", "TrafficReport", "VirtualSemaphore",
+    "VirtualTimeline", "Workload", "aggregate_report", "drive_specs",
+    "percentile", "register_fault_plan",
+]

@@ -1,0 +1,391 @@
+"""Asyncio virtual-clock traffic driver.
+
+One event loop interleaves thousands of in-flight runs — no thread per
+run.  The trick: runs are *virtually* timed already (every component
+sleeps on a per-run ``VirtualClock``), so executing one is wall-cheap;
+what the driver adds is a SHARED timeline.  Each run executes at its
+arrival point and its recorded per-step latencies (the ``RunEvent``
+timestamps) are then replayed as ``await timeline.sleep(dt)`` — so
+concurrent runs interleave step-by-step on the global clock, capacity
+limits introduce real queueing delay, and a million-request day replays
+in seconds of wall time.
+
+:class:`VirtualTimeline` is a deterministic discrete-event scheduler for
+one asyncio loop: coroutines park in ``sleep`` and, when every live task
+is parked (in the sleep heap or on a :class:`VirtualSemaphore`), virtual
+time jumps to the earliest deadline.  No wall timers are involved, so a
+workload's timeline is bit-reproducible run-to-run and process-to-process.
+
+Two modes:
+
+  * **virtual** (default) — replay recorded latencies as above; per-run
+    results are bit-identical to serial ``Session.execute`` (each run
+    still builds its own World/clients; tested).
+  * **real** — wall-clock: runs dispatch into a bounded thread pool at
+    (scaled) arrival times; with ``RunSpec.llm = "jax-batched"`` the
+    pool's blocked workers cooperatively pump one continuous-batching
+    engine (``EngineClient``), so the fan-out shares a decode batch.
+
+Entry points: :func:`drive_specs` (what ``Session.execute_many_async``
+wraps) and :class:`TrafficDriver` (workloads, fault stats, SLO records).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import heapq
+import random
+import time
+from collections import deque
+from typing import List, Optional
+
+from ..core.events import LLMCompleted, RunHedged, ToolRetried
+from ..core.metrics import RunResult
+from .workload import Arrival, Scenario, Workload
+
+
+# ---------------------------------------------------------------------------
+# virtual time for one event loop
+
+
+class VirtualTimeline:
+    """Deterministic virtual clock shared by the tasks of one event loop.
+
+    Tasks must be ``register``-ed (and ``unregister``-ed when done) so
+    the timeline knows when *everyone* is parked; only then does time
+    advance, to the earliest pending deadline.  A task parked anywhere
+    else (a :class:`VirtualSemaphore` waiter) counts via ``_blocked``.
+    Runnable-but-not-yet-run tasks keep time frozen — virtual time never
+    advances past work that could still happen "now".
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._heap: list = []        # (deadline, seq, future)
+        self._seq = 0
+        self._live = 0               # registered, unfinished tasks
+        self._blocked = 0            # parked outside the sleep heap
+
+    def now(self) -> float:
+        return self._t
+
+    def register(self) -> None:
+        self._live += 1
+
+    def unregister(self) -> None:
+        self._live -= 1
+        self._maybe_fire()
+
+    async def sleep(self, dt: float) -> None:
+        """Park until virtual ``now() + dt`` (dt <= 0 still parks, at
+        the current instant — a cooperative yield point)."""
+        fut = asyncio.get_running_loop().create_future()
+        heapq.heappush(self._heap, (self._t + max(dt, 0.0), self._seq, fut))
+        self._seq += 1
+        self._maybe_fire()
+        await fut
+
+    def semaphore(self, capacity: int) -> "VirtualSemaphore":
+        return VirtualSemaphore(self, capacity)
+
+    def _maybe_fire(self) -> None:
+        """If every live task is parked, wake the earliest sleeper (one
+        at a time: its continuation may park new work at the same
+        instant)."""
+        while (self._live > 0 and self._heap
+               and len(self._heap) + self._blocked >= self._live):
+            deadline, _, fut = heapq.heappop(self._heap)
+            if fut.cancelled():
+                continue
+            self._t = max(self._t, deadline)
+            fut.set_result(None)
+            break
+
+
+class VirtualSemaphore:
+    """FIFO capacity gate cooperating with the timeline: a parked waiter
+    counts as blocked, so virtual time keeps advancing for the runs that
+    hold a slot — their elapsed virtual time becomes the waiter's
+    queueing delay."""
+
+    def __init__(self, timeline: VirtualTimeline, capacity: int):
+        self._tl = timeline
+        self._free = capacity
+        self._waiters: deque = deque()
+
+    async def acquire(self) -> None:
+        if self._free > 0:
+            self._free -= 1
+            return
+        fut = asyncio.get_running_loop().create_future()
+        self._waiters.append(fut)
+        self._tl._blocked += 1
+        self._tl._maybe_fire()
+        await fut
+
+    def release(self) -> None:
+        if self._waiters:
+            fut = self._waiters.popleft()
+            self._tl._blocked -= 1   # runnable again, holding the slot
+            fut.set_result(None)
+        else:
+            self._free += 1
+
+
+# ---------------------------------------------------------------------------
+# per-run records
+
+
+@dataclasses.dataclass
+class TrafficRecord:
+    """One run on the shared timeline.  ``latency`` is the client-side
+    view (arrival -> completion, queueing included); the run-side view is
+    ``result.total_latency``."""
+    index: int
+    scenario: str
+    spec: object                 # RunSpec
+    arrival: float
+    start: float
+    end: float
+    ttft: Optional[float]        # arrival -> first LLM completion
+    result: RunResult
+
+    @property
+    def queue_wait(self) -> float:
+        return self.start - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.end - self.arrival
+
+    @property
+    def retries(self) -> int:
+        return sum(isinstance(e, ToolRetried)
+                   for e in self.result.extras.get("events", ()))
+
+    @property
+    def hedges(self) -> int:
+        return sum(isinstance(e, RunHedged)
+                   for e in self.result.extras.get("events", ()))
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    records: List[TrafficRecord]
+    virtual_s: float             # timeline span of the whole workload
+    wall_s: float                # wall seconds the replay took
+
+    @property
+    def replay_speedup(self) -> float:
+        return self.virtual_s / self.wall_s if self.wall_s > 0 else 0.0
+
+    def peak_concurrency(self) -> int:
+        edges = []
+        for r in self.records:
+            edges.append((r.start, 1))
+            edges.append((r.end, -1))
+        peak = live = 0
+        for _, d in sorted(edges):
+            live += d
+            peak = max(peak, live)
+        return peak
+
+
+# ---------------------------------------------------------------------------
+# replaying one run onto the timeline
+
+
+async def _replay_run(timeline: VirtualTimeline, result: RunResult,
+                      arrival: float) -> Optional[float]:
+    """Advance the shared timeline through the run's recorded per-step
+    latencies (event-timestamp deltas, plus the tail to
+    ``total_latency``); returns the TTFT relative to ``arrival``."""
+    events = result.extras.get("events") or []
+    ttft = None
+    if events:
+        t_prev = events[0].t
+        for ev in events:
+            dt = ev.t - t_prev
+            t_prev = ev.t
+            if dt > 0:
+                await timeline.sleep(dt)
+            if ttft is None and isinstance(ev, LLMCompleted):
+                ttft = timeline.now() - arrival
+        tail = result.total_latency - (events[-1].t - events[0].t)
+    else:
+        tail = result.total_latency
+    if tail > 0:
+        await timeline.sleep(tail)
+    return ttft
+
+
+async def _run_on_timeline(session, timeline: VirtualTimeline,
+                           sem: Optional[VirtualSemaphore],
+                           index: int, scenario_name: str,
+                           spec) -> TrafficRecord:
+    """The shared core of every virtual-mode run: acquire capacity,
+    execute, replay the recording, record.  Arrival is the timeline's
+    *now* — callers position it (arrival sleep / think time) first."""
+    t_arrive = timeline.now()
+    if sem is not None:
+        await sem.acquire()
+    try:
+        t_start = timeline.now()
+        result = session.execute(spec)
+        ttft = await _replay_run(timeline, result, t_arrive)
+    finally:
+        if sem is not None:
+            sem.release()
+    return TrafficRecord(index, scenario_name, spec, t_arrive, t_start,
+                         timeline.now(), ttft, result)
+
+
+async def _one(session, timeline: VirtualTimeline,
+               sem: Optional[VirtualSemaphore],
+               arrival: Arrival) -> TrafficRecord:
+    try:
+        await timeline.sleep(arrival.t - timeline.now())
+        return await _run_on_timeline(session, timeline, sem, arrival.index,
+                                      arrival.scenario.name, arrival.spec)
+    finally:
+        timeline.unregister()
+
+
+async def drive_specs(session, specs: List, arrivals=None,
+                      max_concurrency: int = 0,
+                      scenario: str = "adhoc") -> List[TrafficRecord]:
+    """Interleave ``specs`` on one fresh timeline (the
+    ``Session.execute_many_async`` engine).  ``arrivals``: optional
+    virtual arrival offsets, default all at t=0."""
+    times = list(arrivals) if arrivals is not None else [0.0] * len(specs)
+    if len(times) != len(specs):
+        raise ValueError(f"{len(times)} arrival times for "
+                         f"{len(specs)} specs")
+    timeline = VirtualTimeline()
+    sem = timeline.semaphore(max_concurrency) if max_concurrency > 0 else None
+    wrapped = [Arrival(i, t, Scenario(scenario, s.app, s.instance,
+                                      s.pattern, s.deployment, s.llm,
+                                      s.priority), s)
+               for i, (t, s) in enumerate(zip(times, specs))]
+    for _ in wrapped:
+        timeline.register()
+    tasks = [asyncio.ensure_future(_one(session, timeline, sem, a))
+             for a in wrapped]
+    return list(await asyncio.gather(*tasks))
+
+
+# ---------------------------------------------------------------------------
+# the workload driver
+
+
+class TrafficDriver:
+    """Drives a :class:`repro.traffic.workload.Workload` through a
+    ``Session``.
+
+    ``mode="virtual"`` replays on a :class:`VirtualTimeline`;
+    ``mode="real"`` dispatches into a thread pool at wall-clock arrival
+    times compressed by ``time_scale`` (arrival t lands at t/time_scale
+    wall seconds) — the mode that exercises the ``jax-batched`` engine
+    for real.
+    """
+
+    def __init__(self, session=None, max_concurrency: int = 0,
+                 mode: str = "virtual", time_scale: float = 1.0):
+        if mode not in ("virtual", "real"):
+            raise ValueError(f"unknown mode {mode!r}")
+        # deferred: repro.apps.session imports this module lazily too
+        from ..apps.session import Session
+        self.session = session if session is not None else Session()
+        self.max_concurrency = max_concurrency
+        self.mode = mode
+        self.time_scale = time_scale
+
+    # -- entry point --------------------------------------------------------
+    def run(self, workload: Workload) -> TrafficReport:
+        t0 = time.perf_counter()
+        if self.mode == "real":
+            records = asyncio.run(self._drive_real(workload))
+            virtual_s = max((r.end for r in records), default=0.0)
+        else:
+            if workload.arrival == "closed":
+                records = asyncio.run(self._drive_closed(workload))
+            else:
+                records = asyncio.run(self._drive_open(workload))
+            virtual_s = max((r.end for r in records), default=0.0)
+        return TrafficReport(records, virtual_s,
+                             time.perf_counter() - t0)
+
+    # -- virtual, open loop --------------------------------------------------
+    async def _drive_open(self, workload: Workload) -> List[TrafficRecord]:
+        timeline = VirtualTimeline()
+        sem = (timeline.semaphore(self.max_concurrency)
+               if self.max_concurrency > 0 else None)
+        arrivals = workload.arrivals()
+        for _ in arrivals:
+            timeline.register()
+        tasks = [asyncio.ensure_future(_one(self.session, timeline, sem, a))
+                 for a in arrivals]
+        return list(await asyncio.gather(*tasks))
+
+    # -- virtual, closed loop ------------------------------------------------
+    async def _drive_closed(self, workload: Workload) -> List[TrafficRecord]:
+        """``users`` virtual users: think (exponential), submit, repeat —
+        offered load adapts to observed latency, the classic saturation
+        probe."""
+        timeline = VirtualTimeline()
+        sem = (timeline.semaphore(self.max_concurrency)
+               if self.max_concurrency > 0 else None)
+        # exactly n_requests total: early users absorb the remainder
+        base, extra = divmod(workload.n_requests, workload.users)
+        counts = [base + (1 if u < extra else 0)
+                  for u in range(workload.users)]
+
+        async def user(u: int) -> List[TrafficRecord]:
+            rng = random.Random(f"closed/{workload.seed}/{u}")
+            out = []
+            try:
+                for i in range(counts[u]):
+                    await timeline.sleep(
+                        rng.expovariate(1.0 / workload.think_s))
+                    scenario = workload.draw_scenario(rng)
+                    seed = (workload.seed * 100_000 + u * 1_000 + i)
+                    out.append(await _run_on_timeline(
+                        self.session, timeline, sem, sum(counts[:u]) + i,
+                        scenario.name, scenario.spec(seed)))
+            finally:
+                timeline.unregister()
+            return out
+
+        for _ in range(workload.users):
+            timeline.register()
+        per_user_records = await asyncio.gather(
+            *[asyncio.ensure_future(user(u))
+              for u in range(workload.users)])
+        return [r for recs in per_user_records for r in recs]
+
+    # -- real (wall-clock) mode ----------------------------------------------
+    async def _drive_real(self, workload: Workload) -> List[TrafficRecord]:
+        from concurrent.futures import ThreadPoolExecutor
+        loop = asyncio.get_running_loop()
+        arrivals = workload.arrivals()
+        width = self.max_concurrency or 8
+        t0 = time.perf_counter()
+
+        def pooled(spec):
+            # stamp the start on the WORKER, so time queued for a pool
+            # slot shows up as queue_wait, symmetric with virtual mode
+            return time.perf_counter() - t0, self.session.execute(spec)
+
+        async def one(pool, a: Arrival) -> TrafficRecord:
+            delay = a.t / self.time_scale - (time.perf_counter() - t0)
+            if delay > 0:
+                await asyncio.sleep(delay)
+            t_arrive = time.perf_counter() - t0
+            t_start, result = await loop.run_in_executor(pool, pooled, a.spec)
+            t_end = time.perf_counter() - t0
+            return TrafficRecord(a.index, a.scenario.name, a.spec,
+                                 t_arrive, t_start, t_end, None, result)
+
+        with ThreadPoolExecutor(max_workers=width) as pool:
+            return list(await asyncio.gather(
+                *[one(pool, a) for a in arrivals]))

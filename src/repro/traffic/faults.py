@@ -1,0 +1,191 @@
+"""Fault injection for deployment backends.
+
+A :class:`FaultPlan` wraps ANY registered ``DeploymentBackend`` in a
+transport-level injector that perturbs ``tools/call`` requests with the
+three failure modes that dominate FaaS-hosted MCP serving:
+
+  * **cold starts** — extra virtual latency on a client's first call
+    (scale-to-zero) and, at ``cold_start_rate``, on later calls
+    (instance churn under load);
+  * **transient errors** — at ``transient_rate`` the call fails with a
+    ``transient:``-tagged JSON-RPC error before reaching the server
+    (connection resets, function timeouts, 5xx);
+  * **throttling** — at ``throttle_rate`` the platform rejects with a
+    ``throttled:`` error after ``throttle_delay_s`` of queueing (429s).
+
+The error tags are what :class:`repro.core.policies.RetryPolicy` keys
+on, so an injected fault is retryable while a real tool error (unknown
+tool, bad arguments) is not.  Injection draws come from a per-transport
+RNG seeded by ``(plan seed, world seed, server)`` — deterministic per
+run, independent of the world's own latency stream, so the *simulated
+environment* under faults is identical to the fault-free run (the
+``world_alias`` capability completes that guarantee on the seed side).
+
+Register a faulty twin of any deployment and point ``RunSpec.deployment``
+at it::
+
+    stats = register_fault_plan("faas+faults", "faas",
+                                FaultPlan(transient_rate=0.2))
+    Session(retry=RetryPolicy()).execute(
+        RunSpec("web_search", "quantum", "agentx", "faas+faults"))
+    stats.snapshot()   # {"transient": ..., "throttled": ..., ...}
+
+Shared :class:`FaultStats` count every injection across runs — the
+ground truth the traffic tests reconcile ``ToolRetried`` events against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+from typing import Dict, Optional
+
+from ..core.runtime import stable_fingerprint
+from ..env.world import World
+from ..faas.deployments import (DeploymentBackend, create_deployment,
+                                register_deployment, resolve_deployment)
+from ..mcp.client import Transport
+from ..mcp.protocol import METHOD_CALL_TOOL, McpRequest, McpResponse
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Rates and magnitudes of injected faults (per ``tools/call``)."""
+    transient_rate: float = 0.0
+    transient_delay_s: float = 0.1    # time burned before the failure surfaces
+    throttle_rate: float = 0.0
+    throttle_delay_s: float = 1.0
+    cold_start_rate: float = 0.0
+    cold_start_s: float = 2.5
+    first_call_cold: bool = True      # deterministic scale-to-zero start
+    seed: int = 0
+
+    def fingerprint(self) -> str:
+        return stable_fingerprint(self)
+
+
+class FaultStats:
+    """Thread-safe injection counters shared across runs (and across
+    ``execute_many`` workers / async drivers)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.transient = 0
+        self.throttled = 0
+        self.cold_starts = 0
+        self.by_server: Dict[str, int] = {}
+
+    def record(self, kind: str, server: str) -> None:
+        with self._lock:
+            setattr(self, kind, getattr(self, kind) + 1)
+            if kind != "cold_starts":   # errors only: what retries see
+                self.by_server[server] = self.by_server.get(server, 0) + 1
+
+    @property
+    def errors(self) -> int:
+        return self.transient + self.throttled
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {"transient": self.transient,
+                    "throttled": self.throttled,
+                    "cold_starts": self.cold_starts,
+                    "errors": self.transient + self.throttled,
+                    "by_server": dict(self.by_server)}
+
+    def reset(self) -> None:
+        with self._lock:
+            self.transient = self.throttled = self.cold_starts = 0
+            self.by_server.clear()
+
+
+class FaultInjectingTransport(Transport):
+    """Wraps any transport; perturbs only ``tools/call`` requests (the
+    control plane — initialize, tools/list, session delete — stays
+    clean, mirroring how FaaS failures concentrate on the data path)."""
+
+    def __init__(self, inner: Transport, plan: FaultPlan, stats: FaultStats,
+                 world: World, server: str):
+        self.inner = inner
+        self.plan = plan
+        self.stats = stats
+        self.world = world
+        self.server = server
+        self._rng = random.Random(
+            f"faults/{plan.seed}/{world.seed}/{server}")
+        self._cold = plan.first_call_cold
+
+    def send(self, req: McpRequest) -> McpResponse:
+        if req.method != METHOD_CALL_TOOL:
+            return self.inner.send(req)
+        plan, rng, clock = self.plan, self._rng, self.world.clock
+        if self._cold or rng.random() < plan.cold_start_rate:
+            self._cold = False
+            clock.sleep(plan.cold_start_s)
+            self.stats.record("cold_starts", self.server)
+        if rng.random() < plan.transient_rate:
+            clock.sleep(plan.transient_delay_s)
+            self.stats.record("transient", self.server)
+            return McpResponse(req.id, error={
+                "code": -32050,
+                "message": "transient: injected connection reset "
+                           "before response"})
+        if rng.random() < plan.throttle_rate:
+            clock.sleep(plan.throttle_delay_s)
+            self.stats.record("throttled", self.server)
+            return McpResponse(req.id, error={
+                "code": -32060,
+                "message": "throttled: injected 429 rate limit exceeded"})
+        return self.inner.send(req)
+
+
+class FaultyDeployment(DeploymentBackend):
+    """A registered deployment wrapped in fault injection.  Subclasses
+    are synthesized by :func:`register_fault_plan`; ``inner_name`` /
+    ``plan`` / ``stats`` are class attributes there."""
+
+    inner_name = "local"
+    plan = FaultPlan()
+    stats: FaultStats = FaultStats()
+
+    def __init__(self, capabilities=None):
+        super().__init__(capabilities)
+        self.inner = create_deployment(self.inner_name)
+
+    def provision(self, world: World, server_names):
+        env = self.inner.provision(world, server_names)
+        for name, client in env.clients.items():
+            client.transport = FaultInjectingTransport(
+                client.transport, self.plan, self.stats, world, name)
+        self.env = env
+        return env
+
+    def teardown(self) -> None:
+        self.inner.teardown()
+
+    def cost(self) -> float:
+        return self.inner.cost()
+
+
+def register_fault_plan(name: str, inner: str, plan: FaultPlan,
+                        stats: Optional[FaultStats] = None) -> FaultStats:
+    """Register deployment ``name``: ``inner`` + ``plan`` injection.
+
+    Capabilities are the inner backend's with ``world_alias=inner`` —
+    prompts, tool subsetting, artifact stores AND the world seed all
+    match the wrapped deployment, so a faulty run differs from its
+    clean twin only by the injected perturbations.  Returns the shared
+    :class:`FaultStats` (pass one in to aggregate across plans).
+    Re-registering a name replaces it (same semantics as the underlying
+    registry)."""
+    stats = stats if stats is not None else FaultStats()
+    inner_caps = resolve_deployment(inner).capabilities
+    cls = type(f"Faulty{inner.title().replace('-', '')}Deployment",
+               (FaultyDeployment,),
+               {"name": name, "inner_name": inner, "plan": plan,
+                "stats": stats, "default_capabilities": inner_caps})
+    # tags deliberately NOT inherited: a faulty twin of "local" must not
+    # show up in tag="paper" listings
+    register_deployment(name, tags=("faulty",),
+                        world_alias=inner, rank=90)(cls)
+    return stats

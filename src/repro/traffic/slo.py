@@ -1,0 +1,118 @@
+"""SLO aggregation over traffic records.
+
+Turns a :class:`repro.traffic.driver.TrafficReport` into the summary the
+paper's evaluation axes call for — per scenario: success rate under
+load/faults, client-side latency and TTFT percentiles, queueing delay,
+Eq. 1 LLM cost + Eq. 2 FaaS cost, and attainment against an
+:class:`SLOTarget`.  ``benchmarks/traffic.py`` serializes this into
+``artifacts/BENCH_traffic.json``; see ``docs/TRAFFIC.md`` for how to
+read it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+from .driver import TrafficRecord, TrafficReport
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile on a sorted copy (no numpy dependency —
+    matches ``benchmarks/serving.py``'s convention)."""
+    if not values:
+        return 0.0
+    vals = sorted(values)
+    i = min(len(vals) - 1, int(round(q * (len(vals) - 1))))
+    return vals[i]
+
+
+def _dist(values: List[float]) -> Dict[str, float]:
+    if not values:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0,
+                "max": 0.0}
+    return {"p50": percentile(values, 0.50),
+            "p95": percentile(values, 0.95),
+            "p99": percentile(values, 0.99),
+            "mean": sum(values) / len(values),
+            "max": max(values)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """What "good" means for one scenario class."""
+    latency_s: float = 120.0      # client-side completion deadline
+    ttft_s: float = 30.0          # first LLM completion deadline
+    success_rate: float = 0.90
+
+    def describe(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def _aggregate(records: List[TrafficRecord],
+               slo: SLOTarget) -> Dict[str, object]:
+    n = len(records)
+    ok = [r for r in records if r.result.success]
+    lat = [r.latency for r in records]
+    ttft = [r.ttft for r in records if r.ttft is not None]
+    success_rate = len(ok) / n if n else 0.0
+    return {
+        "n": n,
+        "success_rate": success_rate,
+        "latency_s": _dist(lat),
+        "ttft_s": _dist(ttft),
+        "queue_wait_s": _dist([r.queue_wait for r in records]),
+        "cost_usd": {
+            # paper Eq. 1 (LLM tokens) + Eq. 2 (FaaS GB-s + requests)
+            "llm_mean": (sum(r.result.trace.llm_cost for r in records) / n
+                         if n else 0.0),
+            "faas_mean": (sum(r.result.faas_cost for r in records) / n
+                          if n else 0.0),
+            "total_mean": (sum(r.result.total_cost for r in records) / n
+                           if n else 0.0),
+            "total_sum": sum(r.result.total_cost for r in records),
+        },
+        "tokens": {
+            "input_mean": (sum(r.result.trace.input_tokens
+                               for r in records) / n if n else 0.0),
+            "output_mean": (sum(r.result.trace.output_tokens
+                                for r in records) / n if n else 0.0),
+        },
+        "resilience": {
+            "retries": sum(r.retries for r in records),
+            "hedges": sum(r.hedges for r in records),
+        },
+        "slo": {
+            "target": slo.describe(),
+            "latency_attainment": (sum(v <= slo.latency_s for v in lat) / n
+                                   if n else 0.0),
+            # None (not 0.0) when unmeasured — real mode records no TTFT,
+            # which must not read as "every request missed the deadline"
+            "ttft_attainment": (sum(v <= slo.ttft_s for v in ttft)
+                                / len(ttft) if ttft else None),
+            "meets_success_rate": success_rate >= slo.success_rate,
+        },
+    }
+
+
+def aggregate_report(report: TrafficReport,
+                     slo: Optional[SLOTarget] = None) -> Dict[str, object]:
+    """The full summary: one section per scenario + an overall rollup +
+    the replay economics (virtual seconds simulated per wall second)."""
+    slo = slo if slo is not None else SLOTarget()
+    by_scenario: Dict[str, List[TrafficRecord]] = {}
+    for r in report.records:
+        by_scenario.setdefault(r.scenario, []).append(r)
+    out: Dict[str, object] = {
+        "scenarios": {name: _aggregate(recs, slo)
+                      for name, recs in sorted(by_scenario.items())},
+        "overall": _aggregate(report.records, slo),
+        "replay": {
+            "virtual_s": report.virtual_s,
+            "wall_s": report.wall_s,
+            "speedup": report.replay_speedup,
+            "peak_concurrency": report.peak_concurrency(),
+            "throughput_rps": (len(report.records) / report.virtual_s
+                               if report.virtual_s else 0.0),
+        },
+    }
+    return out

@@ -1,0 +1,104 @@
+"""Wire back-compat for the RunEvent protocol.
+
+Round-trips EVERY registered event type through ``to_wire``/``from_wire``
+(including the traffic-PR ``ToolRetried``/``RunHedged`` and the
+scheduler-v2 extended ``EngineStepped``), and pins the two compat
+directions: OLDER wire payloads missing newer fields deserialize via
+defaults, NEWER wire payloads carrying unknown fields are tolerated.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.events import (_EVENT_TYPES, EngineStepped, LLMCompleted,
+                               OverheadIncurred, PlanProduced,
+                               ReflectionEmitted, RunCompleted, RunHedged,
+                               RunStarted, StageCompleted, StageStarted,
+                               ToolInvoked, ToolRetried, derive_trace,
+                               events_from_wire, events_to_wire, from_wire,
+                               to_wire)
+from repro.core.metrics import FrameworkEvent, LLMEvent, ToolEvent
+
+# one concrete instance of every wire-registered event type
+SAMPLES = [
+    RunStarted(t=0.0, pattern="agentx", task="do the thing"),
+    StageStarted(t=1.0, index=0, name="search"),
+    PlanProduced(t=1.5, index=0, plan={"steps": [{"tool": "google_search"}]}),
+    LLMCompleted(t=2.0, event=LLMEvent("executor", 100, 20, 1.2, 2.0)),
+    ToolInvoked(t=3.0, event=ToolEvent("serper", "google_search", 0.8,
+                                       True, 3.0)),
+    OverheadIncurred(t=3.5, event=FrameworkEvent("plan", 0.18, 3.5)),
+    ReflectionEmitted(t=4.0, index=0, reflection={"success": True}),
+    StageCompleted(t=4.5, index=0, success=True),
+    ToolRetried(t=5.0, server="serper", tool="google_search", attempt=1,
+                error="<tool-error ...: transient: injected>",
+                backoff_s=0.5),
+    RunHedged(t=5.5, server="fetch", tool="fetch", winner="hedge",
+              primary_s=12.0, hedge_s=1.0, saved_s=3.0),
+    RunCompleted(t=6.0, completed=True, data={"summaries": ["ok"]}),
+    EngineStepped(t=7.0, live=3, queued=2, generated=3, prefilled=64,
+                  preempted=1),
+]
+
+
+def test_every_registered_type_has_a_sample():
+    assert {type(s).__name__ for s in SAMPLES} == set(_EVENT_TYPES)
+
+
+@pytest.mark.parametrize("event", SAMPLES,
+                         ids=[type(s).__name__ for s in SAMPLES])
+def test_roundtrip(event):
+    wire = to_wire(event)
+    assert wire["type"] == type(event).__name__
+    back = from_wire(wire)
+    assert back == event
+
+
+def test_stream_roundtrip_and_trace():
+    wire = events_to_wire(SAMPLES)
+    back = events_from_wire(wire)
+    assert back == SAMPLES
+    trace = derive_trace(back)
+    assert trace.llm_events and trace.tool_events and trace.framework_events
+
+
+@pytest.mark.parametrize("event", SAMPLES,
+                         ids=[type(s).__name__ for s in SAMPLES])
+def test_unknown_wire_fields_tolerated(event):
+    """A NEWER peer may attach fields we don't know — they must be
+    dropped, not raised on (forward compat)."""
+    wire = to_wire(event)
+    wire["future_gauge"] = 123
+    wire["another_new_field"] = {"nested": True}
+    if isinstance(wire.get("event"), dict):
+        wire["event"] = dict(wire["event"], future_nested_field=4.2)
+    assert from_wire(wire) == event
+
+
+def test_missing_newer_fields_default():
+    """An OLDER peer's payload (pre-v2 EngineStepped without the
+    admission gauges) still deserializes."""
+    old = {"type": "EngineStepped", "t": 1.0, "live": 2, "queued": 0,
+           "generated": 2}
+    ev = from_wire(old)
+    assert ev.prefilled == 0 and ev.preempted == 0
+
+
+def test_unknown_type_raises():
+    with pytest.raises(KeyError):
+        from_wire({"type": "NotARealEvent", "t": 0.0})
+
+
+def test_new_events_have_json_safe_wire():
+    import json
+    for ev in (SAMPLES[8], SAMPLES[9]):   # ToolRetried, RunHedged
+        assert json.loads(json.dumps(to_wire(ev))) == to_wire(ev)
+
+
+def test_wire_fields_are_dataclass_fields():
+    """to_wire emits exactly the dataclass fields + 'type' — the
+    contract _known_fields filtering rests on."""
+    for ev in SAMPLES:
+        wire = to_wire(ev)
+        names = {f.name for f in dataclasses.fields(ev)}
+        assert set(wire) == names | {"type"}
