@@ -1,0 +1,228 @@
+"""Plan-compilation benchmark: clean vs compiled passes over an
+identical repeat-heavy workload.
+
+Three passes over the SAME seeded arrival stream (agentx-only mix,
+``unique_seeds`` capped so the stream repeats):
+
+  1. **clean** — no plan cache: every run pays the full stage-designer +
+     per-stage planner LLM calls;
+  2. **cold**  — empty ``PlanCache``: first occurrence of each template
+     compiles, repeats already replay planner-free within the pass;
+  3. **warm**  — a fresh ``Session`` sharing the now-warm cache: steady
+     state, where hits replay compiled graphs with ZERO planner calls.
+
+Reported per pass: planner-call count (stage_generator + planner +
+cot_reasoner invocations), Eq. 1 LLM cost + Eq. 2 FaaS cost, latency
+percentiles, and the plan-cache hit/miss/fallback counters.  Two
+invariants are asserted (the CI smoke):
+
+  * every warm-pass run that replayed a graph (no ``PlanCacheMiss`` /
+    ``PlanFallback`` on its stream) made zero planner calls, and the
+    warm hit rate is > 0;
+  * compiled tool-call sequences match fresh ones for deterministic
+    specs: for each scenario, a fresh run of spec X and a compiled
+    replay of the SAME spec X produce identical ``ToolInvoked``
+    (server, tool, args) sequences and identical artifacts.  (Replays
+    of a *different* seed intentionally keep the source run's anomaly
+    structure — only same-spec replay is bit-deterministic.)
+
+Merges a ``plan_cache`` section into ``artifacts/BENCH_traffic.json``
+(uploaded by CI; run ``benchmarks.traffic`` first for the full file).
+
+    PYTHONPATH=src python -m benchmarks.plans --requests 60 --rate 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.apps.session import RunSpec, Session
+from repro.core.events import PlanCacheMiss, PlanFallback, ToolInvoked
+from repro.plans import PlanCache
+from repro.traffic import (Scenario, SLOTarget, TrafficDriver, Workload,
+                           aggregate_report)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+#: planner-side agents — the calls plan compilation eliminates
+PLANNER_AGENTS = frozenset({"stage_generator", "planner", "cot_reasoner"})
+
+#: agentx-only mix (the compilable pattern) across apps + deployments
+PLAN_MIX = (
+    Scenario("web/local/agentx", "web_search", "quantum", "agentx",
+             "local", weight=3.0),
+    Scenario("web2/local/agentx", "web_search", "edge", "agentx",
+             "local", weight=2.0),
+    Scenario("stock/local/agentx", "stock_correlation", "apple", "agentx",
+             "local", weight=2.0),
+    Scenario("stock/faas/agentx", "stock_correlation", "netflix", "agentx",
+             "faas", weight=1.0),
+    Scenario("research/local/agentx", "research_report", "flow", "agentx",
+             "local", weight=1.0),
+    Scenario("web/faas/agentx", "web_search", "materials", "agentx",
+             "faas", weight=1.0),
+)
+
+
+def planner_calls(result) -> int:
+    return sum(1 for c in result.trace.llm_events
+               if c.agent in PLANNER_AGENTS)
+
+
+def tool_seq(result):
+    return [(e.event.server, e.event.tool, e.event.args)
+            for e in result.extras.get("events", ())
+            if isinstance(e, ToolInvoked)]
+
+
+def _pass_summary(report, slo) -> dict:
+    agg = aggregate_report(report, slo)
+    return {
+        "planner_calls": sum(planner_calls(r.result)
+                             for r in report.records),
+        "success_rate": agg["overall"]["success_rate"],
+        "latency_s": agg["overall"]["latency_s"],
+        "cost_usd": agg["overall"]["cost_usd"],
+        "plan_cache": agg.get("plan_cache"),
+    }
+
+
+def _check_warm_replays(report) -> int:
+    """Warm-pass invariant: a run whose stream carries neither
+    PlanCacheMiss nor PlanFallback replayed a compiled graph — it must
+    have made ZERO planner calls.  Returns the replay count."""
+    replays = 0
+    for r in report.records:
+        events = r.result.extras.get("events", ())
+        marked = any(isinstance(e, (PlanCacheMiss, PlanFallback))
+                     for e in events)
+        if marked:
+            continue
+        replays += 1
+        calls = planner_calls(r.result)
+        assert calls == 0, (
+            f"compiled replay of {r.spec} made {calls} planner calls")
+    return replays
+
+
+def _check_parity(seed: int) -> dict:
+    """Same-spec determinism: fresh(X) and compiled-replay(X) produce
+    identical tool-call sequences and artifacts, per scenario."""
+    out = {}
+    for s in PLAN_MIX:
+        spec = RunSpec(s.app, s.instance, s.pattern, s.deployment,
+                       seed=seed + 1)
+        fresh = Session().execute(spec)
+        pc = PlanCache()
+        compiled_session = Session(plan_cache=pc)
+        cold = compiled_session.execute(spec)       # compiles
+        warm = compiled_session.execute(spec)       # replays
+        fell_back = any(isinstance(e, PlanFallback)
+                        for e in warm.extras.get("events", ()))
+        seq_ok = tool_seq(fresh) == tool_seq(warm)
+        art_ok = fresh.artifact == warm.artifact
+        out[s.name] = {"compiled": pc.stats()["entries"] > 0,
+                       "fallback": fell_back,
+                       "seq_parity": seq_ok, "artifact_parity": art_ok,
+                       "planner_calls_fresh": planner_calls(fresh),
+                       "planner_calls_replay": planner_calls(warm)}
+        if cold.success and not fell_back:
+            assert seq_ok and art_ok, (
+                f"{s.name}: compiled replay of {spec} diverged from the "
+                f"fresh run (seq={seq_ok} artifact={art_ok})")
+    return out
+
+
+def measure(n_requests: int = 60, rate: float = 2.0, seed: int = 0,
+            unique_seeds: int = 5) -> dict:
+    slo = SLOTarget(latency_s=180.0, ttft_s=30.0, success_rate=0.85)
+    wl = Workload(scenarios=PLAN_MIX, rate=rate, n_requests=n_requests,
+                  seed=seed, unique_seeds=unique_seeds)
+
+    clean = TrafficDriver(Session()).run(wl)
+
+    pc = PlanCache()
+    cold = TrafficDriver(Session(plan_cache=pc)).run(wl)
+    warm = TrafficDriver(Session(plan_cache=pc)).run(wl)
+
+    replays = _check_warm_replays(warm)
+    assert warm.plan_cache["hit_rate"] > 0, "warm pass produced no hits"
+
+    s_clean = _pass_summary(clean, slo)
+    s_cold = _pass_summary(cold, slo)
+    s_warm = _pass_summary(warm, slo)
+    return {
+        "workload": wl.describe(),
+        "mix": [s.name for s in PLAN_MIX],
+        "clean": s_clean,
+        "cold": s_cold,
+        "warm": s_warm,
+        "warm_replays_checked": replays,
+        "savings": {
+            # what compilation eliminates at steady state, per Eq. 1+2
+            "planner_calls": (s_clean["planner_calls"]
+                              - s_warm["planner_calls"]),
+            "llm_cost_usd": (s_clean["cost_usd"]["llm_mean"]
+                             - s_warm["cost_usd"]["llm_mean"]),
+            "total_cost_usd": (s_clean["cost_usd"]["total_mean"]
+                               - s_warm["cost_usd"]["total_mean"]),
+            "latency_p50_s": (s_clean["latency_s"]["p50"]
+                              - s_warm["latency_s"]["p50"]),
+            "latency_p95_s": (s_clean["latency_s"]["p95"]
+                              - s_warm["latency_s"]["p95"]),
+        },
+        "parity": _check_parity(seed),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--unique-seeds", type=int, default=5,
+                    help="distinct spec seeds in the stream (repeat-mix)")
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_traffic.json"))
+    args = ap.parse_args()
+
+    try:
+        rec = measure(n_requests=args.requests, rate=args.rate,
+                      seed=args.seed, unique_seeds=args.unique_seeds)
+    except AssertionError as e:
+        print(f"PLAN-CACHE INVARIANT VIOLATED: {e}", file=sys.stderr)
+        sys.exit(1)
+
+    # merge into the traffic artifact (benchmarks.traffic owns the rest)
+    existing = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    existing["plan_cache"] = rec
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(existing, f, indent=2)
+
+    warm_pc = rec["warm"]["plan_cache"]
+    print(f"# plan bench: {rec['workload']['n_requests']} requests x3 "
+          f"passes, {args.unique_seeds} unique seeds")
+    print(f"clean.planner_calls,{rec['clean']['planner_calls']},")
+    print(f"cold.planner_calls,{rec['cold']['planner_calls']},")
+    print(f"warm.planner_calls,{rec['warm']['planner_calls']},")
+    print(f"warm.hit_rate,{warm_pc['hit_rate']:.3f},")
+    print(f"warm.fallbacks,{warm_pc['fallbacks']},")
+    print(f"warm.replays_checked,{rec['warm_replays_checked']},")
+    print(f"clean.success_rate,{rec['clean']['success_rate']:.3f},")
+    print(f"warm.success_rate,{rec['warm']['success_rate']:.3f},")
+    print(f"savings.planner_calls,{rec['savings']['planner_calls']},")
+    print(f"savings.llm_cost_usd,{rec['savings']['llm_cost_usd']:.6f},")
+    print(f"savings.latency_p50_s,{rec['savings']['latency_p50_s']:.1f},")
+    parity_ok = all(v["seq_parity"] and v["artifact_parity"]
+                    for v in rec["parity"].values() if not v["fallback"])
+    print(f"parity.same_spec,{parity_ok},")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -146,11 +146,13 @@ class Session:
                  on_event: Optional[Callable] = None,
                  cache: Optional[RunCache] = None,
                  retry: Optional["RetryPolicy"] = None,
-                 hedge: Optional["HedgePolicy"] = None):
+                 hedge: Optional["HedgePolicy"] = None,
+                 plan_cache: Optional["PlanCache"] = None):
         self.on_event = on_event
         self.cache = cache
         self.retry = retry
         self.hedge = hedge
+        self.plan_cache = plan_cache
 
     # ------------------------------------------------------------------
     def execute(self, spec: RunSpec,
@@ -159,8 +161,13 @@ class Session:
         run the pattern, locate + judge the artifact, account costs.
 
         With a warm cache, returns the stored RunResult instead."""
+        # a plan-compilable spec bypasses the run cache: compiled replays
+        # differ in cost/latency accounting (no planner calls), and the
+        # run-cache key does not cover the plan-cache state — the same
+        # exclusion rule as retry/hedge policies
         cacheable = (self.cache is not None
-                     and self.retry is None and self.hedge is None)
+                     and self.retry is None and self.hedge is None
+                     and self._plan_key(spec) is None)
         key = spec_fingerprint(spec) if cacheable else None
         if cacheable:
             hit = self.cache.get(key)
@@ -171,8 +178,36 @@ class Session:
             self.cache.put(key, result)
         return result
 
+    def _plan_key(self, spec: RunSpec) -> Optional[str]:
+        if self.plan_cache is None:
+            return None
+        # deferred import: the plans layer sits above core + apps.apps
+        from ..plans.compile import plan_key
+        return plan_key(spec)
+
     def _execute(self, spec: RunSpec,
                  on_event: Optional[Callable] = None) -> RunResult:
+        """Dispatch one run: replay a compiled plan when the plan cache
+        holds this spec's template key, falling back to a fresh fully
+        planned run (which recompiles) on any :class:`PlanDeviation`."""
+        pk = self._plan_key(spec)
+        if pk is None:
+            return self._execute_once(spec, on_event)
+        graph = self.plan_cache.get(pk)
+        if graph is None:
+            return self._execute_once(spec, on_event, key=pk)
+        from ..plans.execute import PlanDeviation
+        try:
+            return self._execute_once(spec, on_event, graph=graph, key=pk)
+        except PlanDeviation as e:
+            self.plan_cache.record_fallback(pk)
+            return self._execute_once(spec, on_event, key=pk,
+                                      fallback=(e.reason, e.stage))
+
+    def _execute_once(self, spec: RunSpec,
+                      on_event: Optional[Callable] = None,
+                      graph: Any = None, key: Optional[str] = None,
+                      fallback: Optional[Tuple[str, int]] = None) -> RunResult:
         app = APPS[spec.app]
         world = World(seed=stable_world_seed(spec))
         backend = create_deployment(spec.deployment)
@@ -188,16 +223,36 @@ class Session:
                if spec.backend_factory
                else get_llm_backend(spec.llm).make(world, policy, trace,
                                                    priority=spec.priority))
-        runner = create_runner(spec.pattern, llm, env.clients, world, trace,
+        pattern = spec.pattern if graph is None else "agentx-compiled"
+        runner = create_runner(pattern, llm, env.clients, world, trace,
                                deployment=spec.deployment,
                                remote=backend.capabilities.remote,
                                on_event=self._combined_observer(on_event),
                                retry=self.retry, hedge=self.hedge)
+        if graph is not None:
+            from ..plans.execute import PlanDeviation
+            runner.bind_graph(graph)
+            deviation: Tuple = (PlanDeviation,)
+        else:
+            deviation = ()
+        if key is not None and graph is None:
+            from ..core.events import PlanCacheMiss, PlanFallback
+            if fallback is not None:
+                runner.emit(PlanFallback(t=world.clock.now(), key=key,
+                                         reason=fallback[0],
+                                         stage=fallback[1]))
+            else:
+                runner.emit(PlanCacheMiss(t=world.clock.now(), key=key))
 
         t0 = world.clock.now()
         failure = ""
         try:
             outcome = runner.run(task)
+        except deviation:
+            # compiled replay diverged: release the environment and let
+            # _execute re-run the spec with full planning
+            backend.teardown()
+            raise
         except Exception as e:  # pattern-level crash counts as failed run
             outcome = RunOutcome(completed=False)
             failure = f"{type(e).__name__}: {e}"
@@ -212,6 +267,21 @@ class Session:
             if score.attributes["Data Accuracy"] < 20.0:
                 success = False
                 failure = failure or "plot used dummy/fabricated data"
+        if key is not None and graph is None and success:
+            # fresh run under an active plan cache: lift the trace into a
+            # graph so the next same-template spec replays planner-free
+            from ..core.events import PlanCompiled
+            from ..plans.compile import compile_trace
+            g = compile_trace(runner.events, app=spec.app,
+                              pattern=spec.pattern, instance=spec.instance,
+                              seed=spec.seed, deployment=spec.deployment)
+            if g is not None:
+                self.plan_cache.put(key, g)
+                runner.emit(PlanCompiled(t=world.clock.now(), key=key,
+                                         template=g.template,
+                                         stages=len(g.stages),
+                                         nodes=len(g.nodes),
+                                         dyn_nodes=g.dyn_nodes))
         backend.teardown()
 
         return RunResult(app=spec.app, instance=spec.instance,

@@ -116,6 +116,40 @@ class RunHedged(RunEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class PlanCompiled(RunEvent):
+    """A successful run's trace was compiled into a :class:`PlanGraph`
+    (:mod:`repro.plans.compile`) and stored in the session's plan cache
+    under ``key`` (the app/task-template fingerprint).  ``stages`` /
+    ``nodes`` describe the graph; ``dyn_nodes`` counts the nodes whose
+    arguments could not be bound statically and still need an executor
+    LLM call on replay."""
+    key: str
+    template: str
+    stages: int
+    nodes: int
+    dyn_nodes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCacheMiss(RunEvent):
+    """The session looked for a compiled plan under ``key`` and found
+    none — this run executes with full AgentX planning (and compiles a
+    graph on success)."""
+    key: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanFallback(RunEvent):
+    """A compiled-plan replay deviated (node failure, tool mismatch,
+    template mismatch — ``reason``) at stage ``stage`` and the session
+    fell back to full AgentX re-planning.  Emitted on the FALLBACK run's
+    stream, before its ``RunStarted``."""
+    key: str
+    reason: str
+    stage: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineStepped(RunEvent):
     """Serving-side event: the continuous-batching scheduler advanced all
     live decode slots by one step.  Emitted by the *engine*, not a run —
@@ -145,7 +179,7 @@ _EVENT_TYPES: Dict[str, type] = {
     for cls in (RunStarted, StageStarted, PlanProduced, LLMCompleted,
                 ToolInvoked, OverheadIncurred, ReflectionEmitted,
                 StageCompleted, RunCompleted, ToolRetried, RunHedged,
-                EngineStepped)
+                PlanCompiled, PlanCacheMiss, PlanFallback, EngineStepped)
 }
 
 # events whose ``event`` field is a nested metrics dataclass

@@ -37,6 +37,11 @@ class ToolEvent:
     latency: float
     ok: bool
     t: float
+    # call arguments and (truncated) result — optional so pre-plan wire
+    # payloads still deserialize; populated by AgentRuntime.invoke so a
+    # trace is self-contained for plan compilation (repro.plans)
+    args: Optional[Dict[str, Any]] = None
+    result: Optional[str] = None
 
 
 @dataclasses.dataclass

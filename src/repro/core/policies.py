@@ -103,6 +103,7 @@ class BasePolicy:
         self.task = task
         self.deployment = deployment
         self.faas = _is_remote(deployment)
+        self.seed = seed
         self.rng = random.Random(seed)
         self._anom: Dict[str, bool] = {}
 
@@ -113,7 +114,13 @@ class BasePolicy:
             # context-aware and logical": anomaly rates drop sharply
             p *= 0.2
         if key not in self._anom:
-            self._anom[key] = self.rng.random() < p
+            # each key draws from its own (seed, key)-derived stream, so a
+            # draw does not depend on how many OTHER chance() calls came
+            # before it — a compiled-plan replay (repro.plans) skips the
+            # stage/planner inferences yet must see identical anomalies
+            draw = random.Random(
+                f"anomaly/{self.app}/{self.seed}/{key}").random()
+            self._anom[key] = draw < p
         return self._anom[key]
 
     # -- storage targets ----------------------------------------------------

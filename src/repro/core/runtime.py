@@ -68,6 +68,11 @@ from .policies import HedgePolicy, RetryPolicy
 # ---------------------------------------------------------------------------
 # configuration + outcome contract
 
+# ToolEvent.result truncation: keeps event streams (and the disk caches
+# built on them) bounded while leaving enough text for the plan compiler's
+# data-flow extractors (URLs, arxiv ids, saved paths all appear early)
+TOOL_RESULT_WIRE_LIMIT = 6000
+
 
 def stable_fingerprint(config) -> str:
     """Stable digest of a config dataclass (sorted-JSON SHA-256, 16 hex
@@ -241,7 +246,9 @@ class AgentRuntime:
         ok = not result.startswith("<tool-error")
         self.emit(ToolInvoked(
             t=self.now(),
-            event=ToolEvent(server, call.tool, sw.elapsed, ok, self.now())))
+            event=ToolEvent(server, call.tool, sw.elapsed, ok, self.now(),
+                            args=dict(call.args),
+                            result=result[:TOOL_RESULT_WIRE_LIMIT])))
         return result
 
     def _dispatch(self, client: McpClient, server: str, call: ToolCall) -> str:
@@ -364,6 +371,7 @@ def _ensure_builtins() -> None:
         if _BUILTINS_LOADED:
             return
         from . import react, agentx, magentic  # noqa: F401
+        from ..plans import execute  # noqa: F401  (agentx-compiled)
         _BUILTINS_LOADED = True
 
 

@@ -13,6 +13,13 @@ SLO telemetry.
     # real wall-clock mode against the batched JAX engine (CPU):
     PYTHONPATH=src python -m repro.launch.traffic --real \
         --llm jax-batched --requests 8 --rate 1 --time-scale 20
+
+    # repeat-heavy agentx mix with the plan cache (prints hit/miss/
+    # fallback telemetry; repeats replay compiled graphs planner-free):
+    PYTHONPATH=src python -m repro.launch.traffic --plan-cache \
+        --unique-seeds 4 --requests 60 \
+        --scenario web_search:quantum:agentx \
+        --scenario stock_correlation:netflix:agentx:faas
 """
 from __future__ import annotations
 
@@ -66,6 +73,13 @@ def main() -> None:
     ap.add_argument("--concurrency", type=int, default=0,
                     help="in-flight run cap (0 = unbounded)")
     ap.add_argument("--llm", default="oracle")
+    # plan compilation (repro.plans)
+    ap.add_argument("--plan-cache", action="store_true",
+                    help="compile successful agentx runs into plan graphs "
+                         "and replay repeats planner-free")
+    ap.add_argument("--unique-seeds", type=int, default=0,
+                    help="cap distinct spec seeds (repeat-heavy mix; "
+                         "0 = every request unique)")
     # fault injection + resilience
     ap.add_argument("--transient-rate", type=float, default=0.0)
     ap.add_argument("--throttle-rate", type=float, default=0.0)
@@ -101,14 +115,20 @@ def main() -> None:
             faulty.append(dataclasses.replace(s, deployment=name))
         mix = tuple(faulty)
 
+    plan_cache = None
+    if args.plan_cache:
+        from ..plans import PlanCache
+        plan_cache = PlanCache()
     session = Session(
         retry=RetryPolicy(max_attempts=8, backoff_s=0.25)
         if args.retry else None,
         hedge=HedgePolicy(hedge_after_s=args.hedge_after)
-        if args.hedge_after > 0 else None)
+        if args.hedge_after > 0 else None,
+        plan_cache=plan_cache)
     wl = Workload(scenarios=mix, arrival=args.arrival, rate=args.rate,
                   n_requests=args.requests, seed=args.seed,
-                  users=args.users, think_s=args.think)
+                  users=args.users, think_s=args.think,
+                  unique_seeds=args.unique_seeds)
     driver = TrafficDriver(session, max_concurrency=args.concurrency,
                            mode="real" if args.real else "virtual",
                            time_scale=args.time_scale)
@@ -125,6 +145,11 @@ def main() -> None:
           f"{rp['throughput_rps']:.2f} runs/s")
     if stats is not None:
         print(f"# injected faults: {stats.snapshot()}")
+    if report.plan_cache is not None:
+        p = report.plan_cache
+        print(f"# plan cache: {p['hits']} hits / {p['misses']} misses / "
+              f"{p['fallbacks']} fallbacks | hit rate {p['hit_rate']:.0%} | "
+              f"{p['entries']} compiled graphs")
     hdr = (f"{'scenario':28s} {'n':>4s} {'ok%':>6s} {'p50':>7s} {'p95':>7s} "
            f"{'ttft95':>7s} {'qwait95':>8s} {'$/run':>9s} {'retry':>5s}")
     print(hdr)

@@ -28,6 +28,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
@@ -35,9 +36,14 @@ from .moe import router
 
 
 def _local_moe(w_router, w_gate, w_up, w_down, shared, x, *,
-               cfg: ModelConfig, model_axis: str, data_axis):
+               cfg: ModelConfig, capacity: int, model_axis: str, data_axis):
     """Per-shard body. x: (B_l, S, d) local tokens (replicated over model);
-    w_gate/w_up: (E_l, d, ffe); w_down: (E_l, ffe, d)."""
+    w_gate/w_up: (E_l, d, ffe); w_down: (E_l, ffe, d).
+
+    ``capacity`` is computed by the caller from the GLOBAL token count with
+    the exact formula of the gather path — deriving it from the local T
+    here would shrink the per-expert buffers by the data-shard count and
+    drop tokens the gather path keeps."""
     moe = cfg.moe
     b, s, d = x.shape
     xt = x.reshape(b * s, d)
@@ -47,7 +53,6 @@ def _local_moe(w_router, w_gate, w_up, w_down, shared, x, *,
     m_idx = jax.lax.axis_index(model_axis)
 
     gate, idx, _ = router({"w_router": w_router}, xt, moe)
-    capacity = min(max(4, int(math.ceil(T * k / E * moe.capacity_factor))), T)
 
     N = T * k
     flat_e = idx.reshape(N)
@@ -95,11 +100,21 @@ def moe_ffn_shardmap(params: dict, x: jax.Array, cfg: ModelConfig, mesh,
                      ) -> Tuple[jax.Array, jax.Array]:
     """Drop-in for moe_ffn under an active mesh (inference)."""
     moe = cfg.moe
-    body = functools.partial(_local_moe, cfg=cfg, model_axis=model_axis,
-                             data_axis=data_axes)
+    # Capacity from the GLOBAL (pre-shard) token count, same formula as
+    # moe_ffn: max(4, ceil(T*k/E*cf)) clamped to T.  Each shard then ranks
+    # its local assignments against the global per-expert budget, so in the
+    # no-drop regime (capacity >= demand) both dispatch paths process the
+    # identical assignment set; under overflow the local ranking can only
+    # over-admit relative to global ranking, never drop extra tokens.
+    b, s, _ = x.shape
+    T = b * s
+    E, k = moe.n_experts, moe.top_k
+    capacity = min(max(4, int(math.ceil(T * k / E * moe.capacity_factor))), T)
+    body = functools.partial(_local_moe, cfg=cfg, capacity=capacity,
+                             model_axis=model_axis, data_axis=data_axes)
     shared_spec = jax.tree_util.tree_map(lambda _: P(None, None),
                                          params.get("shared", {}))
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None),                       # router replicated
                   P(model_axis, None, None),           # w_gate
@@ -108,7 +123,7 @@ def moe_ffn_shardmap(params: dict, x: jax.Array, cfg: ModelConfig, mesh,
                   shared_spec,
                   P(data_axes, None, None)),           # x
         out_specs=P(data_axes, None, None),
-        check_vma=False)
+        check_rep=False)
     y = fn(params["w_router"], params["experts"]["w_gate"],
            params["experts"]["w_up"], params["experts"]["w_down"],
            params.get("shared", {}), x)

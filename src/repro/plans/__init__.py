@@ -1,0 +1,30 @@
+"""Plan compilation: trace -> DAG workflow graphs + template-keyed cache.
+
+The layer between the pattern registry and the run cache (ROADMAP item
+"plan compilation").  A successful AgentX run's event trace is lifted
+into a :class:`PlanGraph` — a typed DAG of tool-call nodes with
+data-flow edges — keyed by an (app, task-template) fingerprint that
+normalizes spec-specific values (entity names, seeds) out of the task
+text.  Repeat-shaped traffic then replays the graph through the
+``agentx-compiled`` pattern with ZERO stage-designer/planner LLM calls,
+falling back to full re-planning on any deviation.
+
+    from repro.apps.session import RunSpec, Session
+    from repro.plans import PlanCache
+
+    session = Session(plan_cache=PlanCache())
+    session.execute(spec)                # miss: plans fresh, compiles
+    session.execute(spec.with_seed(1))   # hit: replays the graph, 0 planner calls
+"""
+from .cache import PlanCache
+from .compile import (PlanGraph, PlanNode, PlanSlot, PlanStage, compile_result,
+                      compile_trace, extract_params, graph_from_wire,
+                      graph_to_wire, normalize_task, plan_key)
+from .execute import CompiledAgentXRunner, PlanDeviation
+
+__all__ = [
+    "PlanCache", "PlanGraph", "PlanNode", "PlanSlot", "PlanStage",
+    "CompiledAgentXRunner", "PlanDeviation", "compile_result",
+    "compile_trace", "extract_params", "graph_from_wire", "graph_to_wire",
+    "normalize_task", "plan_key",
+]

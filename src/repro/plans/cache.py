@@ -1,0 +1,100 @@
+"""Template-keyed plan cache: in-memory store with optional disk
+persistence, following the ``RunCache`` conventions (thread lock, atomic
+``os.replace`` writes, corrupt-file skip on load, hit/miss counters).
+
+Keys are :func:`repro.plans.compile.plan_key` fingerprints — one entry
+per (app template, pattern config, deployment capabilities) combination,
+shared across instances and seeds.  ``put`` overwrites: when a replay
+deviates and the fallback run recompiles, the fresh graph replaces the
+stale one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional
+
+from .compile import PlanGraph, graph_from_wire, graph_to_wire
+
+
+class PlanCache:
+    """In-memory + optionally disk-persistent store of compiled plans."""
+
+    def __init__(self, cache_dir: Optional[str] = None):
+        self.cache_dir = cache_dir
+        self._lock = threading.Lock()
+        self._store: Dict[str, PlanGraph] = {}
+        self.hits = 0
+        self.misses = 0
+        self.fallbacks = 0
+        if cache_dir:
+            os.makedirs(cache_dir, exist_ok=True)
+            self._load()
+
+    # ------------------------------------------------------------------
+    def get(self, key: str) -> Optional[PlanGraph]:
+        with self._lock:
+            graph = self._store.get(key)
+            if graph is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return graph
+
+    def put(self, key: str, graph: PlanGraph) -> None:
+        with self._lock:
+            self._store[key] = graph
+        if self.cache_dir:
+            self._persist(key, graph)
+
+    def record_fallback(self, key: str) -> None:
+        with self._lock:
+            self.fallbacks += 1
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            lookups = self.hits + self.misses
+            return {
+                "entries": len(self._store),
+                "hits": self.hits,
+                "misses": self.misses,
+                "fallbacks": self.fallbacks,
+                "hit_rate": (self.hits / lookups) if lookups else 0.0,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self.hits = self.misses = self.fallbacks = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._store
+
+    # ------------------------------------------------------------------
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, f"plan_{key}.json")
+
+    def _persist(self, key: str, graph: PlanGraph) -> None:
+        path = self._path(key)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"key": key, "graph": graph_to_wire(graph)}, fh)
+        os.replace(tmp, path)
+
+    def _load(self) -> None:
+        for name in sorted(os.listdir(self.cache_dir)):
+            if not (name.startswith("plan_") and name.endswith(".json")):
+                continue
+            try:
+                with open(os.path.join(self.cache_dir, name)) as fh:
+                    payload = json.load(fh)
+                self._store[payload["key"]] = graph_from_wire(payload["graph"])
+            except (OSError, ValueError, KeyError, TypeError):
+                continue  # corrupt or version-mismatched entry: recompile

@@ -1,0 +1,424 @@
+"""Trace -> PlanGraph compiler.
+
+Lifts a successful run's :class:`RunEvent` trace into a typed DAG of
+tool-call nodes.  Each node's arguments are split into *slots*:
+
+  - ``param``   — the whole value equals one of the task's extracted
+                  parameters (entity name, query, filename): spec-bound,
+                  re-bound per replay from the replay task's text;
+  - ``extract`` — the value is recoverable from a PRIOR node's result by
+                  a deterministic extractor (URL list, arXiv id, saved
+                  path): a data-flow edge of the DAG, re-extracted from
+                  the LIVE result at replay time;
+  - ``lit``     — template-bound literal (tool constants, fixed paths);
+                  parameter substrings inside it are parameterized
+                  (``s3://.../<<filename>>``) so the literal survives a
+                  change of instance;
+  - ``dyn``     — the value overlaps prior tool results in a way no
+                  extractor explains (generated summaries, plotting
+                  code): the node keeps its executor LLM call on replay.
+
+The graph is keyed by :func:`plan_key` — a fingerprint over the app, the
+pattern (+ its ``PatternConfig`` fingerprint), the deployment capability
+fingerprint and the *normalized* task template with the spec-specific
+variable text removed (:func:`normalize_task`).  Two specs that differ
+only in seed or entity names share a key; different task structure
+cannot collide (the template text itself is hashed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..apps.apps import APPS
+from ..core.events import (PlanProduced, RunCompleted, RunEvent, RunStarted,
+                           StageCompleted, StageStarted, ToolInvoked)
+
+GRAPH_VERSION = 1
+
+# the s3 hint AppSpec.prompt appends under remote deployments
+S3_HINT = (" ...you can read/write from s3 from this location: "
+           "'s3://dummy-bucket/agent/'")
+
+# parameter placeholder delimiters — visually distinct, never produced by
+# the simulated tools, and JSON-safe on the wire
+_OPEN, _CLOSE = "⟪", "⟫"
+
+
+class TemplateMismatch(ValueError):
+    """The task text does not match the app's template (stale graph,
+    hand-built task)."""
+
+
+# ---------------------------------------------------------------------------
+# task-template normalization + parameter extraction
+
+
+def normalize_task(app: str, task: str) -> Tuple[str, str, bool]:
+    """Normalize a task back to its template: returns
+    ``(template_text, var, remote)`` where ``template_text`` is the app
+    template with the instance variable UNsubstituted (plus a remote
+    marker when the s3 hint was appended).  Raises
+    :class:`TemplateMismatch` when the task is not an instantiation of
+    the app's template."""
+    spec = APPS.get(app)
+    if spec is None:
+        raise TemplateMismatch(f"unknown app {app!r}")
+    remote = task.endswith(S3_HINT)
+    body = task[: -len(S3_HINT)] if remote else task
+    pattern = re.escape(spec.template).replace(re.escape("{var}"), "(.+)")
+    m = re.fullmatch(pattern, body, flags=re.DOTALL)
+    if m is None:
+        raise TemplateMismatch(
+            f"task does not match the {app!r} template: {task[:120]!r}")
+    template = spec.template + (" [remote-storage]" if remote else "")
+    return template, m.group(1), remote
+
+
+def extract_params(app: str, task: str) -> Dict[str, str]:
+    """Spec-bound parameters of a task, mirroring the app policies'
+    parsers (:mod:`repro.core.policies`) so slot binding agrees with
+    what the oracle decisions contain."""
+    _, var, _ = normalize_task(app, task)
+    if app == "web_search":
+        return {"query": var.strip("'\"")}
+    if app == "stock_correlation":
+        m = re.match(r"(.+?),? and save it as (\S+?\.png)", var)
+        if m is None:
+            return {"var": var}
+        companies = [c.strip() for c in re.split(r",| and ", m.group(1))
+                     if c.strip()]
+        params = {f"c{i}": c for i, c in enumerate(companies)}
+        params["filename"] = m.group(2)
+        return params
+    if app == "research_report":
+        return {"title": var.strip(" '\"")}
+    if app == "multi_topic_digest":
+        topics = [t.strip(" '\"") for t in var.split(";") if t.strip()]
+        return {f"t{i}": t for i, t in enumerate(topics)}
+    return {"var": var}
+
+
+def parameterize(text: str, params: Dict[str, str]) -> str:
+    """Replace every parameter value occurring in ``text`` with its
+    placeholder, longest value first (so ``AppleAlphabetMicrosoft.png``
+    is consumed by ``filename`` before ``Microsoft`` matches)."""
+    for name, value in sorted(params.items(), key=lambda kv: -len(kv[1])):
+        if value:
+            text = text.replace(value, f"{_OPEN}{name}{_CLOSE}")
+    return text
+
+
+def materialize(text: str, params: Dict[str, str]) -> str:
+    """Inverse of :func:`parameterize` under the replay spec's params."""
+    for name, value in params.items():
+        text = text.replace(f"{_OPEN}{name}{_CLOSE}", value)
+    return text
+
+
+# ---------------------------------------------------------------------------
+# data-flow extractors (shared by compile- and replay-time binding)
+
+
+def _x_urls(text: str) -> List[str]:
+    return re.findall(r"https?://\S+?(?=[\s,\"')\]]|$)", text)
+
+
+def _x_arxiv_ids(text: str) -> List[str]:
+    return re.findall(r"\d{4}\.\d{4,5}", text)
+
+
+def _x_saved_paths(text: str) -> List[str]:
+    return re.findall(r'"saved_to":\s*"([^"]+)"', text)
+
+
+EXTRACTORS = {
+    "url": _x_urls,
+    "arxiv_id": _x_arxiv_ids,
+    "saved_path": _x_saved_paths,
+}
+
+
+# ---------------------------------------------------------------------------
+# graph types
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSlot:
+    """One argument slot of a node; ``kind`` in lit|param|extract|dyn."""
+    kind: str
+    value: Any = None          # lit: the (parameterized) literal
+    param: str = ""            # param: parameter name
+    what: str = ""             # extract: extractor kind
+    src: int = -1              # extract: source node id
+    index: int = 0             # extract: item index in the extraction
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanNode:
+    id: int
+    stage: int
+    server: str
+    tool: str
+    slots: Dict[str, PlanSlot]
+    desc: str = ""             # parameterized step description
+    ok: bool = True            # the source invocation's ok flag
+
+    @property
+    def dyn(self) -> bool:
+        return any(s.kind == "dyn" for s in self.slots.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStage:
+    index: int
+    name: str                  # parameterized stage name
+    tools_needed: Tuple[str, ...]
+    nodes: Tuple[int, ...]     # node ids, execution order
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGraph:
+    app: str
+    pattern: str
+    template: str              # normalized task template (incl. remote marker)
+    params: Tuple[str, ...]    # parameter-name schema
+    stages: Tuple[PlanStage, ...]
+    nodes: Tuple[PlanNode, ...]
+    source: Dict[str, Any]     # provenance: instance / seed / deployment
+    version: int = GRAPH_VERSION
+
+    def node(self, node_id: int) -> PlanNode:
+        return self.nodes[node_id]
+
+    def edges(self) -> List[Tuple[int, int]]:
+        """Data-flow edges (src -> dst) implied by extract slots."""
+        out = []
+        for n in self.nodes:
+            for s in n.slots.values():
+                if s.kind == "extract":
+                    out.append((s.src, n.id))
+        return sorted(set(out))
+
+    @property
+    def dyn_nodes(self) -> int:
+        return sum(1 for n in self.nodes if n.dyn)
+
+
+# ---------------------------------------------------------------------------
+# wire serialization (RunCache conventions: JSON-safe dicts, versioned)
+
+
+def graph_to_wire(graph: PlanGraph) -> Dict[str, Any]:
+    d = dataclasses.asdict(graph)
+    return json.loads(json.dumps(d))   # tuples -> lists, JSON-safe
+
+
+def graph_from_wire(d: Dict[str, Any]) -> PlanGraph:
+    if d.get("version") != GRAPH_VERSION:
+        raise ValueError(f"plan-graph version {d.get('version')!r} != "
+                         f"{GRAPH_VERSION}")
+    nodes = tuple(
+        PlanNode(id=n["id"], stage=n["stage"], server=n["server"],
+                 tool=n["tool"], desc=n.get("desc", ""),
+                 ok=n.get("ok", True),
+                 slots={k: PlanSlot(**s) for k, s in n["slots"].items()})
+        for n in d["nodes"])
+    stages = tuple(
+        PlanStage(index=s["index"], name=s["name"],
+                  tools_needed=tuple(s["tools_needed"]),
+                  nodes=tuple(s["nodes"]))
+        for s in d["stages"])
+    return PlanGraph(app=d["app"], pattern=d["pattern"],
+                     template=d["template"], params=tuple(d["params"]),
+                     stages=stages, nodes=nodes, source=d.get("source", {}),
+                     version=d["version"])
+
+
+# ---------------------------------------------------------------------------
+# plan key (template fingerprint chain)
+
+
+def _compilable_runner(runner_cls: type) -> bool:
+    from ..core.agentx import AgentXRunner
+    return (isinstance(runner_cls, type)
+            and issubclass(runner_cls, AgentXRunner)
+            and not getattr(runner_cls, "is_compiled", False))
+
+
+def plan_key(spec) -> Optional[str]:
+    """Template fingerprint of a spec, or ``None`` when the spec is not
+    plan-compilable (non-AgentX pattern, custom backend factory, task
+    outside the app template).
+
+    The chain mirrors ``spec_fingerprint`` minus everything spec-bound:
+    app + normalized template (+ remote marker) + pattern name + pattern
+    config fingerprint + deployment capability fingerprint.  ``seed``,
+    ``instance``, ``llm`` and ``priority`` are deliberately absent —
+    that is the generalization from *identical* specs (run cache) to
+    *similar* ones (plan cache)."""
+    if spec.backend_factory is not None:
+        return None
+    from ..core.runtime import resolve_pattern
+    from ..faas.deployments import resolve_deployment
+    try:
+        rp = resolve_pattern(spec.pattern)
+        caps = resolve_deployment(spec.deployment).capabilities
+    except KeyError:
+        return None
+    if not _compilable_runner(rp.runner_cls):
+        return None
+    try:
+        task = APPS[spec.app].prompt(spec.instance, caps.remote)
+        template, _, remote = normalize_task(spec.app, task)
+    except (KeyError, TemplateMismatch):
+        return None
+    payload = json.dumps({
+        "app": spec.app,
+        "template": template,
+        "remote": remote,
+        "pattern": spec.pattern,
+        "pattern_config": rp.config.fingerprint(),
+        "deployment_caps": caps.fingerprint(),
+        "graph_version": GRAPH_VERSION,
+    }, sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# slot classification
+
+
+_MIN_OVERLAP_LEN = 24    # shorter strings are treated as constants
+_WINDOW = 40
+_MAX_WINDOWS = 64
+
+
+def _overlaps_prior(value: str, results: List[str]) -> bool:
+    """Does ``value`` look derived from prior tool output?  True when any
+    ~window of it appears verbatim in a prior result — the signature of
+    generated content (summaries, code embedding fetched data)."""
+    if len(value) < _MIN_OVERLAP_LEN:
+        return False
+    if len(value) <= _WINDOW:
+        windows = [value]
+    else:
+        step = _WINDOW // 2
+        starts = range(0, len(value) - _WINDOW + 1, step)
+        windows = [value[i:i + _WINDOW] for i in list(starts)[:_MAX_WINDOWS]]
+    for r in results:
+        if any(w in r for w in windows):
+            return True
+    return False
+
+
+def _classify(value: Any, params: Dict[str, str],
+              prior: List[Tuple[PlanNode, str]]) -> PlanSlot:
+    """Classify one argument value against the params and the results of
+    all prior nodes (``prior`` = [(node, result_text), ...])."""
+    if not isinstance(value, str):
+        return PlanSlot("lit", value=value)
+    for name, pv in params.items():
+        if value == pv:
+            return PlanSlot("param", param=name)
+    for node, result in reversed(prior):
+        for what, fn in EXTRACTORS.items():
+            items = fn(result)
+            if value in items:
+                return PlanSlot("extract", what=what, src=node.id,
+                                index=items.index(value))
+    if _overlaps_prior(value, [r for _, r in prior]):
+        return PlanSlot("dyn")
+    return PlanSlot("lit", value=parameterize(value, params))
+
+
+# ---------------------------------------------------------------------------
+# the compiler
+
+
+def compile_trace(events: List[RunEvent], *, app: str, pattern: str,
+                  instance: str = "", seed: int = 0,
+                  deployment: str = "") -> Optional[PlanGraph]:
+    """Compile a successful run's event stream into a :class:`PlanGraph`.
+
+    Returns ``None`` when the trace is not compilable: the run did not
+    complete, has no stage structure (non-AgentX trace), the task does
+    not match the app template, or tool events predate the ``args`` /
+    ``result`` fields (a pre-plan disk cache)."""
+    task = next((e.task for e in events if isinstance(e, RunStarted)), None)
+    completed = any(e.completed for e in events if isinstance(e, RunCompleted))
+    if task is None or not completed:
+        return None
+    try:
+        template, _, _ = normalize_task(app, task)
+    except TemplateMismatch:
+        return None
+    params = extract_params(app, task)
+
+    stages: List[Dict[str, Any]] = []
+    nodes: List[PlanNode] = []
+    prior: List[Tuple[PlanNode, str]] = []
+    cur: Optional[Dict[str, Any]] = None
+    for ev in events:
+        if isinstance(ev, StageStarted):
+            cur = {"index": ev.index, "name": ev.name, "plan": None,
+                   "nodes": []}
+            stages.append(cur)
+        elif isinstance(ev, PlanProduced) and cur is not None:
+            cur["plan"] = ev.plan
+        elif isinstance(ev, ToolInvoked):
+            te = ev.event
+            if cur is None or te.args is None or te.result is None:
+                return None   # stage-less or pre-plan trace
+            slots = {k: _classify(v, params, prior)
+                     for k, v in te.args.items()}
+            step = _step_for(cur, len(cur["nodes"]), te.tool)
+            node = PlanNode(id=len(nodes), stage=cur["index"],
+                            server=te.server, tool=te.tool, slots=slots,
+                            desc=parameterize(step, params), ok=te.ok)
+            nodes.append(node)
+            cur["nodes"].append(node.id)
+            prior.append((node, te.result))
+        elif isinstance(ev, StageCompleted):
+            if not ev.success:
+                return None
+            cur = None
+    if not stages:
+        return None
+
+    plan_stages = tuple(
+        PlanStage(index=s["index"], name=parameterize(s["name"], params),
+                  tools_needed=tuple((s["plan"] or {}).get(
+                      "tools_needed", sorted({nodes[i].tool
+                                              for i in s["nodes"]}))),
+                  nodes=tuple(s["nodes"]))
+        for s in stages)
+    return PlanGraph(app=app, pattern=pattern, template=template,
+                     params=tuple(params), stages=plan_stages,
+                     nodes=tuple(nodes),
+                     source={"instance": instance, "seed": seed,
+                             "deployment": deployment})
+
+
+def _step_for(stage: Dict[str, Any], pos: int, tool: str) -> str:
+    """Description for the ``pos``-th invocation of a stage, from the
+    source plan when the step aligns, else synthesized."""
+    steps = (stage["plan"] or {}).get("steps", [])
+    if pos < len(steps) and steps[pos].get("tool") in ("", tool):
+        return str(steps[pos].get("description", f"call {tool}"))
+    return f"call {tool}"
+
+
+def compile_result(result) -> Optional[PlanGraph]:
+    """Convenience: compile a completed :class:`RunResult` (uses the event
+    stream in ``extras`` and the spec identity)."""
+    spec = result.extras.get("spec")
+    events = result.extras.get("events", [])
+    if spec is None or not events or not result.success:
+        return None
+    return compile_trace(events, app=spec.app, pattern=spec.pattern,
+                         instance=spec.instance, seed=spec.seed,
+                         deployment=spec.deployment)

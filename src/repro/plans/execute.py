@@ -1,0 +1,214 @@
+"""Compiled-plan executor: walks a :class:`PlanGraph` with zero
+stage-designer/planner LLM calls.
+
+``CompiledAgentXRunner`` registers as the ``agentx-compiled`` pattern and
+subclasses :class:`repro.core.agentx.AgentXRunner`, so every tool call
+goes through the SAME :meth:`AgentRuntime.invoke` path — retry/hedge
+policies, fault injection, deployment transports and ``RunEvent``
+emission apply unchanged.  Per stage it emits the familiar
+``StageStarted`` / ``PlanProduced`` / ``ReflectionEmitted`` /
+``StageCompleted`` events, re-binding the graph's argument slots against
+the replay task's parameters and the LIVE results of upstream nodes.
+
+LLM calls that remain on replay:
+
+  - one executor call per *dyn* node (arguments the compiler could not
+    bind statically: generated summaries, plotting code), and
+  - one executor reflection per stage (it produces the cross-stage
+    summary later stages' content depends on).
+
+Everything else — the stage-designer call, every planner call, every
+executor dispatch whose tool call is statically bound — is gone.
+
+Any divergence from the graph raises :class:`PlanDeviation`; the session
+catches it and falls back to full AgentX re-planning (recompiling from
+the fresh run), so a stale or mismatched graph degrades to exactly the
+uncompiled behavior.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from ..core.agentx import EXECUTOR_SYSTEM, AgentXRunner
+from ..core.events import PlanProduced, StageCompleted, StageStarted
+from ..core.llm import Decision, LLMRequest, ToolCall
+from ..core.runtime import PatternConfig, RunOutcome, register_pattern
+from ..core.schema import REFLECTION_SCHEMA
+from .compile import (EXTRACTORS, _OPEN, PlanGraph, PlanNode, TemplateMismatch,
+                      extract_params, materialize, normalize_task)
+
+
+class PlanDeviation(RuntimeError):
+    """A compiled replay diverged from its graph (node failure, tool or
+    template mismatch, unbindable slot).  Carries the stage index for the
+    ``PlanFallback`` event the session emits on the fallback run."""
+
+    def __init__(self, reason: str, stage: int = -1):
+        super().__init__(reason)
+        self.reason = reason
+        self.stage = stage
+
+
+@register_pattern("agentx-compiled", rank=24)
+class CompiledAgentXRunner(AgentXRunner):
+    """AgentX with the planning layer replaced by a compiled graph.
+
+    Requires :meth:`bind_graph` before :meth:`run`; ``Session`` does this
+    when its plan cache holds a graph for the spec's template key.  The
+    small per-stage ``plan-rebind`` overhead replaces the pattern's
+    stage-dispatch + plan-dispatch overheads."""
+
+    pattern = "agentx-compiled"
+    is_compiled = True
+    default_config = PatternConfig(max_steps=14, overhead_local_s=0.05,
+                                   overhead_faas_s=0.04)
+
+    graph: PlanGraph = None   # type: ignore[assignment]
+
+    def bind_graph(self, graph: PlanGraph) -> None:
+        self.graph = graph
+
+    # ------------------------------------------------------------------
+    def _run(self, task: str) -> RunOutcome:
+        g = self.graph
+        if g is None:
+            raise RuntimeError("agentx-compiled requires bind_graph() — "
+                               "drive it through Session(plan_cache=...)")
+        try:
+            template, _, _ = normalize_task(g.app, task)
+        except TemplateMismatch:
+            raise PlanDeviation("template-mismatch")
+        if template != g.template:
+            raise PlanDeviation("template-mismatch")
+        params = extract_params(g.app, task)
+        if set(params) != set(g.params):
+            raise PlanDeviation("param-schema-mismatch")
+
+        summaries: List[str] = []
+        results: Dict[int, str] = {}
+        stage_names = []
+        for stage in g.stages:
+            name = materialize(stage.name, params)
+            stage_names.append(name)
+            self._replay_stage(task, stage, name, params, summaries, results)
+        return RunOutcome(completed=True, data={
+            "stages": stage_names, "summaries": summaries, "compiled": True})
+
+    # ------------------------------------------------------------------
+    def _replay_stage(self, task, stage, name, params, summaries, results):
+        g = self.graph
+        idx = stage.index
+        self.emit(StageStarted(t=self.now(), index=idx, name=name))
+        self.overhead("plan-rebind")
+        plan = self._materialize_plan(stage, params, results)
+        self.emit(PlanProduced(t=self.now(), index=idx, plan=plan))
+        filtered = [t for t in self.tools if t.name in stage.tools_needed]
+
+        stage_history: List[Dict] = []
+        exec_calls = 0
+        for node_id in stage.nodes:
+            node = g.node(node_id)
+            if node.dyn:
+                if exec_calls >= self.config.max_steps:
+                    raise PlanDeviation("step-budget", idx)
+                d = self._executor(task, name, idx, plan, stage_history,
+                                   summaries, filtered)
+                exec_calls += 1
+                if d.tool_call is None:
+                    raise PlanDeviation("early-reflection", idx)
+                if d.tool_call.tool != node.tool:
+                    raise PlanDeviation(
+                        f"tool-mismatch:{d.tool_call.tool}!={node.tool}", idx)
+                call = d.tool_call
+            else:
+                call = ToolCall(node.server, node.tool,
+                                self._bind_args(node, params, results, idx))
+            result = self.invoke(call)
+            stage_history.append({"tool": call.tool, "args": call.args,
+                                  "result": result})
+            results[node.id] = result
+            if result.startswith("<tool-error") and node.ok:
+                raise PlanDeviation(f"node-failed:{node.tool}", idx)
+
+        # terminal reflection: produces the cross-stage summary
+        d = self._executor(task, name, idx, plan, stage_history, summaries,
+                           filtered)
+        if d.tool_call is not None:
+            raise PlanDeviation("extra-tool-call:" + d.tool_call.tool, idx)
+        reflection = d.structured
+        self.reflect(idx, reflection)
+        summaries.append(reflection["execution_results"])
+        success = bool(reflection["success"])
+        self.emit(StageCompleted(t=self.now(), index=idx, success=success))
+        if not success:
+            raise PlanDeviation("stage-failed", idx)
+
+    # ------------------------------------------------------------------
+    def _materialize_plan(self, stage, params, results) -> Dict[str, Any]:
+        """Rebuild the stage plan from the graph: static slots bound (so
+        the executor policy sees e.g. the fetch URLs, exactly as the
+        fresh planner would have written them), dyn and not-yet-resolved
+        extract slots omitted (the fresh planner left those empty too)."""
+        steps = []
+        for node_id in stage.nodes:
+            node = self.graph.node(node_id)
+            bound = {}
+            for k, slot in node.slots.items():
+                if slot.kind == "lit" or slot.kind == "param":
+                    bound[k] = self._bind_slot(slot, params, results,
+                                               stage.index)
+                elif slot.kind == "extract" and slot.src in results:
+                    bound[k] = self._bind_slot(slot, params, results,
+                                               stage.index)
+            steps.append({"description": materialize(node.desc, params),
+                          "tool": node.tool, "params": bound})
+        return {"steps": steps, "tools_needed": list(stage.tools_needed)}
+
+    def _bind_args(self, node: PlanNode, params, results, idx) -> Dict:
+        return {k: self._bind_slot(s, params, results, idx)
+                for k, s in node.slots.items()}
+
+    def _bind_slot(self, slot, params, results, idx):
+        if slot.kind == "lit":
+            if isinstance(slot.value, str):
+                value = materialize(slot.value, params)
+                if _OPEN in value:
+                    raise PlanDeviation("unbound-placeholder", idx)
+                return value
+            return slot.value
+        if slot.kind == "param":
+            if slot.param not in params:
+                raise PlanDeviation(f"param-missing:{slot.param}", idx)
+            return params[slot.param]
+        if slot.kind == "extract":
+            src = results.get(slot.src)
+            if src is None:
+                raise PlanDeviation("dangling-edge", idx)
+            items = EXTRACTORS[slot.what](src)
+            if slot.index >= len(items):
+                raise PlanDeviation(f"extract-short:{slot.what}", idx)
+            return items[slot.index]
+        raise PlanDeviation(f"unbindable-slot:{slot.kind}", idx)
+
+    # ------------------------------------------------------------------
+    def _executor(self, task, name, idx, plan, stage_history, summaries,
+                  filtered) -> Decision:
+        """One execution-agent inference, prompt-identical to the fresh
+        AgentX executor loop (same message text, meta and filtered tool
+        surface), so token accounting and policy behavior match."""
+        history_text = "\n".join(
+            f"[{h['tool']}] -> {h['result'][:2000]}" for h in stage_history)
+        resp = self.complete(LLMRequest(
+            agent="executor", system=EXECUTOR_SYSTEM,
+            messages=[
+                {"role": "user", "content":
+                 f"{json.dumps(plan['steps'])}\n"
+                 f"Context: {' '.join(summaries)}\n"
+                 f"Tool results so far:\n{history_text}"},
+            ],
+            tools=filtered, schema=REFLECTION_SCHEMA,
+            meta={"task": task, "stage": name, "stage_idx": idx,
+                  "plan": plan, "stage_history": stage_history,
+                  "summaries": summaries, "cot": False}))
+        return resp.decision

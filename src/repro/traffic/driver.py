@@ -174,6 +174,9 @@ class TrafficReport:
     records: List[TrafficRecord]
     virtual_s: float             # timeline span of the whole workload
     wall_s: float                # wall seconds the replay took
+    # plan-cache counter deltas for this workload (hits/misses/fallbacks/
+    # hit_rate), when the session carries a repro.plans.PlanCache
+    plan_cache: Optional[dict] = None
 
     @property
     def replay_speedup(self) -> float:
@@ -303,6 +306,7 @@ class TrafficDriver:
     # -- entry point --------------------------------------------------------
     def run(self, workload: Workload) -> TrafficReport:
         t0 = time.perf_counter()
+        before = self._plan_stats()
         if self.mode == "real":
             records = asyncio.run(self._drive_real(workload))
             virtual_s = max((r.end for r in records), default=0.0)
@@ -313,7 +317,27 @@ class TrafficDriver:
                 records = asyncio.run(self._drive_open(workload))
             virtual_s = max((r.end for r in records), default=0.0)
         return TrafficReport(records, virtual_s,
-                             time.perf_counter() - t0)
+                             time.perf_counter() - t0,
+                             plan_cache=self._plan_delta(before))
+
+    def _plan_stats(self) -> Optional[dict]:
+        pc = getattr(self.session, "plan_cache", None)
+        return pc.stats() if pc is not None else None
+
+    def _plan_delta(self, before: Optional[dict]) -> Optional[dict]:
+        """Plan-cache counter deltas attributable to THIS workload (the
+        cache may be shared across sweeps — warm passes report their own
+        hit rate, not the lifetime average)."""
+        after = self._plan_stats()
+        if after is None or before is None:
+            return None
+        hits = after["hits"] - before["hits"]
+        misses = after["misses"] - before["misses"]
+        lookups = hits + misses
+        return {"entries": after["entries"], "hits": hits,
+                "misses": misses,
+                "fallbacks": after["fallbacks"] - before["fallbacks"],
+                "hit_rate": hits / lookups if lookups else 0.0}
 
     # -- virtual, open loop --------------------------------------------------
     async def _drive_open(self, workload: Workload) -> List[TrafficRecord]:
@@ -348,7 +372,7 @@ class TrafficDriver:
                     await timeline.sleep(
                         rng.expovariate(1.0 / workload.think_s))
                     scenario = workload.draw_scenario(rng)
-                    seed = (workload.seed * 100_000 + u * 1_000 + i)
+                    seed = workload.spec_seed(u * 1_000 + i)
                     out.append(await _run_on_timeline(
                         self.session, timeline, sem, sum(counts[:u]) + i,
                         scenario.name, scenario.spec(seed)))

@@ -115,4 +115,6 @@ def aggregate_report(report: TrafficReport,
                                if report.virtual_s else 0.0),
         },
     }
+    if report.plan_cache is not None:
+        out["plan_cache"] = report.plan_cache
     return out

@@ -91,6 +91,13 @@ class Workload:
     # closed-loop knobs
     users: int = 8
     think_s: float = 5.0
+    # repeat-mix knob: cap the number of DISTINCT spec seeds.  0 keeps
+    # the historical every-request-unique behavior; a small value makes
+    # the stream repeat-heavy (the i-th request reuses seed i mod
+    # unique_seeds) — the regime where the plan cache
+    # (:mod:`repro.plans`) pays off, since same-template same-seed runs
+    # replay compiled graphs planner-free.
+    unique_seeds: int = 0
 
     # ------------------------------------------------------------------
     def _rng(self) -> random.Random:
@@ -102,6 +109,12 @@ class Workload:
     def draw_scenario(self, rng: random.Random) -> Scenario:
         return rng.choices(self.scenarios,
                            weights=[s.weight for s in self.scenarios])[0]
+
+    def spec_seed(self, i: int) -> int:
+        """Spec seed for the i-th request (folded by ``unique_seeds``)."""
+        if self.unique_seeds > 0:
+            i = i % self.unique_seeds
+        return self.seed * 100_000 + i
 
     def arrivals(self) -> List[Arrival]:
         """Materialize the open-loop arrival list (deterministic per
@@ -140,13 +153,15 @@ class Workload:
                 raise ValueError(f"unknown arrival process "
                                  f"{self.arrival!r}")
             scenario = self.draw_scenario(rng)
-            seed = self.seed * 100_000 + i
-            out.append(Arrival(i, t, scenario, scenario.spec(seed)))
+            out.append(Arrival(i, t, scenario,
+                               scenario.spec(self.spec_seed(i))))
         return out
 
     def describe(self) -> dict:
         return {"arrival": self.arrival, "rate": self.rate,
                 "n_requests": self.n_requests, "seed": self.seed,
                 "scenarios": [s.name for s in self.scenarios],
+                **({"unique_seeds": self.unique_seeds}
+                   if self.unique_seeds else {}),
                 **({"users": self.users, "think_s": self.think_s}
                    if self.arrival == "closed" else {})}

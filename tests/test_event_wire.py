@@ -11,12 +11,12 @@ import dataclasses
 import pytest
 
 from repro.core.events import (_EVENT_TYPES, EngineStepped, LLMCompleted,
-                               OverheadIncurred, PlanProduced,
-                               ReflectionEmitted, RunCompleted, RunHedged,
-                               RunStarted, StageCompleted, StageStarted,
-                               ToolInvoked, ToolRetried, derive_trace,
-                               events_from_wire, events_to_wire, from_wire,
-                               to_wire)
+                               OverheadIncurred, PlanCacheMiss, PlanCompiled,
+                               PlanFallback, PlanProduced, ReflectionEmitted,
+                               RunCompleted, RunHedged, RunStarted,
+                               StageCompleted, StageStarted, ToolInvoked,
+                               ToolRetried, derive_trace, events_from_wire,
+                               events_to_wire, from_wire, to_wire)
 from repro.core.metrics import FrameworkEvent, LLMEvent, ToolEvent
 
 # one concrete instance of every wire-registered event type
@@ -26,7 +26,9 @@ SAMPLES = [
     PlanProduced(t=1.5, index=0, plan={"steps": [{"tool": "google_search"}]}),
     LLMCompleted(t=2.0, event=LLMEvent("executor", 100, 20, 1.2, 2.0)),
     ToolInvoked(t=3.0, event=ToolEvent("serper", "google_search", 0.8,
-                                       True, 3.0)),
+                                       True, 3.0,
+                                       args={"query": "q", "num_results": 8},
+                                       result='{"organic": []}')),
     OverheadIncurred(t=3.5, event=FrameworkEvent("plan", 0.18, 3.5)),
     ReflectionEmitted(t=4.0, index=0, reflection={"success": True}),
     StageCompleted(t=4.5, index=0, success=True),
@@ -36,6 +38,11 @@ SAMPLES = [
     RunHedged(t=5.5, server="fetch", tool="fetch", winner="hedge",
               primary_s=12.0, hedge_s=1.0, saved_s=3.0),
     RunCompleted(t=6.0, completed=True, data={"summaries": ["ok"]}),
+    PlanCompiled(t=6.2, key="ab12" * 16, template="Search for {var} ...",
+                 stages=3, nodes=5, dyn_nodes=1),
+    PlanCacheMiss(t=6.3, key="ab12" * 16),
+    PlanFallback(t=6.4, key="ab12" * 16, reason="node-failed:fetch",
+                 stage=1),
     EngineStepped(t=7.0, live=3, queued=2, generated=3, prefilled=64,
                   preempted=1),
 ]
@@ -82,6 +89,16 @@ def test_missing_newer_fields_default():
            "generated": 2}
     ev = from_wire(old)
     assert ev.prefilled == 0 and ev.preempted == 0
+
+
+def test_pre_plan_toolevent_payload_defaults():
+    """A pre-plan-PR ToolInvoked payload (no args/result on the nested
+    ToolEvent) still deserializes — the plan-compiler fields default."""
+    old = {"type": "ToolInvoked", "t": 3.0,
+           "event": {"server": "serper", "tool": "google_search",
+                     "latency": 0.8, "ok": True, "t": 3.0}}
+    ev = from_wire(old)
+    assert ev.event.args is None and ev.event.result is None
 
 
 def test_unknown_type_raises():

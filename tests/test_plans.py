@@ -1,0 +1,224 @@
+"""Plan compilation: trace->graph lifting, template-keyed cache,
+planner-free replay, deviation fallback, and the traffic integration."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.apps.cache import RunCache
+from repro.apps.session import RunSpec, Session
+from repro.core.events import (PlanCacheMiss, PlanCompiled, PlanFallback,
+                               ToolInvoked)
+from repro.plans import PlanCache, graph_from_wire, graph_to_wire, plan_key
+from repro.plans.compile import (TemplateMismatch, compile_result,
+                                 extract_params, normalize_task)
+from repro.traffic import TrafficDriver, Workload, aggregate_report
+from repro.traffic.workload import Scenario
+
+PLANNERS = {"stage_generator", "planner", "cot_reasoner"}
+
+
+def planner_calls(result):
+    return sum(1 for c in result.trace.llm_events if c.agent in PLANNERS)
+
+
+def tool_seq(result):
+    return [(e.event.server, e.event.tool, e.event.args)
+            for e in result.extras["events"] if isinstance(e, ToolInvoked)]
+
+
+def plan_markers(result):
+    return [type(e).__name__ for e in result.extras["events"]
+            if type(e).__name__.startswith("Plan")
+            and type(e).__name__ != "PlanProduced"]
+
+
+WEB = RunSpec("web_search", "quantum", "agentx", seed=1)
+
+
+# ---------------------------------------------------------------------------
+# compiler
+
+
+def test_compile_lifts_trace_to_typed_graph():
+    result = Session().execute(WEB)
+    assert result.success
+    g = compile_result(result)
+    assert g is not None and g.app == "web_search" and g.stages
+    kinds = {s.kind for n in g.nodes for s in n.slots.values()}
+    # the search query is spec-bound, fetch URLs are data-flow edges
+    assert "param" in kinds and "extract" in kinds
+    search = next(n for n in g.nodes if n.tool == "google_search")
+    assert any(s.kind == "param" and s.param == "query"
+               for s in search.slots.values())
+    assert g.edges()  # at least one (src, dst) data-flow edge
+
+
+def test_graph_wire_roundtrip_and_version_gate():
+    g = compile_result(Session().execute(WEB))
+    wire = graph_to_wire(g)
+    json.dumps(wire)                       # JSON-serializable end to end
+    assert graph_from_wire(wire) == g
+    bad = dict(wire, version=999)
+    with pytest.raises(ValueError):
+        graph_from_wire(bad)
+
+
+# ---------------------------------------------------------------------------
+# template normalization + key fingerprint (spec-bound vs template-bound)
+
+
+def test_plan_key_shared_across_instances_and_seeds():
+    base = plan_key(WEB)
+    assert base is not None
+    assert plan_key(dataclasses.replace(WEB, seed=7)) == base
+    assert plan_key(dataclasses.replace(WEB, instance="edge")) == base
+    assert plan_key(dataclasses.replace(WEB, llm="jax")) == base
+
+
+def test_plan_key_separates_structure():
+    base = plan_key(WEB)
+    other_app = plan_key(RunSpec("research_report", "flow", "agentx", seed=1))
+    faas = plan_key(dataclasses.replace(WEB, deployment="faas"))
+    assert other_app is not None and other_app != base
+    assert faas is not None and faas != base  # remote prompt + caps differ
+
+
+def test_plan_key_none_for_uncompilable_specs():
+    assert plan_key(dataclasses.replace(WEB, pattern="react")) is None
+    assert plan_key(dataclasses.replace(WEB, pattern="magentic")) is None
+    assert plan_key(dataclasses.replace(
+        WEB, backend_factory=lambda *a, **k: None)) is None
+
+
+def test_normalize_task_edges():
+    from repro.apps.apps import APPS
+    local = APPS["web_search"].prompt("quantum", False)
+    remote = APPS["web_search"].prompt("quantum", True)
+    t_local, var, is_remote = normalize_task("web_search", local)
+    t_remote, var2, is_remote2 = normalize_task("web_search", remote)
+    assert var == var2 and not is_remote and is_remote2
+    assert t_local != t_remote            # storage hint is structural
+    # same template for a different entity: only the variable differs
+    t_edge, var_edge, _ = normalize_task(
+        "web_search", APPS["web_search"].prompt("edge", False))
+    assert t_edge == t_local and var_edge != var
+    with pytest.raises(TemplateMismatch):
+        normalize_task("web_search", "please do something else entirely")
+
+
+def test_extract_params_per_app():
+    from repro.apps.apps import APPS
+    p = extract_params("stock_correlation",
+                       APPS["stock_correlation"].prompt("apple", False))
+    assert p["filename"].endswith(".png") and "c0" in p
+    q = extract_params("web_search",
+                       APPS["web_search"].prompt("quantum", False))
+    assert list(q) == ["query"]
+
+
+# ---------------------------------------------------------------------------
+# cache
+
+
+def test_plan_cache_disk_roundtrip_and_corrupt_skip(tmp_path):
+    g = compile_result(Session().execute(WEB))
+    pc = PlanCache(cache_dir=str(tmp_path))
+    pc.put("k1", g)
+    (tmp_path / "plan_zz.json").write_text("{not json")   # corrupt entry
+    pc2 = PlanCache(cache_dir=str(tmp_path))
+    assert len(pc2) == 1 and pc2.get("k1") == g
+    assert pc2.stats()["hits"] == 1
+    assert pc2.get("nope") is None and pc2.stats()["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# compiled replay through Session
+
+
+def test_same_spec_replay_is_planner_free_and_bit_identical():
+    fresh = Session().execute(WEB)
+    pc = PlanCache()
+    s = Session(plan_cache=pc)
+    cold = s.execute(WEB)
+    warm = s.execute(WEB)
+    assert plan_markers(cold) == ["PlanCacheMiss", "PlanCompiled"]
+    assert plan_markers(warm) == []       # pure replay
+    assert planner_calls(cold) > 0 and planner_calls(warm) == 0
+    assert warm.success
+    assert tool_seq(warm) == tool_seq(fresh) == tool_seq(cold)
+    assert warm.artifact == fresh.artifact
+    assert pc.stats()["hits"] == 1 and pc.stats()["fallbacks"] == 0
+    # the planning overhead is gone from the virtual timeline too
+    assert warm.total_latency < cold.total_latency
+
+
+def test_cross_instance_replay_reuses_graph():
+    pc = PlanCache()
+    s = Session(plan_cache=pc)
+    s.execute(WEB)
+    warm = s.execute(RunSpec("web_search", "edge", "agentx", seed=2))
+    assert warm.success and planner_calls(warm) == 0
+    assert "edge" in warm.artifact.lower()
+    assert len(pc) == 1                   # one graph serves both instances
+
+
+def test_deviation_falls_back_to_full_replanning():
+    pc = PlanCache()
+    s = Session(plan_cache=pc)
+    s.execute(WEB)
+    key = plan_key(WEB)
+    g = pc.get(key)
+    poisoned = dataclasses.replace(
+        g, nodes=(dataclasses.replace(g.nodes[0], tool="no_such_tool"),)
+        + g.nodes[1:])
+    pc.put(key, poisoned)
+    events = []
+    r = s.execute(RunSpec("web_search", "edge", "agentx", seed=2),
+                  on_event=events.append)
+    assert r.success                       # fallback run completed
+    fb = [e for e in events if isinstance(e, PlanFallback)]
+    assert fb and fb[0].reason.startswith("node-failed")
+    assert pc.stats()["fallbacks"] == 1
+    assert pc.get(key).nodes[0].tool != "no_such_tool"   # recompiled
+
+
+def test_plan_compilable_specs_bypass_run_cache():
+    rc, pc = RunCache(), PlanCache()
+    s = Session(cache=rc, plan_cache=pc)
+    s.execute(WEB)                        # compilable: plan path, no RunCache
+    assert rc.stats()["entries"] == 0 and len(pc) == 1
+    s.execute(RunSpec("web_search", "quantum", "react", seed=1))
+    assert rc.stats()["entries"] == 1     # react still run-cached
+
+
+# ---------------------------------------------------------------------------
+# traffic integration
+
+
+def test_traffic_reports_plan_cache_hit_rate():
+    mix = (Scenario("web/agentx", "web_search", "quantum", "agentx"),)
+    wl = Workload(scenarios=mix, n_requests=8, rate=4.0, seed=3,
+                  unique_seeds=2)
+    pc = PlanCache()
+    report = TrafficDriver(Session(plan_cache=pc)).run(wl)
+    assert report.plan_cache is not None
+    assert report.plan_cache["hits"] >= 1
+    assert report.plan_cache["hit_rate"] > 0
+    agg = aggregate_report(report)
+    assert agg["plan_cache"] == report.plan_cache
+    # without a plan cache the section stays absent
+    plain = TrafficDriver(Session()).run(wl)
+    assert plain.plan_cache is None
+    assert "plan_cache" not in aggregate_report(plain)
+
+
+def test_unique_seeds_folds_spec_seeds():
+    wl = Workload(n_requests=10, seed=2, unique_seeds=3)
+    seeds = [a.spec.seed for a in wl.arrivals()]
+    assert set(seeds) == {200_000, 200_001, 200_002}
+    baseline = Workload(n_requests=10, seed=2)
+    assert [a.spec.seed for a in baseline.arrivals()] == [
+        200_000 + i for i in range(10)]
+    assert "unique_seeds" in wl.describe()

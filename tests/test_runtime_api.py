@@ -32,7 +32,9 @@ def test_registry_round_trip_old_names():
         assert rp.name == name
         assert issubclass(rp.runner_cls, AgentRuntime)
         assert PATTERNS[name] is not None
-    assert set(OLD_PATTERNS) == set(PATTERNS)
+    # the registry only grew: old names all present, and the single
+    # post-refactor addition is the compiled-replay pattern
+    assert set(PATTERNS) - set(OLD_PATTERNS) == {"agentx-compiled"}
 
 
 def test_registry_variant_configs():
