@@ -19,6 +19,14 @@ worlds — the ``world_alias`` guarantee):
   4. **faults+retry+hedge** — adds ``HedgePolicy``: the latency/cost
      premium of full resilience, priced against the clean baseline.
 
+A fifth axis — **durability** (``repro.durable``) — re-drives the same
+workload under injected *platform crashes* (whole runs killed mid-
+flight) three ways: no recovery, restart-from-scratch, and journal
+resume.  The headline criteria, asserted at exit: resumed success rate
+recovers the clean baseline *exactly* (determinism makes == meaningful),
+and resume bills strictly less than rerun (the recovered-prefix saving,
+Eq. 1 + Eq. 2).
+
 Writes ``artifacts/BENCH_traffic.json`` (uploaded by CI).
 
     PYTHONPATH=src python -m benchmarks.traffic --requests 60 --rate 2
@@ -28,9 +36,11 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 
 from repro.apps.session import Session
 from repro.core.policies import HedgePolicy, RetryPolicy
+from repro.durable import RunJournal
 from repro.traffic import (DEFAULT_MIX, FaultPlan, Scenario, SLOTarget,
                            TrafficDriver, Workload, aggregate_report,
                            register_fault_plan)
@@ -55,6 +65,102 @@ def _faulty_mix(stats_sink) -> tuple:
         scenarios.append(Scenario(s.name, s.app, s.instance, s.pattern,
                                   name, s.llm, s.priority, s.weight))
     return tuple(scenarios)
+
+
+def _crash_mix(crash_rate: float, stats_sink) -> tuple:
+    """The DEFAULT_MIX over crash-only twins: no transport faults, no
+    cold starts — a crash twin's run is bit-identical to the plain
+    deployment's until the platform kill, so the clean pass IS the
+    ground truth a recovered pass must match exactly."""
+    plan = FaultPlan(crash_rate=crash_rate, first_call_cold=False)
+    scenarios = []
+    for s in DEFAULT_MIX:
+        name = f"{s.deployment}+crash"
+        register_fault_plan(name, s.deployment, plan, stats=stats_sink)
+        scenarios.append(Scenario(s.name, s.app, s.instance, s.pattern,
+                                  name, s.llm, s.priority, s.weight))
+    return tuple(scenarios)
+
+
+def measure_durability(n_requests: int = 100, rate: float = 2.0,
+                       seed: int = 0, arrival: str = "poisson",
+                       max_concurrency: int = 0, crash_rate: float = 0.2,
+                       clean_overall: dict = None) -> dict:
+    """Crash-recovery economics: the same workload under a
+    ``crash_rate`` per-attempt kill probability, recovered three ways.
+
+    ``clean_overall``: the no-crash baseline aggregate to compare
+    against (computed here over the plain DEFAULT_MIX when not passed
+    in by ``measure``)."""
+    from repro.traffic.faults import FaultStats
+    slo = SLOTarget(latency_s=180.0, ttft_s=30.0, success_rate=0.85)
+    if clean_overall is None:
+        wl = Workload(arrival=arrival, rate=rate, n_requests=n_requests,
+                      seed=seed)
+        clean_overall = aggregate_report(
+            TrafficDriver(Session(), max_concurrency=max_concurrency)
+            .run(wl), slo)["overall"]
+
+    stats = FaultStats()
+    plan = FaultPlan(crash_rate=crash_rate, first_call_cold=False)
+    crash_wl = Workload(scenarios=_crash_mix(crash_rate, stats),
+                        arrival=arrival, rate=rate, n_requests=n_requests,
+                        seed=seed)
+
+    # pass A: crashes land, nobody recovers — the damage baseline
+    none_rep = TrafficDriver(Session(), max_concurrency=max_concurrency,
+                             restart="none").run(crash_wl)
+    crashes_unrecovered = stats.snapshot()["crashes"]
+
+    # pass B: restart-from-scratch — every dead attempt fully re-billed
+    stats.reset()
+    rerun_rep = TrafficDriver(Session(), max_concurrency=max_concurrency,
+                              restart="rerun").run(crash_wl)
+
+    # pass C: journal resume — fsync_batch=1 commits every event, so the
+    # whole journaled prefix is recovered (larger batches would re-pay
+    # the unfsynced tail; that knob is exercised in tests)
+    stats.reset()
+    journal_dir = tempfile.mkdtemp(prefix="repro-journal-")
+    resume_rep = TrafficDriver(
+        Session(journal=RunJournal(journal_dir, fsync_batch=1)),
+        max_concurrency=max_concurrency, restart="resume").run(crash_wl)
+
+    agg_none = aggregate_report(none_rep, slo)
+    agg_rerun = aggregate_report(rerun_rep, slo)
+    agg_resume = aggregate_report(resume_rep, slo)
+    dur_rerun = agg_rerun["overall"]["durability"]
+    dur_resume = agg_resume["overall"]["durability"]
+    return {
+        "plan": {"crash_rate": crash_rate,
+                 "crash_min_events": plan.crash_min_events,
+                 "crash_max_events": plan.crash_max_events,
+                 "fsync_batch": 1},
+        "no_recovery": {"injected_crashes": crashes_unrecovered,
+                        "overall": agg_none["overall"]},
+        "rerun": {"overall": agg_rerun["overall"]},
+        "resume": {"overall": agg_resume["overall"]},
+        "success_rate": {
+            "clean": clean_overall["success_rate"],
+            "no_recovery": agg_none["overall"]["success_rate"],
+            "rerun": agg_rerun["overall"]["success_rate"],
+            "resume": agg_resume["overall"]["success_rate"],
+        },
+        "economics": {
+            "rerun_billed_usd": dur_rerun["billed_cost_usd"],
+            "resume_billed_usd": dur_resume["billed_cost_usd"],
+            "resume_saving_usd": (dur_rerun["billed_cost_usd"]
+                                  - dur_resume["billed_cost_usd"]),
+            "recovered_tokens": dur_resume["recovered_tokens"],
+            "replayed_events": dur_resume["replayed_events"],
+            "resumes": dur_resume["resumes"],
+        },
+        # the headline recovery criteria (determinism makes == meaningful)
+        "recovers_clean_success": (agg_resume["overall"]["success_rate"]
+                                   == clean_overall["success_rate"]),
+        "resume_cheaper_than_rerun": (dur_resume["billed_cost_usd"]
+                                      < dur_rerun["billed_cost_usd"]),
+    }
 
 
 def measure(n_requests: int = 100, rate: float = 2.0, seed: int = 0,
@@ -146,38 +252,100 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--concurrency", type=int, default=0,
                     help="in-flight run cap (0 = unbounded)")
+    ap.add_argument("--crash-rate", type=float, default=0.2,
+                    help="per-attempt platform-kill probability for the "
+                         "durability passes")
+    ap.add_argument("--no-durability", action="store_true",
+                    help="skip the crash-recovery passes")
+    ap.add_argument("--durability-only", action="store_true",
+                    help="run only the durability passes and merge the "
+                         "section into an existing artifact")
     ap.add_argument("--out", default=os.path.join(ART, "BENCH_traffic.json"))
     args = ap.parse_args()
 
-    rec = measure(n_requests=args.requests, rate=args.rate, seed=args.seed,
-                  arrival=args.arrival, max_concurrency=args.concurrency)
+    if args.durability_only:
+        # merge into whatever artifact is already there (the clean
+        # overall, when present, is the recovery ground truth)
+        rec = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                rec = json.load(f)
+        rec["durability"] = measure_durability(
+            n_requests=args.requests, rate=args.rate, seed=args.seed,
+            arrival=args.arrival, max_concurrency=args.concurrency,
+            crash_rate=args.crash_rate,
+            clean_overall=rec.get("overall"))
+    else:
+        rec = measure(n_requests=args.requests, rate=args.rate,
+                      seed=args.seed, arrival=args.arrival,
+                      max_concurrency=args.concurrency)
+        if not args.no_durability:
+            rec["durability"] = measure_durability(
+                n_requests=args.requests, rate=args.rate, seed=args.seed,
+                arrival=args.arrival, max_concurrency=args.concurrency,
+                crash_rate=args.crash_rate,
+                clean_overall=rec["overall"])
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
 
-    ov, rp = rec["overall"], rec["replay"]
-    fi = rec["fault_injection"]
-    print(f"# traffic bench: {rec['workload']['n_requests']} requests, "
-          f"{rec['workload']['arrival']} arrivals @ "
-          f"{rec['workload']['rate']}/s")
-    print(f"replay.virtual_s,{rp['virtual_s']:.0f},")
-    print(f"replay.wall_s,{rp['wall_s']:.2f},")
-    print(f"replay.speedup,{rp['speedup']:.0f},x")
-    print(f"replay.peak_concurrency,{rp['peak_concurrency']},")
-    print(f"clean.success_rate,{ov['success_rate']:.3f},")
-    print(f"clean.latency_p95_s,{ov['latency_s']['p95']:.1f},")
-    print(f"clean.ttft_p95_s,{ov['ttft_s']['p95']:.1f},")
-    print(f"clean.cost_mean_usd,{ov['cost_usd']['total_mean']:.5f},")
-    sr = fi["success_rate"]
-    print(f"faults.success_rate,{sr['faulted']:.3f},")
-    print(f"faults.recovered_success_rate,{sr['recovered']:.3f},")
-    print(f"faults.injected,{fi['with_retry']['injected']['errors']},")
-    print(f"faults.retried,{fi['with_retry']['retried']},")
-    print(f"faults.accounted,"
-          f"{fi['with_retry']['retry_accounts_for_all_faults']},")
-    print(f"faults.hedges,{fi['with_retry_hedge']['hedges']},")
-    print(f"faults.latency_premium_p95_s,{fi['latency_premium_p95_s']:.1f},")
+    if "fault_injection" in rec:
+        ov, rp = rec["overall"], rec["replay"]
+        fi = rec["fault_injection"]
+        print(f"# traffic bench: {rec['workload']['n_requests']} requests, "
+              f"{rec['workload']['arrival']} arrivals @ "
+              f"{rec['workload']['rate']}/s")
+        print(f"replay.virtual_s,{rp['virtual_s']:.0f},")
+        print(f"replay.wall_s,{rp['wall_s']:.2f},")
+        print(f"replay.speedup,{rp['speedup']:.0f},x")
+        print(f"replay.peak_concurrency,{rp['peak_concurrency']},")
+        print(f"clean.success_rate,{ov['success_rate']:.3f},")
+        print(f"clean.latency_p95_s,{ov['latency_s']['p95']:.1f},")
+        print(f"clean.ttft_p95_s,{ov['ttft_s']['p95']:.1f},")
+        print(f"clean.cost_mean_usd,{ov['cost_usd']['total_mean']:.5f},")
+        sr = fi["success_rate"]
+        print(f"faults.success_rate,{sr['faulted']:.3f},")
+        print(f"faults.recovered_success_rate,{sr['recovered']:.3f},")
+        print(f"faults.injected,{fi['with_retry']['injected']['errors']},")
+        print(f"faults.retried,{fi['with_retry']['retried']},")
+        print(f"faults.accounted,"
+              f"{fi['with_retry']['retry_accounts_for_all_faults']},")
+        print(f"faults.hedges,{fi['with_retry_hedge']['hedges']},")
+        print(f"faults.latency_premium_p95_s,"
+              f"{fi['latency_premium_p95_s']:.1f},")
+
+    failed = False
+    if "durability" in rec:
+        du = rec["durability"]
+        sr, eco = du["success_rate"], du["economics"]
+        print(f"durability.crash_rate,{du['plan']['crash_rate']:.2f},")
+        print(f"durability.success_clean,{sr['clean']:.3f},")
+        print(f"durability.success_no_recovery,{sr['no_recovery']:.3f},")
+        print(f"durability.success_rerun,{sr['rerun']:.3f},")
+        print(f"durability.success_resume,{sr['resume']:.3f},")
+        print(f"durability.crashes,"
+              f"{du['rerun']['overall']['durability']['crashes']},")
+        print(f"durability.resumes,{eco['resumes']},")
+        print(f"durability.replayed_events,{eco['replayed_events']},")
+        print(f"durability.recovered_tokens,{eco['recovered_tokens']},")
+        print(f"durability.rerun_billed_usd,{eco['rerun_billed_usd']:.5f},")
+        print(f"durability.resume_billed_usd,"
+              f"{eco['resume_billed_usd']:.5f},")
+        print(f"durability.resume_saving_usd,"
+              f"{eco['resume_saving_usd']:.5f},")
+        print(f"durability.recovers_clean_success,"
+              f"{du['recovers_clean_success']},")
+        print(f"durability.resume_cheaper_than_rerun,"
+              f"{du['resume_cheaper_than_rerun']},")
+        if not du["recovers_clean_success"]:
+            print("# FAIL: resumed success rate != clean baseline")
+            failed = True
+        if not du["resume_cheaper_than_rerun"]:
+            print("# FAIL: resume did not bill less than rerun")
+            failed = True
     print(f"# wrote {args.out}")
+    if failed:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

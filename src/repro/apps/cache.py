@@ -38,6 +38,7 @@ from typing import Dict, Optional
 
 from ..core.events import derive_trace, events_from_wire, events_to_wire
 from ..core.metrics import RunResult
+from ..core.persist import atomic_write_json, load_json_dir
 
 
 def spec_fingerprint(spec) -> Optional[str]:
@@ -115,16 +116,11 @@ class RunCache:
         self.cache_dir = cache_dir
         if cache_dir:
             os.makedirs(cache_dir, exist_ok=True)
-            for fn in sorted(os.listdir(cache_dir)):
-                if not fn.endswith(".json"):
-                    continue
-                try:
-                    with open(os.path.join(cache_dir, fn)) as f:
-                        self._store[fn[:-5]] = result_from_wire(json.load(f))
-                except (OSError, KeyError, ValueError, TypeError):
-                    # corrupt, foreign, or schema-drifted file (TypeError:
-                    # event dataclass kwargs changed): treat as a miss
-                    continue
+            # corrupt, foreign, or schema-drifted files are misses
+            # (CORRUPT_ENTRY_ERRORS skip inside load_json_dir)
+            self._store.update(load_json_dir(
+                cache_dir,
+                lambda stem, payload: (stem, result_from_wire(payload))))
 
     def get(self, key: Optional[str]) -> Optional[RunResult]:
         if key is None:
@@ -147,18 +143,10 @@ class RunCache:
             # must not queue behind each other's JSON encoding/disk I/O.
             # Per-key last-writer-wins via atomic rename; same key means
             # same deterministic result anyway.  Persistence is an
-            # optimization — a full disk must not fail a completed run.
-            path = os.path.join(self.cache_dir, f"{key}.json")
-            tmp = f"{path}.tmp.{threading.get_ident()}"
-            try:
-                with open(tmp, "w") as f:
-                    json.dump(result_to_wire(result), f)
-                os.replace(tmp, path)   # atomic: no partial reads
-            except OSError:
-                try:
-                    os.remove(tmp)
-                except OSError:
-                    pass
+            # optimization — a full disk must not fail a completed run
+            # (best_effort).
+            atomic_write_json(os.path.join(self.cache_dir, f"{key}.json"),
+                              result_to_wire(result), best_effort=True)
 
     def __len__(self) -> int:
         with self._lock:

@@ -45,7 +45,7 @@ from typing import Any, Callable, Iterable, List, Optional, Tuple
 
 from ..core.metrics import RunResult, Trace
 from ..core.policies import POLICIES, HedgePolicy, RetryPolicy
-from ..core.runtime import RunOutcome, create_runner
+from ..core.runtime import RunAborted, RunOutcome, create_runner
 from ..env.world import World
 from ..eval.judge import Score, judge_stock, judge_summary
 from ..faas.deployments import create_deployment, resolve_deployment
@@ -140,27 +140,43 @@ class Session:
     history, and therefore every decision, stays identical to a
     fault-free run as long as the budget holds.  Specs run under a
     retry/hedge policy are NOT cached: resilience changes latency/cost
-    accounting, and the cache key does not cover the policies."""
+    accounting, and the cache key does not cover the policies.
+
+    ``journal`` (:class:`repro.durable.journal.RunJournal`) makes runs
+    durable: every emitted event is appended to a per-run JSONL segment
+    keyed by the run-cache content address, and an interrupted run can
+    continue from its last committed event via
+    :func:`repro.durable.resume.resume_run` — see ``docs/DURABLE.md``.
+    Crashed (aborted) runs are never cached: their results are partial
+    by construction."""
 
     def __init__(self,
                  on_event: Optional[Callable] = None,
                  cache: Optional[RunCache] = None,
                  retry: Optional["RetryPolicy"] = None,
                  hedge: Optional["HedgePolicy"] = None,
-                 plan_cache: Optional["PlanCache"] = None):
+                 plan_cache: Optional["PlanCache"] = None,
+                 journal: Optional["RunJournal"] = None):
         self.on_event = on_event
         self.cache = cache
         self.retry = retry
         self.hedge = hedge
         self.plan_cache = plan_cache
+        self.journal = journal
 
     # ------------------------------------------------------------------
     def execute(self, spec: RunSpec,
-                on_event: Optional[Callable] = None) -> RunResult:
+                on_event: Optional[Callable] = None,
+                attempt: int = 0) -> RunResult:
         """Execute one run end-to-end: provision the deployment backend,
         run the pattern, locate + judge the artifact, account costs.
 
-        With a warm cache, returns the stored RunResult instead."""
+        With a warm cache, returns the stored RunResult instead.
+
+        ``attempt`` is the durable-execution restart counter (0 = first
+        execution): it keys the deployment's injected-crash draw so a
+        rerun/resume of a crashed run is a fresh sample instead of
+        deterministically dying at the same event again."""
         # a plan-compilable spec bypasses the run cache: compiled replays
         # differ in cost/latency accounting (no planner calls), and the
         # run-cache key does not cover the plan-cache state — the same
@@ -173,8 +189,10 @@ class Session:
             hit = self.cache.get(key)
             if hit is not None:
                 return hit
-        result = self._execute(spec, on_event)
-        if cacheable:
+        result = self._execute(spec, on_event, attempt=attempt)
+        # an aborted (crashed) run is partial by construction: caching
+        # it would serve the dead run to every later identical spec
+        if cacheable and not result.extras.get("aborted"):
             self.cache.put(key, result)
         return result
 
@@ -186,28 +204,74 @@ class Session:
         return plan_key(spec)
 
     def _execute(self, spec: RunSpec,
-                 on_event: Optional[Callable] = None) -> RunResult:
+                 on_event: Optional[Callable] = None,
+                 resume: Any = None, attempt: int = 0) -> RunResult:
         """Dispatch one run: replay a compiled plan when the plan cache
         holds this spec's template key, falling back to a fresh fully
-        planned run (which recompiles) on any :class:`PlanDeviation`."""
+        planned run (which recompiles) on any :class:`PlanDeviation`.
+        ``resume`` (a :class:`repro.durable.journal.Segment`) routes the
+        run down the crash-resume path instead."""
         pk = self._plan_key(spec)
+        if resume is not None:
+            return self._execute_resume(spec, on_event, resume, pk)
         if pk is None:
-            return self._execute_once(spec, on_event)
+            return self._execute_once(spec, on_event, attempt=attempt)
         graph = self.plan_cache.get(pk)
         if graph is None:
-            return self._execute_once(spec, on_event, key=pk)
+            return self._execute_once(spec, on_event, key=pk,
+                                      attempt=attempt)
         from ..plans.execute import PlanDeviation
         try:
-            return self._execute_once(spec, on_event, graph=graph, key=pk)
+            return self._execute_once(spec, on_event, graph=graph, key=pk,
+                                      attempt=attempt)
         except PlanDeviation as e:
             self.plan_cache.record_fallback(pk)
             return self._execute_once(spec, on_event, key=pk,
-                                      fallback=(e.reason, e.stage))
+                                      fallback=(e.reason, e.stage),
+                                      attempt=attempt)
+
+    def _execute_resume(self, spec: RunSpec, on_event: Optional[Callable],
+                        segment: Any, pk: Optional[str]) -> RunResult:
+        """Resume an interrupted run: re-dispatch it down the same branch
+        its journaled prefix took — the plan-cache decision (miss /
+        fallback / compiled replay) is part of the history being
+        replayed, so it must not be re-decided against today's cache
+        state.  Raises :class:`ResumeDeviation` when the branch can no
+        longer be taken (``resume_run`` falls back to a full rerun)."""
+        from ..core.events import PlanCacheMiss, PlanFallback, RunStarted
+        from ..durable.resume import ResumeDeviation
+        attempt = segment.resumes + 1
+        first = segment.events[0]
+        if isinstance(first, PlanFallback):
+            return self._execute_once(spec, on_event, key=first.key,
+                                      fallback=(first.reason, first.stage),
+                                      resume=segment, attempt=attempt)
+        if isinstance(first, PlanCacheMiss):
+            return self._execute_once(spec, on_event, key=first.key,
+                                      resume=segment, attempt=attempt)
+        if isinstance(first, RunStarted) and first.pattern != spec.pattern:
+            # the prefix is a compiled-plan replay: resuming needs the
+            # same graph back
+            graph = (self.plan_cache.get(pk)
+                     if self.plan_cache is not None and pk else None)
+            if graph is None:
+                raise ResumeDeviation("compiled graph no longer cached")
+            from ..plans.execute import PlanDeviation
+            try:
+                return self._execute_once(spec, on_event, graph=graph,
+                                          key=pk, resume=segment,
+                                          attempt=attempt)
+            except PlanDeviation as e:
+                raise ResumeDeviation(
+                    f"plan replay deviated on resume: {e.reason}") from e
+        return self._execute_once(spec, on_event, resume=segment,
+                                  attempt=attempt)
 
     def _execute_once(self, spec: RunSpec,
                       on_event: Optional[Callable] = None,
                       graph: Any = None, key: Optional[str] = None,
-                      fallback: Optional[Tuple[str, int]] = None) -> RunResult:
+                      fallback: Optional[Tuple[str, int]] = None,
+                      resume: Any = None, attempt: int = 0) -> RunResult:
         app = APPS[spec.app]
         world = World(seed=stable_world_seed(spec))
         backend = create_deployment(spec.deployment)
@@ -235,24 +299,84 @@ class Session:
             deviation: Tuple = (PlanDeviation,)
         else:
             deviation = ()
-        if key is not None and graph is None:
-            from ..core.events import PlanCacheMiss, PlanFallback
-            if fallback is not None:
-                runner.emit(PlanFallback(t=world.clock.now(), key=key,
-                                         reason=fallback[0],
-                                         stage=fallback[1]))
-            else:
-                runner.emit(PlanCacheMiss(t=world.clock.now(), key=key))
+
+        # durable-execution instrumentation — subscriber order matters:
+        #   1. replay cursor: verifies each re-emitted prefix event BEFORE
+        #      the journal writer sees it (a deviating event must not be
+        #      appended) and snapshots the Eq. 2 FaaS cost at the resume
+        #      boundary;
+        #   2. journal writer: appends the (verified) event to disk;
+        #   3. crash guard: an injected kill fires AFTER the event is
+        #      journaled, so a crashed segment ends exactly at its last
+        #      committed event.
+        if resume is not None:
+            from ..durable.resume import ReplayCursor, ResumeDeviation
+            boundary: dict = {}
+            cursor = ReplayCursor(
+                resume.events,
+                on_boundary=lambda: boundary.setdefault(
+                    "faas_cost", backend.cost()))
+            runner.subscribe(cursor.check)
+            deviation = deviation + (ResumeDeviation,)
+        jw = None
+        if self.journal is not None:
+            jkey = self.journal.key_for(spec)
+            if jkey is not None:
+                jw = (self.journal.resume_writer(resume)
+                      if resume is not None
+                      else self.journal.begin(jkey, spec))
+                runner.subscribe(jw.append)
+        n_committed = len(resume.events) if resume is not None else 0
+        crash_at = backend.crash_point(world, attempt)
+        if crash_at is not None and crash_at > n_committed:
+            # crash only in live territory: a platform cannot kill work
+            # that is already committed history (the replayed prefix);
+            # and a kill landing on the terminal event arrived after the
+            # run already completed-and-committed — no crash (same rule
+            # as a draw beyond the run's natural length)
+            from ..core.events import RunCompleted
+            counter = {"n": 0}
+
+            def _crash_guard(event):
+                counter["n"] += 1
+                if (counter["n"] == crash_at
+                        and not isinstance(event, RunCompleted)):
+                    backend.record_crash()
+                    raise RunAborted(
+                        f"injected platform crash at event {crash_at}")
+
+            runner.subscribe(_crash_guard)
 
         t0 = world.clock.now()
         failure = ""
+        aborted = False
         try:
+            if key is not None and graph is None:
+                from ..core.events import PlanCacheMiss, PlanFallback
+                if fallback is not None:
+                    runner.emit(PlanFallback(t=world.clock.now(), key=key,
+                                             reason=fallback[0],
+                                             stage=fallback[1]))
+                else:
+                    runner.emit(PlanCacheMiss(t=world.clock.now(), key=key))
             outcome = runner.run(task)
         except deviation:
-            # compiled replay diverged: release the environment and let
-            # _execute re-run the spec with full planning
+            # compiled/journal replay diverged: drop the writer's
+            # unfsynced tail, release the environment and let the caller
+            # re-run the spec from scratch
+            if jw is not None:
+                jw.abort()
             backend.teardown()
             raise
+        except RunAborted as e:
+            # simulated platform death: the journal keeps only what
+            # survived the last fsync barrier; the result is partial and
+            # must never be cached (see Session.execute)
+            if jw is not None:
+                jw.abort()
+            outcome = RunOutcome(completed=False)
+            failure = f"aborted: {e}"
+            aborted = True
         except Exception as e:  # pattern-level crash counts as failed run
             outcome = RunOutcome(completed=False)
             failure = f"{type(e).__name__}: {e}"
@@ -282,16 +406,26 @@ class Session:
                                          stages=len(g.stages),
                                          nodes=len(g.nodes),
                                          dyn_nodes=g.dyn_nodes))
+        if jw is not None and not jw.closed:
+            jw.close()
         backend.teardown()
 
+        extras = {"world": world, "policy": policy, "outcome": outcome,
+                  "spec": spec, "events": runner.events}
+        if aborted:
+            extras["aborted"] = True
+        if resume is not None:
+            from ..durable.resume import recovered_stats
+            info = recovered_stats(resume.events)
+            info["attempt"] = attempt
+            info["recovered_faas_cost"] = boundary.get("faas_cost", 0.0)
+            extras["resume"] = info
         return RunResult(app=spec.app, instance=spec.instance,
                          pattern=spec.pattern, deployment=spec.deployment,
                          success=success, total_latency=total_latency,
                          trace=trace, artifact_path=path, artifact=artifact,
                          faas_cost=backend.cost(), failure_reason=failure,
-                         extras={"world": world, "policy": policy,
-                                 "outcome": outcome, "spec": spec,
-                                 "events": runner.events})
+                         extras=extras)
 
     def _combined_observer(self, extra: Optional[Callable]):
         subs = [fn for fn in (self.on_event, extra) if fn is not None]

@@ -174,6 +174,29 @@ class EngineStepped(RunEvent):
 # ---------------------------------------------------------------------------
 # wire protocol
 
+# Explicit wire-schema version, stamped on every ``to_wire`` payload as
+# ``"v"``.  Bump WIRE_VERSION on any *semantic* change to event payloads
+# (a renamed field, changed units, changed truncation); raise
+# MIN_WIRE_VERSION when the change is incompatible enough that older
+# stamped payloads must be REJECTED rather than parsed-with-defaults.
+# Durable journal segments (:mod:`repro.durable.journal`) additionally
+# carry the version in their header, so a whole segment from an older
+# schema is detected up front instead of mis-parsed event by event.
+#
+# v2 == the schema as of the plan-compiler PR (ToolEvent carries
+# args/result); unstamped payloads (written before versioning existed)
+# are treated as v-unknown and parsed with the historical tolerant
+# behavior.
+WIRE_VERSION = 2
+MIN_WIRE_VERSION = 2
+
+
+class WireVersionError(ValueError):
+    """A stamped wire payload predates :data:`MIN_WIRE_VERSION` — its
+    field semantics can no longer be trusted, so it must be rejected
+    (detected), not silently parsed with defaults."""
+
+
 _EVENT_TYPES: Dict[str, type] = {
     cls.__name__: cls
     for cls in (RunStarted, StageStarted, PlanProduced, LLMCompleted,
@@ -203,9 +226,11 @@ def _jsonable(value: Any) -> Any:
 
 
 def to_wire(event: RunEvent) -> Dict[str, Any]:
-    """Serialize one event to a JSON-safe dict (``type`` + fields)."""
+    """Serialize one event to a JSON-safe dict (``type`` + ``v`` +
+    fields)."""
     d = _jsonable(dataclasses.asdict(event))
     d["type"] = type(event).__name__
+    d["v"] = WIRE_VERSION
     return d
 
 
@@ -220,9 +245,20 @@ def _known_fields(cls: type, d: Dict[str, Any]) -> Dict[str, Any]:
 
 
 def from_wire(d: Dict[str, Any]) -> RunEvent:
-    """Inverse of :func:`to_wire`. Raises ``KeyError`` on unknown type;
-    unknown *fields* of a known type are ignored (forward compat)."""
+    """Inverse of :func:`to_wire`.
+
+    Raises ``KeyError`` on unknown type and :class:`WireVersionError`
+    on a payload stamped with a schema older than
+    :data:`MIN_WIRE_VERSION`; unknown *fields* of a known type are
+    ignored (forward compat — a NEWER peer's extra gauges parse fine),
+    and unstamped payloads (pre-versioning) keep the historical
+    tolerant behavior."""
     d = dict(d)
+    v = d.pop("v", None)
+    if v is not None and v < MIN_WIRE_VERSION:
+        raise WireVersionError(
+            f"wire payload schema v{v} predates the oldest supported "
+            f"schema v{MIN_WIRE_VERSION} (current v{WIRE_VERSION})")
     name = d.pop("type")
     try:
         cls = _EVENT_TYPES[name]

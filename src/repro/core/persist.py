@@ -1,0 +1,87 @@
+"""Shared disk-persistence primitives.
+
+Every disk-backed store in the repo follows the same conventions — the
+run cache (:mod:`repro.apps.cache`), the plan cache
+(:mod:`repro.plans.cache`) and the durable run journal
+(:mod:`repro.durable.journal`):
+
+  * **atomic writes** — serialize to a sibling temp file, then
+    ``os.replace`` so readers never observe a partial entry;
+  * **corrupt-entry skip** — a corrupt, foreign or schema-drifted file
+    is treated as a miss on load, never an error (``TypeError`` covers
+    dataclass kwargs that changed across versions);
+  * **best-effort mode** — persistence is an optimization for the
+    caches: a full disk must not fail a completed run.
+
+This module is that convention, factored out so three copies cannot
+drift.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Callable, Dict, Tuple
+
+# The exception set that means "this disk entry cannot be trusted":
+# OSError (I/O), ValueError (bad JSON / bad payload values), KeyError
+# (missing payload fields), TypeError (dataclass kwargs drifted across
+# schema versions).  Loaders skip entries raising any of these.
+CORRUPT_ENTRY_ERRORS = (OSError, KeyError, ValueError, TypeError)
+
+
+def atomic_write_text(path: str, text: str,
+                      best_effort: bool = False) -> bool:
+    """Write ``text`` to ``path`` atomically (temp file + ``os.replace``
+    — no reader ever sees a partial file).  The temp name carries the
+    thread ident so concurrent writers of the same key don't collide;
+    last writer wins.
+
+    ``best_effort=True`` swallows ``OSError`` and returns ``False``
+    instead (cache-style persistence must not fail the caller);
+    otherwise the error propagates.  Returns ``True`` on success."""
+    tmp = f"{path}.tmp.{threading.get_ident()}"
+    try:
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)   # atomic: no partial reads
+        return True
+    except OSError:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        if not best_effort:
+            raise
+        return False
+
+
+def atomic_write_json(path: str, payload: Any,
+                      best_effort: bool = False) -> bool:
+    """:func:`atomic_write_text` for a JSON payload."""
+    return atomic_write_text(path, json.dumps(payload),
+                             best_effort=best_effort)
+
+
+def load_json_dir(cache_dir: str,
+                  decode: Callable[[str, Any], Tuple[str, Any]],
+                  prefix: str = "", suffix: str = ".json"
+                  ) -> Dict[str, Any]:
+    """Load every ``prefix*suffix`` JSON file under ``cache_dir`` through
+    ``decode(stem, payload) -> (key, value)``, skipping entries that
+    raise any :data:`CORRUPT_ENTRY_ERRORS` (corrupt, foreign, or written
+    by a different schema version).  Deterministic order (sorted names);
+    later files win on key collision."""
+    out: Dict[str, Any] = {}
+    for name in sorted(os.listdir(cache_dir)):
+        if not (name.startswith(prefix) and name.endswith(suffix)):
+            continue
+        stem = name[len(prefix):len(name) - len(suffix)]
+        try:
+            with open(os.path.join(cache_dir, name)) as f:
+                payload = json.load(f)
+            key, value = decode(stem, payload)
+            out[key] = value
+        except CORRUPT_ENTRY_ERRORS:
+            continue
+    return out

@@ -74,6 +74,18 @@ from .policies import HedgePolicy, RetryPolicy
 TOOL_RESULT_WIRE_LIMIT = 6000
 
 
+class RunAborted(RuntimeError):
+    """The simulated platform died mid-run (injected crash — see
+    ``FaultPlan.crash_rate`` in :mod:`repro.traffic.faults`).
+
+    Unlike an ordinary pattern failure, an aborted run emits NO
+    terminating ``RunCompleted``: a dead process writes nothing.  That
+    is what lets the durable run journal
+    (:mod:`repro.durable.journal`) distinguish an interrupted segment
+    (resumable) from a completed-but-failed one (not resumable —
+    deterministic failures would fail again)."""
+
+
 def stable_fingerprint(config) -> str:
     """Stable digest of a config dataclass (sorted-JSON SHA-256, 16 hex
     chars) — the cache-invalidation primitive shared by ``PatternConfig``
@@ -314,6 +326,11 @@ class AgentRuntime:
                              or self.pattern, task=task))
         try:
             outcome = self._run(task)
+        except RunAborted:
+            # simulated platform death: the event stream just STOPS —
+            # no termination event, exactly like a real dead process
+            # (the journal's interrupted-segment detection rests on it)
+            raise
         except Exception:
             # pattern-level crash: still terminate the event stream so
             # live observers (RunMonitor) don't leak in-flight runs

@@ -1,0 +1,30 @@
+"""Durable execution: event-sourced run journal + crash-resume.
+
+The subsystem that turns the typed ``RunEvent`` stream into durable
+state (ROADMAP "Durable, resumable runs"):
+
+  * :mod:`repro.durable.journal` — append-only, wire-serialized JSONL
+    segments, one per run, keyed by the run-cache content address;
+    version-gated headers, fsync-batched appends, corrupt-tail
+    truncation on open;
+  * :mod:`repro.durable.resume` — ``resume_run``: verified
+    deterministic re-execution of the journaled prefix, live
+    continuation from the first unfinished step, recovered-cost
+    accounting.  Parity contract: interrupted + resumed ==
+    uninterrupted, bit-identical.
+
+See ``docs/DURABLE.md``.
+"""
+from .journal import (JOURNAL_FORMAT, JOURNAL_VERSION, JournalError,
+                      JournalReader, JournalVersionError, JournalWriter,
+                      RunJournal, Segment)
+from .resume import (ReplayCursor, ResumeDeviation, billed_cost,
+                     recovered_cost, recovered_stats, recovered_tokens,
+                     resume_run)
+
+__all__ = [
+    "JOURNAL_FORMAT", "JOURNAL_VERSION", "JournalError", "JournalReader",
+    "JournalVersionError", "JournalWriter", "ReplayCursor",
+    "ResumeDeviation", "RunJournal", "Segment", "billed_cost",
+    "recovered_cost", "recovered_stats", "recovered_tokens", "resume_run",
+]

@@ -1,0 +1,306 @@
+"""Event-sourced run journal: one append-only JSONL segment per run.
+
+The durable half of the subsystem (see :mod:`repro.durable.resume` for
+the recovery half, ``docs/DURABLE.md`` for the full story).  A
+:class:`RunJournal` is a directory of *segments*, one per run, keyed by
+the run-cache content address (:func:`repro.apps.cache.spec_fingerprint`
+— spec identity + pattern/deployment/serving config fingerprints).
+Wired in as ``Session(journal=RunJournal(dir=...))``, every event of
+every pattern x deployment x llm combination is journaled for free via
+the runtime's subscriber list.
+
+Segment layout (``run_<key>.jsonl``)::
+
+    {"format": "repro-run-journal", "version": 1, "wire_version": 2,
+     "key": "...", "spec": {...}}          <- header (version-gated)
+    {"type": "RunStarted", "v": 2, ...}    <- one wire event per line
+    {"type": "ToolInvoked", "v": 2, ...}
+    {"resume": 1}                          <- a resume re-opened the segment
+    {"type": "ToolInvoked", "v": 2, ...}   <- ... and appended the suffix
+
+Durability model — *atomic fsync-batched appends*: the writer buffers
+appends and flushes + ``fsync``\\ s every ``fsync_batch`` events (and on
+close).  A simulated platform death (:class:`repro.core.runtime.
+RunAborted`) calls :meth:`JournalWriter.abort`, which DROPS the
+unflushed buffer — exactly the host-failure semantics of a real
+append-only log: everything up to the last fsync barrier survives, the
+tail is lost.  A torn write at the physical tail is handled on open:
+:meth:`JournalReader.read` parses until the first corrupt line and
+reports the valid prefix (corrupt-tail truncation); re-opening the
+segment for a resume atomically rewrites that valid prefix first
+(:mod:`repro.core.persist` conventions).
+
+A segment whose last event is ``RunCompleted`` is *complete* (the run
+finished, successfully or not — deterministic failures are not
+resumable, they would fail again).  Anything else is an *interrupted*
+run: :meth:`RunJournal.interrupted` lists them, and the traffic driver
+resumes journaled-but-dead runs it executed itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import IO, Any, Dict, List, Optional
+
+from ..core.events import (WIRE_VERSION, RunCompleted, RunEvent,
+                           WireVersionError, from_wire, to_wire)
+from ..core.persist import CORRUPT_ENTRY_ERRORS, atomic_write_text
+
+JOURNAL_FORMAT = "repro-run-journal"
+JOURNAL_VERSION = 1
+
+
+class JournalError(ValueError):
+    """A segment exists but cannot be trusted (foreign file, bad
+    header).  Callers treat it as no-journal: rerun from scratch."""
+
+
+class JournalVersionError(JournalError):
+    """A segment's header carries an older journal-format or wire-schema
+    version — detected up front, never mis-parsed event by event."""
+
+
+def spec_to_wire(spec) -> Dict[str, Any]:
+    """The header's human-readable spec identity (the *key* is the
+    authoritative address; this is for debuggability and tooling)."""
+    return {"app": spec.app, "instance": spec.instance,
+            "pattern": spec.pattern, "deployment": spec.deployment,
+            "llm": spec.llm, "seed": spec.seed, "priority": spec.priority}
+
+
+@dataclasses.dataclass
+class Segment:
+    """One parsed journal segment."""
+    key: str
+    path: str
+    header: Dict[str, Any]
+    events: List[RunEvent]
+    resumes: int          # resume markers seen (= restart attempts so far)
+    truncated: bool       # a corrupt/torn tail was dropped on read
+    valid_bytes: int      # byte offset of the end of the last intact line
+
+    @property
+    def complete(self) -> bool:
+        """The run terminated (its stream ends with ``RunCompleted``) —
+        nothing to resume."""
+        return bool(self.events) and isinstance(self.events[-1],
+                                                RunCompleted)
+
+
+class JournalWriter:
+    """Append-only writer for ONE run's segment.  Not thread-safe: one
+    run, one writer (the traffic driver is single-threaded asyncio; for
+    ``execute_many`` give concurrent identical specs distinct seeds, as
+    every workload generator here does).
+
+    ``skip`` committed events are silently dropped on append — a
+    resumed run re-emits its journaled prefix during replay, and those
+    events are already on disk."""
+
+    def __init__(self, f: IO[str], path: str, skip: int = 0,
+                 fsync_batch: int = 8):
+        self._f = f
+        self.path = path
+        self._skip = skip
+        self._batch = max(1, fsync_batch)
+        self._buf: List[str] = []
+        self.appended = 0       # live events accepted (skips excluded)
+        self.closed = False
+
+    def append(self, event: RunEvent) -> None:
+        if self.closed:
+            return
+        if self._skip > 0:
+            self._skip -= 1
+            return
+        self._buf.append(json.dumps(to_wire(event)))
+        self.appended += 1
+        if len(self._buf) >= self._batch:
+            self._fsync()
+
+    def _fsync(self) -> None:
+        if self._buf:
+            self._f.write("\n".join(self._buf) + "\n")
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._buf.clear()
+
+    def close(self) -> None:
+        """Normal end of run: flush + fsync everything."""
+        if not self.closed:
+            self._fsync()
+            self._f.close()
+            self.closed = True
+
+    def abort(self) -> None:
+        """Simulated platform death: the unfsynced buffer is LOST (the
+        journal keeps only what survived the last fsync barrier), so a
+        resume re-executes the tail the crash swallowed."""
+        if not self.closed:
+            self._buf.clear()
+            self._f.close()
+            self.closed = True
+
+
+class JournalReader:
+    """Parses segments with corrupt-tail truncation: events are read
+    line by line until the first unparseable line (torn write, corrupt
+    middle, foreign junk); everything from that line on is dropped and
+    the segment is flagged ``truncated`` — the valid prefix is still a
+    committed, resumable history."""
+
+    def __init__(self, path: str, key: str):
+        self.path = path
+        self.key = key
+
+    def read(self) -> Segment:
+        with open(self.path, "rb") as f:
+            raw = f.read()
+        lines = raw.split(b"\n")
+        if not lines or not lines[0]:
+            raise JournalError(f"empty journal segment {self.path}")
+        header = self._gate_header(lines[0])
+        events: List[RunEvent] = []
+        resumes = 0
+        offset = len(lines[0]) + 1
+        truncated = False
+        for line in lines[1:]:
+            if not line:        # blank filler (or the trailing split)
+                offset += 1
+                continue
+            try:
+                d = json.loads(line.decode("utf-8"))
+                if "resume" in d and "type" not in d:
+                    resumes = max(resumes, int(d["resume"]))
+                else:
+                    events.append(from_wire(d))
+            except CORRUPT_ENTRY_ERRORS + (WireVersionError,):
+                # torn tail or corrupt middle: the history after this
+                # point cannot be ordered/trusted — truncate here
+                truncated = True
+                break
+            offset += len(line) + 1
+        return Segment(key=self.key, path=self.path, header=header,
+                       events=events, resumes=resumes,
+                       truncated=truncated,
+                       valid_bytes=min(offset, len(raw)))
+
+    def _gate_header(self, line: bytes) -> Dict[str, Any]:
+        try:
+            header = json.loads(line.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError):
+            raise JournalError(
+                f"unreadable journal header in {self.path}") from None
+        if not isinstance(header, dict) \
+                or header.get("format") != JOURNAL_FORMAT:
+            raise JournalError(f"{self.path} is not a run-journal segment")
+        if header.get("version") != JOURNAL_VERSION:
+            raise JournalVersionError(
+                f"journal segment version {header.get('version')!r} != "
+                f"{JOURNAL_VERSION} in {self.path}")
+        if header.get("wire_version", 0) < WIRE_VERSION:
+            raise JournalVersionError(
+                f"journal segment wire schema "
+                f"v{header.get('wire_version')!r} predates current "
+                f"v{WIRE_VERSION} in {self.path}")
+        return header
+
+
+class RunJournal:
+    """Directory of per-run segments; the object a ``Session`` carries.
+
+    ``fsync_batch=1`` fsyncs every event (nothing lost on crash, max
+    I/O); larger batches trade a re-executed tail on resume for fewer
+    fsyncs — the classic group-commit knob."""
+
+    def __init__(self, dir: str, fsync_batch: int = 8):
+        self.dir = dir
+        self.fsync_batch = fsync_batch
+        os.makedirs(dir, exist_ok=True)
+
+    # -- addressing -----------------------------------------------------
+    def key_for(self, spec) -> Optional[str]:
+        """The run-cache content address, or None for unjournalable
+        specs (custom ``backend_factory``: no stable fingerprint)."""
+        from ..apps.cache import spec_fingerprint
+        return spec_fingerprint(spec)
+
+    def path_for(self, key: str) -> str:
+        return os.path.join(self.dir, f"run_{key}.jsonl")
+
+    # -- reading --------------------------------------------------------
+    def read(self, key: str) -> Optional[Segment]:
+        """Parse one segment (corrupt-tail truncation applied).  Returns
+        None when no segment exists; raises :class:`JournalError` /
+        :class:`JournalVersionError` on untrustworthy ones."""
+        path = self.path_for(key)
+        if not os.path.exists(path):
+            return None
+        return JournalReader(path, key).read()
+
+    def keys(self) -> List[str]:
+        return sorted(name[len("run_"):-len(".jsonl")]
+                      for name in os.listdir(self.dir)
+                      if name.startswith("run_")
+                      and name.endswith(".jsonl"))
+
+    def interrupted(self) -> List[str]:
+        """Keys of journaled-but-dead runs: segments with committed
+        events whose stream does not terminate in ``RunCompleted``."""
+        out = []
+        for key in self.keys():
+            try:
+                seg = self.read(key)
+            except JournalError:
+                continue
+            if seg is not None and seg.events and not seg.complete:
+                out.append(key)
+        return out
+
+    # -- writing --------------------------------------------------------
+    def begin(self, key: str, spec) -> JournalWriter:
+        """Open a FRESH segment for a new execution of ``spec``
+        (truncates any previous segment under this key — a re-executed
+        run re-journals from scratch)."""
+        path = self.path_for(key)
+        f = open(path, "w")
+        f.write(json.dumps({"format": JOURNAL_FORMAT,
+                            "version": JOURNAL_VERSION,
+                            "wire_version": WIRE_VERSION,
+                            "key": key,
+                            "spec": spec_to_wire(spec)}) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+        return JournalWriter(f, path, skip=0, fsync_batch=self.fsync_batch)
+
+    def resume_writer(self, segment: Segment) -> JournalWriter:
+        """Re-open an interrupted segment to continue it: repair a torn
+        tail (atomic rewrite of the valid prefix), append a resume
+        marker, and skip the ``len(segment.events)`` committed events
+        the replay will re-emit."""
+        if segment.truncated:
+            # corrupt-tail truncation on open: atomically rewrite the
+            # intact prefix so the appended suffix lands on a clean line
+            # boundary (a plain os.truncate could die halfway too)
+            with open(segment.path, "rb") as f:
+                intact = f.read(segment.valid_bytes).decode("utf-8")
+            atomic_write_text(segment.path, intact)
+        f = open(segment.path, "a")
+        f.write(json.dumps({"resume": segment.resumes + 1,
+                            "committed": len(segment.events)}) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+        return JournalWriter(f, segment.path, skip=len(segment.events),
+                             fsync_batch=self.fsync_batch)
+
+    # -- maintenance ----------------------------------------------------
+    def discard(self, key: str) -> bool:
+        try:
+            os.remove(self.path_for(key))
+            return True
+        except OSError:
+            return False
+
+    def __len__(self) -> int:
+        return len(self.keys())

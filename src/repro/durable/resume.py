@@ -1,0 +1,175 @@
+"""Crash-resume: continue an interrupted run from its journal.
+
+Recovery model — *deterministic re-execution with a verified replay
+cursor* (Temporal-style).  Runs here are deterministic functions of the
+spec: seeded world, seeded policies, virtual clock.  So a resume does
+not need to snapshot pattern state (stage lists, reflection summaries,
+plan-cache decisions); it re-enters the pattern from the top and lets
+the journaled prefix re-derive itself — every policy decision, latency
+draw and tool dispatch lands identically, rebuilding the simulated
+server-side state (downloaded PDFs, workspace files) the suffix depends
+on.  A :class:`ReplayCursor` subscribed to the runtime verifies each
+re-emitted event against the journal, wire-form for wire-form; any
+mismatch raises :class:`ResumeDeviation` and the caller falls back to a
+full rerun (the same determinism check Temporal applies to workflow
+histories).  Past the last committed event, execution simply continues
+live — the runtime is re-entered at the first unfinished step — and the
+journal writer appends the suffix (a second crash resumes further).
+
+Accounting: the replayed prefix is *recovered*, not re-billed.  In a
+production durable executor the journal serves the prefix's LLM/tool
+results directly (no tokens, no invocations); our simulation substitutes
+local re-derivation to rebuild environment state, and prices it the
+same — zero.  :func:`resume_run` reconstructs the prefix's progress
+through ``derive_trace`` and reports it under
+``result.extras["resume"]`` (events replayed, tokens/cost recovered,
+Eq. 2 FaaS cost at the resume boundary); :func:`billed_cost` is the
+run's cost net of recovery — what the resume strategy actually pays.
+
+The parity contract this module is tested against:
+**interrupted + resumed == uninterrupted, bit-identical** — the full
+event sequence and the artifact of a killed-and-resumed run equal the
+uninterrupted run's, across patterns and deployments.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core.events import RunEvent, derive_trace, to_wire
+from ..core.metrics import RunResult
+from .journal import JournalError, RunJournal, Segment
+
+
+class ResumeDeviation(RuntimeError):
+    """Replay re-derived an event that differs from the journaled one —
+    the journal can no longer be trusted as this run's history (config
+    changed, cache state diverged, non-determinism crept in).  Callers
+    fall back to a fresh full rerun."""
+
+    def __init__(self, reason: str, index: int = -1):
+        super().__init__(f"replay deviated at event {index}: {reason}")
+        self.reason = reason
+        self.index = index
+
+
+class ReplayCursor:
+    """Verifies a resumed run's re-emitted events against the journaled
+    prefix.  Subscribe :meth:`check` on the runtime *before* the journal
+    writer: a deviating event must raise before it is appended.
+
+    ``on_boundary`` fires exactly once, the moment the last committed
+    event has been verified — i.e. at the resume boundary, before any
+    live work — so the caller can snapshot boundary state (the Eq. 2
+    FaaS cost accrued by the replayed prefix)."""
+
+    def __init__(self, prefix: List[RunEvent],
+                 on_boundary: Optional[Callable[[], None]] = None):
+        self.prefix = prefix
+        self.i = 0
+        self._on_boundary = on_boundary
+        if not prefix and on_boundary is not None:
+            on_boundary()
+
+    @property
+    def live(self) -> bool:
+        return self.i >= len(self.prefix)
+
+    def check(self, event: RunEvent) -> None:
+        if self.live:
+            return
+        expected = self.prefix[self.i]
+        # wire-form comparison: journal events round-tripped through
+        # JSON (tuples became lists), live events have not — to_wire
+        # canonicalizes both
+        if to_wire(event) != to_wire(expected):
+            raise ResumeDeviation(
+                f"expected {type(expected).__name__}, re-derived "
+                f"{type(event).__name__}", index=self.i)
+        self.i += 1
+        if self.live and self._on_boundary is not None:
+            self._on_boundary()
+
+
+def recovered_stats(prefix: List[RunEvent]) -> Dict[str, Any]:
+    """What the journaled prefix is worth: replay it through
+    ``derive_trace`` and read off the recovered progress — the tokens,
+    Eq. 1 LLM cost and tool invocations a rerun would pay again."""
+    trace = derive_trace(prefix)
+    return {
+        "replayed_events": len(prefix),
+        "recovered_input_tokens": trace.input_tokens,
+        "recovered_output_tokens": trace.output_tokens,
+        "recovered_llm_cost": trace.llm_cost,
+        "recovered_tool_calls": len(trace.tool_events),
+    }
+
+
+def recovered_cost(result: RunResult) -> float:
+    """Total recovered cost (Eq. 1 + Eq. 2) of a resumed result, 0.0
+    for a fresh run."""
+    info = result.extras.get("resume")
+    if not info:
+        return 0.0
+    return (info.get("recovered_llm_cost", 0.0)
+            + info.get("recovered_faas_cost", 0.0))
+
+
+def recovered_tokens(result: RunResult) -> int:
+    info = result.extras.get("resume")
+    if not info:
+        return 0
+    return (info.get("recovered_input_tokens", 0)
+            + info.get("recovered_output_tokens", 0))
+
+
+def billed_cost(result: RunResult) -> float:
+    """What this attempt actually pays: intrinsic run cost net of the
+    journal-recovered prefix.  Equals ``result.total_cost`` for fresh
+    runs."""
+    return result.total_cost - recovered_cost(result)
+
+
+def resume_run(session, spec, on_event: Optional[Callable] = None,
+               attempt: Optional[int] = None) -> RunResult:
+    """Resume ``spec`` from the session's journal.
+
+    Reads the run's segment (corrupt tail truncated on open), replays
+    the committed prefix through the verified re-execution path, and
+    continues live from the first unfinished step.  Falls back to a
+    plain ``session.execute`` — a fresh, fully billed run — when there
+    is nothing to resume (no segment, empty, or complete), when the
+    segment is untrustworthy (:class:`JournalError`: foreign file,
+    older journal/wire schema), or when replay deviates
+    (:class:`ResumeDeviation`).
+
+    ``attempt`` is the caller's restart counter (the traffic driver's
+    crash count); it keys the fallback rerun's injected-crash draw.  A
+    crash before the first fsync barrier leaves an *empty* segment, so
+    the fallback MUST advance the attempt or a deterministic kill would
+    re-fire at the same event forever.  When not given, the segment's
+    own resume count (or 0) is used.
+
+    The returned result carries ``extras["resume"]`` telemetry on the
+    resume path (absent after a fallback rerun)."""
+    journal: Optional[RunJournal] = getattr(session, "journal", None)
+    if journal is None:
+        raise ValueError("resume_run needs a Session with a journal "
+                         "(Session(journal=RunJournal(dir=...)))")
+    key = journal.key_for(spec)
+    segment: Optional[Segment] = None
+    if key is not None:
+        try:
+            segment = journal.read(key)
+        except JournalError:
+            segment = None          # detected, not mis-parsed: rerun
+    if segment is None or not segment.events or segment.complete:
+        fallback_attempt = attempt if attempt is not None else (
+            segment.resumes + 1 if segment is not None
+            and not segment.complete else 0)
+        return session.execute(spec, on_event, attempt=fallback_attempt)
+    try:
+        return session._execute(spec, on_event, resume=segment)
+    except ResumeDeviation:
+        fallback_attempt = (attempt if attempt is not None
+                            else segment.resumes + 1)
+        return session.execute(spec, on_event, attempt=fallback_attempt)

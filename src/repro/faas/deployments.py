@@ -274,6 +274,19 @@ class DeploymentBackend:
             return self.env.platform.total_cost()
         return 0.0
 
+    # -- crash injection hooks (overridden by fault-plan wrappers,
+    #    repro.traffic.faults; no-ops for real deployments) -------------
+    def crash_point(self, world: World, attempt: int = 0) -> Optional[int]:
+        """Event index at which the platform kills this run mid-flight,
+        or ``None`` for no crash.  ``attempt`` is the durable-execution
+        restart counter (0 = first execution, k = k-th resume/rerun) —
+        keying the draw on it keeps each restart's fate an independent
+        sample instead of deterministically re-crashing forever."""
+        return None
+
+    def record_crash(self) -> None:
+        """Count one fired crash (telemetry; see ``FaultStats``)."""
+
 
 @dataclasses.dataclass(frozen=True)
 class RegisteredDeployment:

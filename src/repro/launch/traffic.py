@@ -89,6 +89,14 @@ def main() -> None:
                     help="enable RetryPolicy on the session")
     ap.add_argument("--hedge-after", type=float, default=0.0,
                     help="enable HedgePolicy at this deadline (virtual s)")
+    # durable execution (repro.durable)
+    ap.add_argument("--crash-rate", type=float, default=0.0,
+                    help="per-attempt platform-kill probability "
+                         "(crashed runs restart; with --journal-dir they "
+                         "resume from the journal)")
+    ap.add_argument("--journal-dir", default="",
+                    help="journal every run's event stream to this "
+                         "directory and resume crashed runs from it")
     # real (wall-clock) mode
     ap.add_argument("--real", action="store_true",
                     help="wall-clock mode: thread-pool dispatch at scaled "
@@ -101,12 +109,14 @@ def main() -> None:
 
     mix = _mix(args)
     stats = None
-    if args.transient_rate or args.throttle_rate or args.cold_start_rate:
+    if (args.transient_rate or args.throttle_rate or args.cold_start_rate
+            or args.crash_rate):
         plan = FaultPlan(transient_rate=args.transient_rate,
                          throttle_rate=args.throttle_rate,
                          cold_start_rate=args.cold_start_rate,
                          cold_start_s=args.cold_start_s,
-                         first_call_cold=False, seed=args.seed)
+                         first_call_cold=False, seed=args.seed,
+                         crash_rate=args.crash_rate)
         stats = FaultStats()
         faulty = []
         for s in mix:
@@ -119,19 +129,27 @@ def main() -> None:
     if args.plan_cache:
         from ..plans import PlanCache
         plan_cache = PlanCache()
+    journal = None
+    if args.journal_dir:
+        from ..durable import RunJournal
+        journal = RunJournal(args.journal_dir)
     session = Session(
         retry=RetryPolicy(max_attempts=8, backoff_s=0.25)
         if args.retry else None,
         hedge=HedgePolicy(hedge_after_s=args.hedge_after)
         if args.hedge_after > 0 else None,
-        plan_cache=plan_cache)
+        plan_cache=plan_cache,
+        journal=journal)
     wl = Workload(scenarios=mix, arrival=args.arrival, rate=args.rate,
                   n_requests=args.requests, seed=args.seed,
                   users=args.users, think_s=args.think,
                   unique_seeds=args.unique_seeds)
+    restart = ("resume" if journal is not None
+               else ("rerun" if args.crash_rate else "auto"))
     driver = TrafficDriver(session, max_concurrency=args.concurrency,
                            mode="real" if args.real else "virtual",
-                           time_scale=args.time_scale)
+                           time_scale=args.time_scale,
+                           restart=restart)
     report = driver.run(wl)
     agg = aggregate_report(report, SLOTarget())
 
@@ -145,6 +163,14 @@ def main() -> None:
           f"{rp['throughput_rps']:.2f} runs/s")
     if stats is not None:
         print(f"# injected faults: {stats.snapshot()}")
+    du = agg["overall"]["durability"]
+    if du["crashes"]:
+        print(f"# durability: {du['crashed_runs']} runs crashed "
+              f"({du['crashes']} kills) | {du['resumes']} resumed from "
+              f"journal | {du['replayed_events']} events replayed | "
+              f"{du['recovered_tokens']} tokens "
+              f"(${du['recovered_cost_usd']:.5f}) recovered | "
+              f"${du['sunk_cost_usd']:.5f} sunk")
     if report.plan_cache is not None:
         p = report.plan_cache
         print(f"# plan cache: {p['hits']} hits / {p['misses']} misses / "

@@ -1,6 +1,8 @@
 """Template-keyed plan cache: in-memory store with optional disk
-persistence, following the ``RunCache`` conventions (thread lock, atomic
-``os.replace`` writes, corrupt-file skip on load, hit/miss counters).
+persistence, built on the shared :mod:`repro.core.persist` conventions
+(thread lock, atomic ``os.replace`` writes, corrupt-file skip on load,
+hit/miss counters) that the run cache and the durable run journal also
+use.
 
 Keys are :func:`repro.plans.compile.plan_key` fingerprints — one entry
 per (app template, pattern config, deployment capabilities) combination,
@@ -10,11 +12,11 @@ stale one.
 """
 from __future__ import annotations
 
-import json
 import os
 import threading
 from typing import Dict, Optional
 
+from ..core.persist import atomic_write_json, load_json_dir
 from .compile import PlanGraph, graph_from_wire, graph_to_wire
 
 
@@ -82,19 +84,13 @@ class PlanCache:
         return os.path.join(self.cache_dir, f"plan_{key}.json")
 
     def _persist(self, key: str, graph: PlanGraph) -> None:
-        path = self._path(key)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump({"key": key, "graph": graph_to_wire(graph)}, fh)
-        os.replace(tmp, path)
+        atomic_write_json(self._path(key),
+                          {"key": key, "graph": graph_to_wire(graph)})
 
     def _load(self) -> None:
-        for name in sorted(os.listdir(self.cache_dir)):
-            if not (name.startswith("plan_") and name.endswith(".json")):
-                continue
-            try:
-                with open(os.path.join(self.cache_dir, name)) as fh:
-                    payload = json.load(fh)
-                self._store[payload["key"]] = graph_from_wire(payload["graph"])
-            except (OSError, ValueError, KeyError, TypeError):
-                continue  # corrupt or version-mismatched entry: recompile
+        # corrupt or version-mismatched entries are skipped: recompile
+        self._store.update(load_json_dir(
+            self.cache_dir,
+            lambda stem, payload: (payload["key"],
+                                   graph_from_wire(payload["graph"])),
+            prefix="plan_"))

@@ -41,6 +41,7 @@ from typing import List, Optional
 
 from ..core.events import LLMCompleted, RunHedged, ToolRetried
 from ..core.metrics import RunResult
+from ..durable.resume import billed_cost, resume_run
 from .workload import Arrival, Scenario, Workload
 
 
@@ -148,7 +149,10 @@ class TrafficRecord:
     start: float
     end: float
     ttft: Optional[float]        # arrival -> first LLM completion
-    result: RunResult
+    result: RunResult            # the FINAL attempt (post restarts)
+    crashes: int = 0             # injected platform deaths this run absorbed
+    resumes: int = 0             # restarts served from the journal
+    sunk_cost: float = 0.0       # billed cost of the dead attempts
 
     @property
     def queue_wait(self) -> float:
@@ -199,15 +203,21 @@ class TrafficReport:
 
 
 async def _replay_run(timeline: VirtualTimeline, result: RunResult,
-                      arrival: float) -> Optional[float]:
+                      arrival: float, skip: int = 0) -> Optional[float]:
     """Advance the shared timeline through the run's recorded per-step
     latencies (event-timestamp deltas, plus the tail to
-    ``total_latency``); returns the TTFT relative to ``arrival``."""
+    ``total_latency``); returns the TTFT relative to ``arrival``.
+
+    ``skip`` drops the first N events from the replay — a resumed run's
+    journal-recovered prefix costs the client no time (the durable
+    executor serves it from the log), so only the live suffix advances
+    the timeline."""
     events = result.extras.get("events") or []
     ttft = None
     if events:
-        t_prev = events[0].t
-        for ev in events:
+        skipped = 0 < skip <= len(events)
+        t_prev = events[skip - 1].t if skipped else events[0].t
+        for ev in (events[skip:] if skipped else events):
             dt = ev.t - t_prev
             t_prev = ev.t
             if dt > 0:
@@ -225,31 +235,66 @@ async def _replay_run(timeline: VirtualTimeline, result: RunResult,
 async def _run_on_timeline(session, timeline: VirtualTimeline,
                            sem: Optional[VirtualSemaphore],
                            index: int, scenario_name: str,
-                           spec) -> TrafficRecord:
+                           spec, restart: str = "none",
+                           max_restarts: int = 8,
+                           restart_delay_s: float = 0.0) -> TrafficRecord:
     """The shared core of every virtual-mode run: acquire capacity,
     execute, replay the recording, record.  Arrival is the timeline's
-    *now* — callers position it (arrival sleep / think time) first."""
+    *now* — callers position it (arrival sleep / think time) first.
+
+    ``restart`` is the recovery policy for journaled-but-dead runs
+    (aborted results): ``"none"`` leaves the crash as a failed record,
+    ``"rerun"`` re-executes from scratch (full re-bill, full re-replay),
+    ``"resume"`` continues from the session journal (prefix recovered,
+    only the live suffix re-plays on the timeline).  Each dead attempt's
+    *billed* cost accumulates into ``sunk_cost``; ``max_restarts`` caps
+    the loop."""
     t_arrive = timeline.now()
     if sem is not None:
         await sem.acquire()
+    crashes = resumes = 0
+    sunk = 0.0
     try:
         t_start = timeline.now()
         result = session.execute(spec)
         ttft = await _replay_run(timeline, result, t_arrive)
+        while (restart != "none" and result.extras.get("aborted")
+               and crashes < max_restarts):
+            crashes += 1
+            sunk += billed_cost(result)
+            if restart_delay_s > 0:
+                await timeline.sleep(restart_delay_s)
+            if restart == "resume":
+                result = resume_run(session, spec, attempt=crashes)
+            else:
+                result = session.execute(spec, attempt=crashes)
+            info = result.extras.get("resume")
+            skip = info.get("replayed_events", 0) if info else 0
+            if info:
+                resumes += 1
+            t = await _replay_run(timeline, result, t_arrive, skip=skip)
+            if ttft is None:
+                ttft = t
     finally:
         if sem is not None:
             sem.release()
     return TrafficRecord(index, scenario_name, spec, t_arrive, t_start,
-                         timeline.now(), ttft, result)
+                         timeline.now(), ttft, result,
+                         crashes=crashes, resumes=resumes, sunk_cost=sunk)
 
 
 async def _one(session, timeline: VirtualTimeline,
                sem: Optional[VirtualSemaphore],
-               arrival: Arrival) -> TrafficRecord:
+               arrival: Arrival, restart: str = "none",
+               max_restarts: int = 8,
+               restart_delay_s: float = 0.0) -> TrafficRecord:
     try:
         await timeline.sleep(arrival.t - timeline.now())
         return await _run_on_timeline(session, timeline, sem, arrival.index,
-                                      arrival.scenario.name, arrival.spec)
+                                      arrival.scenario.name, arrival.spec,
+                                      restart=restart,
+                                      max_restarts=max_restarts,
+                                      restart_delay_s=restart_delay_s)
     finally:
         timeline.unregister()
 
@@ -290,10 +335,19 @@ class TrafficDriver:
     times compressed by ``time_scale`` (arrival t lands at t/time_scale
     wall seconds) — the mode that exercises the ``jax-batched`` engine
     for real.
+
+    ``restart`` (virtual mode) is the crash-recovery policy applied to
+    aborted runs — ``"auto"`` resolves to ``"resume"`` when the session
+    carries a :class:`repro.durable.journal.RunJournal` and ``"none"``
+    otherwise; ``"rerun"`` restarts crashed runs from scratch (the
+    non-durable baseline the durability benchmark prices resume
+    against).
     """
 
     def __init__(self, session=None, max_concurrency: int = 0,
-                 mode: str = "virtual", time_scale: float = 1.0):
+                 mode: str = "virtual", time_scale: float = 1.0,
+                 restart: str = "auto", max_restarts: int = 8,
+                 restart_delay_s: float = 0.0):
         if mode not in ("virtual", "real"):
             raise ValueError(f"unknown mode {mode!r}")
         # deferred: repro.apps.session imports this module lazily too
@@ -302,6 +356,15 @@ class TrafficDriver:
         self.max_concurrency = max_concurrency
         self.mode = mode
         self.time_scale = time_scale
+        if restart == "auto":
+            restart = ("resume"
+                       if getattr(self.session, "journal", None) is not None
+                       else "none")
+        if restart not in ("none", "rerun", "resume"):
+            raise ValueError(f"unknown restart policy {restart!r}")
+        self.restart = restart
+        self.max_restarts = max_restarts
+        self.restart_delay_s = restart_delay_s
 
     # -- entry point --------------------------------------------------------
     def run(self, workload: Workload) -> TrafficReport:
@@ -347,7 +410,11 @@ class TrafficDriver:
         arrivals = workload.arrivals()
         for _ in arrivals:
             timeline.register()
-        tasks = [asyncio.ensure_future(_one(self.session, timeline, sem, a))
+        tasks = [asyncio.ensure_future(
+                     _one(self.session, timeline, sem, a,
+                          restart=self.restart,
+                          max_restarts=self.max_restarts,
+                          restart_delay_s=self.restart_delay_s))
                  for a in arrivals]
         return list(await asyncio.gather(*tasks))
 
@@ -375,7 +442,10 @@ class TrafficDriver:
                     seed = workload.spec_seed(u * 1_000 + i)
                     out.append(await _run_on_timeline(
                         self.session, timeline, sem, sum(counts[:u]) + i,
-                        scenario.name, scenario.spec(seed)))
+                        scenario.name, scenario.spec(seed),
+                        restart=self.restart,
+                        max_restarts=self.max_restarts,
+                        restart_delay_s=self.restart_delay_s))
             finally:
                 timeline.unregister()
             return out

@@ -50,7 +50,17 @@ from ..mcp.protocol import METHOD_CALL_TOOL, McpRequest, McpResponse
 
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
-    """Rates and magnitudes of injected faults (per ``tools/call``)."""
+    """Rates and magnitudes of injected faults (per ``tools/call``).
+
+    ``crash_rate`` is per *run attempt*, not per call: with probability
+    ``crash_rate`` the platform kills the whole run mid-flight at a
+    drawn event index in ``[crash_min_events, crash_max_events]``
+    (uniform; a draw beyond the run's natural length means the crash
+    was scheduled after completion — no crash).  The kill is a
+    :class:`repro.core.runtime.RunAborted` raised after the event at
+    that index has been emitted (and therefore journaled, when a
+    durable journal observes the run), so a crashed run's journal
+    segment ends exactly at its last committed event."""
     transient_rate: float = 0.0
     transient_delay_s: float = 0.1    # time burned before the failure surfaces
     throttle_rate: float = 0.0
@@ -58,6 +68,9 @@ class FaultPlan:
     cold_start_rate: float = 0.0
     cold_start_s: float = 2.5
     first_call_cold: bool = True      # deterministic scale-to-zero start
+    crash_rate: float = 0.0           # per-attempt mid-run kill probability
+    crash_min_events: int = 3         # drawn kill index lower bound
+    crash_max_events: int = 40        # ... upper bound
     seed: int = 0
 
     def fingerprint(self) -> str:
@@ -73,12 +86,15 @@ class FaultStats:
         self.transient = 0
         self.throttled = 0
         self.cold_starts = 0
+        self.crashes = 0
         self.by_server: Dict[str, int] = {}
 
-    def record(self, kind: str, server: str) -> None:
+    def record(self, kind: str, server: Optional[str] = None) -> None:
         with self._lock:
             setattr(self, kind, getattr(self, kind) + 1)
-            if kind != "cold_starts":   # errors only: what retries see
+            # per-server: tool-call errors only — what retries see
+            # (cold starts are latency, crashes are run-level kills)
+            if server is not None and kind in ("transient", "throttled"):
                 self.by_server[server] = self.by_server.get(server, 0) + 1
 
     @property
@@ -90,12 +106,14 @@ class FaultStats:
             return {"transient": self.transient,
                     "throttled": self.throttled,
                     "cold_starts": self.cold_starts,
+                    "crashes": self.crashes,
                     "errors": self.transient + self.throttled,
                     "by_server": dict(self.by_server)}
 
     def reset(self) -> None:
         with self._lock:
-            self.transient = self.throttled = self.cold_starts = 0
+            self.transient = self.throttled = 0
+            self.cold_starts = self.crashes = 0
             self.by_server.clear()
 
 
@@ -165,6 +183,25 @@ class FaultyDeployment(DeploymentBackend):
 
     def cost(self) -> float:
         return self.inner.cost()
+
+    def crash_point(self, world: World, attempt: int = 0) -> Optional[int]:
+        """Draw this attempt's mid-run kill: with probability
+        ``plan.crash_rate``, the absolute event index at which the
+        platform dies.  Seeded by (plan seed, world seed, attempt) —
+        deterministic per run, independent of the transport fault
+        streams, and fresh per restart so a resumed/rerun attempt
+        doesn't deterministically re-crash at the same point."""
+        plan = self.plan
+        if plan.crash_rate <= 0:
+            return None
+        rng = random.Random(
+            f"crash/{plan.seed}/{world.seed}/{attempt}")
+        if rng.random() >= plan.crash_rate:
+            return None
+        return rng.randint(plan.crash_min_events, plan.crash_max_events)
+
+    def record_crash(self) -> None:
+        self.stats.record("crashes")
 
 
 def register_fault_plan(name: str, inner: str, plan: FaultPlan,

@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, List, Optional
 
+from ..durable.resume import billed_cost, recovered_cost, recovered_tokens
 from .driver import TrafficRecord, TrafficReport
 
 
@@ -80,6 +81,25 @@ def _aggregate(records: List[TrafficRecord],
         "resilience": {
             "retries": sum(r.retries for r in records),
             "hedges": sum(r.hedges for r in records),
+        },
+        "durability": {
+            # crash-recovery economics (repro.durable): crashes absorbed,
+            # journal resumes, and what recovery actually paid — sunk
+            # billed cost of dead attempts + the final attempt's cost net
+            # of the journal-recovered prefix
+            "crashes": sum(r.crashes for r in records),
+            "crashed_runs": sum(r.crashes > 0 for r in records),
+            "resumes": sum(r.resumes for r in records),
+            "replayed_events": sum(
+                (r.result.extras.get("resume") or {}).get(
+                    "replayed_events", 0) for r in records),
+            "recovered_tokens": sum(recovered_tokens(r.result)
+                                    for r in records),
+            "recovered_cost_usd": sum(recovered_cost(r.result)
+                                      for r in records),
+            "sunk_cost_usd": sum(r.sunk_cost for r in records),
+            "billed_cost_usd": sum(r.sunk_cost + billed_cost(r.result)
+                                   for r in records),
         },
         "slo": {
             "target": slo.describe(),

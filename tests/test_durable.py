@@ -1,0 +1,460 @@
+"""Durable execution tests: journal round-trips, corrupt-segment
+handling, version gates, the crash+resume parity matrix
+(interrupted + resumed == uninterrupted, bit-identical, across
+patterns x deployments), recovery economics, and the shared
+disk-persistence helpers the journal and both caches ride on."""
+import json
+import os
+
+import pytest
+
+from repro.apps.cache import RunCache, spec_fingerprint
+from repro.apps.session import RunSpec, Session
+from repro.core.events import (RunCompleted, WIRE_VERSION, derive_trace,
+                               to_wire)
+from repro.core.persist import (atomic_write_json, atomic_write_text,
+                                load_json_dir)
+from repro.durable import (JOURNAL_FORMAT, JOURNAL_VERSION, JournalError,
+                           JournalVersionError, RunJournal, billed_cost,
+                           recovered_cost, recovered_tokens, resume_run)
+from repro.traffic import (FaultPlan, Scenario, TrafficDriver, Workload,
+                           register_fault_plan)
+from test_event_wire import SAMPLES
+
+CRASH = FaultPlan(crash_rate=1.0, crash_min_events=6, crash_max_events=6,
+                  first_call_cold=False)
+NO_CRASH = FaultPlan(crash_rate=0.0, crash_min_events=6, crash_max_events=6,
+                     first_call_cold=False)
+
+
+def _twins(deployment):
+    """Register a crash twin + its no-crash control for ``deployment``;
+    both seed their World as the wrapped deployment (``world_alias``),
+    so they re-derive the identical run — the control IS the
+    uninterrupted ground truth of the crashed run."""
+    register_fault_plan(f"{deployment}+dcrash", deployment, CRASH)
+    register_fault_plan(f"{deployment}+dclean", deployment, NO_CRASH)
+    return f"{deployment}+dcrash", f"{deployment}+dclean"
+
+
+def _wire(result):
+    return [to_wire(e) for e in result.extras["events"]]
+
+
+# -- journal segments -------------------------------------------------------
+
+
+def test_segment_roundtrips_every_event_type(tmp_path):
+    """Writer -> disk -> reader round-trips one instance of EVERY
+    registered RunEvent type, and the read-back stream still derives a
+    full trace."""
+    journal = RunJournal(str(tmp_path), fsync_batch=3)
+    spec = RunSpec("web_search", "quantum", "agentx")
+    w = journal.begin("k" * 64, spec)
+    for ev in SAMPLES:
+        w.append(ev)
+    w.close()
+    seg = journal.read("k" * 64)
+    assert seg.events == SAMPLES
+    assert seg.resumes == 0 and not seg.truncated
+    assert not seg.complete          # SAMPLES doesn't END with RunCompleted
+    trace = derive_trace(seg.events)
+    assert trace.llm_events and trace.tool_events
+
+
+def test_segment_completeness_is_terminal_event(tmp_path):
+    journal = RunJournal(str(tmp_path), fsync_batch=1)
+    w = journal.begin("a" * 64, RunSpec("web_search", "quantum", "agentx"))
+    w.append(SAMPLES[0])
+    w.append(RunCompleted(t=9.0, completed=True, data={}))
+    w.close()
+    assert journal.read("a" * 64).complete
+    assert journal.interrupted() == []
+
+
+def test_abort_drops_unfsynced_buffer(tmp_path):
+    """Host-failure semantics: everything up to the last fsync barrier
+    survives, the buffered tail is lost."""
+    journal = RunJournal(str(tmp_path), fsync_batch=4)
+    w = journal.begin("b" * 64, RunSpec("web_search", "quantum", "agentx"))
+    for ev in SAMPLES[:6]:           # 4 fsynced, 2 buffered
+        w.append(ev)
+    w.abort()
+    seg = journal.read("b" * 64)
+    assert seg.events == SAMPLES[:4]
+    assert journal.interrupted() == ["b" * 64]
+
+
+def test_truncated_tail_is_dropped(tmp_path):
+    """A torn write at the physical tail: the valid prefix is still a
+    committed, resumable history."""
+    journal = RunJournal(str(tmp_path), fsync_batch=1)
+    w = journal.begin("c" * 64, RunSpec("web_search", "quantum", "agentx"))
+    for ev in SAMPLES[:5]:
+        w.append(ev)
+    w.close()
+    path = journal.path_for("c" * 64)
+    with open(path, "a") as f:
+        f.write('{"type": "ToolInvoked", "t": 9.9, "eve')   # torn write
+    seg = journal.read("c" * 64)
+    assert seg.truncated and seg.events == SAMPLES[:5]
+
+
+def test_corrupt_middle_line_truncates_rest(tmp_path):
+    """Corruption mid-segment: everything AFTER the bad line is dropped
+    too — an event stream with a hole in it cannot be trusted."""
+    journal = RunJournal(str(tmp_path), fsync_batch=1)
+    w = journal.begin("d" * 64, RunSpec("web_search", "quantum", "agentx"))
+    for ev in SAMPLES[:6]:
+        w.append(ev)
+    w.close()
+    path = journal.path_for("d" * 64)
+    lines = open(path).read().splitlines()
+    lines[3] = lines[3][: len(lines[3]) // 2]        # corrupt event #3
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    seg = journal.read("d" * 64)
+    assert seg.truncated
+    assert seg.events == SAMPLES[:2]                 # events after hole gone
+
+
+def test_resume_writer_repairs_torn_tail(tmp_path):
+    journal = RunJournal(str(tmp_path), fsync_batch=1)
+    w = journal.begin("e" * 64, RunSpec("web_search", "quantum", "agentx"))
+    for ev in SAMPLES[:4]:
+        w.append(ev)
+    w.close()
+    path = journal.path_for("e" * 64)
+    with open(path, "a") as f:
+        f.write('{"half a line')
+    seg = journal.read("e" * 64)
+    assert seg.truncated
+    w2 = journal.resume_writer(seg)
+    w2.append(SAMPLES[0])            # skipped (committed replay)
+    for ev in SAMPLES[:4]:
+        w2.append(ev)                # 3 more skips, then 1 live append
+    w2.close()
+    seg2 = journal.read("e" * 64)
+    assert not seg2.truncated
+    assert seg2.events == SAMPLES[:4] + [SAMPLES[3]]
+    assert seg2.resumes == 1
+
+
+def test_header_gates(tmp_path):
+    journal = RunJournal(str(tmp_path))
+    key = "f" * 64
+    path = journal.path_for(key)
+
+    def write_header(header):
+        with open(path, "w") as f:
+            f.write(json.dumps(header) + "\n")
+
+    write_header({"format": "something-else", "version": 1})
+    with pytest.raises(JournalError):
+        journal.read(key)
+    write_header({"format": JOURNAL_FORMAT, "version": JOURNAL_VERSION - 1,
+                  "wire_version": WIRE_VERSION})
+    with pytest.raises(JournalVersionError):
+        journal.read(key)
+    write_header({"format": JOURNAL_FORMAT, "version": JOURNAL_VERSION,
+                  "wire_version": WIRE_VERSION - 1})
+    with pytest.raises(JournalVersionError):
+        journal.read(key)
+    with open(path, "w") as f:
+        f.write("this is not even json\n")
+    with pytest.raises(JournalError):
+        journal.read(key)
+
+
+def test_discard_and_len(tmp_path):
+    journal = RunJournal(str(tmp_path), fsync_batch=1)
+    journal.begin("9" * 64, RunSpec("web_search", "quantum", "agentx")).close()
+    assert len(journal) == 1 and journal.keys() == ["9" * 64]
+    assert journal.discard("9" * 64) and len(journal) == 0
+    assert not journal.discard("9" * 64)
+
+
+# -- crash + resume parity --------------------------------------------------
+
+MATRIX = [(p, d) for p in ("agentx", "react", "magentic")
+          for d in ("local", "faas", "a2a")]
+
+
+@pytest.mark.parametrize("pattern,deployment", MATRIX,
+                         ids=[f"{p}-{d}" for p, d in MATRIX])
+def test_interrupted_plus_resumed_is_bit_identical(tmp_path, pattern,
+                                                   deployment):
+    """THE durable-execution contract: kill a run mid-pattern, resume it
+    from the journal, and the full event sequence and artifact equal the
+    uninterrupted run's, wire-bit for wire-bit."""
+    crash_dep, clean_dep = _twins(deployment)
+    clean = Session().execute(
+        RunSpec("web_search", "quantum", pattern, clean_dep))
+
+    session = Session(journal=RunJournal(str(tmp_path), fsync_batch=1))
+    spec = RunSpec("web_search", "quantum", pattern, crash_dep)
+    dead = session.execute(spec)
+    assert dead.extras.get("aborted") and not dead.success
+    assert len(dead.extras["events"]) == 6
+    seg = session.journal.read(session.journal.key_for(spec))
+    assert len(seg.events) == 6 and not seg.complete
+
+    resumed = resume_run(session, spec)
+    assert not resumed.extras.get("aborted")
+    assert _wire(resumed) == _wire(clean)
+    assert resumed.artifact == clean.artifact
+    assert resumed.success == clean.success
+    assert resumed.extras["resume"]["replayed_events"] == 6
+    assert session.journal.read(session.journal.key_for(spec)).complete
+
+
+def test_fsync_batch_tail_loss_still_converges(tmp_path):
+    """With a coarse fsync batch a crash swallows the buffered tail —
+    the committed prefix is SHORTER than what the dead attempt emitted —
+    and the resume re-executes the lost events.  Parity still holds
+    after repeated crashes (attempt-keyed draws guarantee progress)."""
+    register_fault_plan("faas+dvar", "faas",
+                        FaultPlan(crash_rate=1.0, crash_min_events=5,
+                                  crash_max_events=30,
+                                  first_call_cold=False))
+    register_fault_plan("faas+dclean", "faas", NO_CRASH)
+    clean = Session().execute(
+        RunSpec("web_search", "quantum", "agentx", "faas+dclean"))
+    session = Session(journal=RunJournal(str(tmp_path), fsync_batch=4))
+    spec = RunSpec("web_search", "quantum", "agentx", "faas+dvar")
+
+    result = session.execute(spec)
+    lost_tail = False
+    resumes = 0
+    while result.extras.get("aborted") and resumes < 10:
+        seg = session.journal.read(session.journal.key_for(spec))
+        # committed history never exceeds what the dead attempt emitted
+        assert len(seg.events) <= len(result.extras["events"])
+        lost_tail |= len(seg.events) < len(result.extras["events"])
+        resumes += 1
+        result = resume_run(session, spec)
+    assert not result.extras.get("aborted")
+    assert resumes >= 1 and lost_tail    # the knob actually cost something
+    assert _wire(result) == _wire(clean)
+    assert result.artifact == clean.artifact
+
+
+def test_second_crash_resumes_further(tmp_path):
+    """A resume that crashes AGAIN leaves a longer committed prefix; the
+    next resume continues from there.  With this plan's attempt-keyed
+    draws the run dies at event 9, resumes and dies at 14, then the
+    attempt-2 draw (8) lands inside committed history — disarmed — and
+    the run finishes.  Parity still holds through both crashes."""
+    name = "local+dcrash2"
+    register_fault_plan(name, "local",
+                        FaultPlan(crash_rate=1.0, crash_min_events=5,
+                                  crash_max_events=30,
+                                  first_call_cold=False))
+    # the crash twin injects nothing but kills, so plain "local" is the
+    # uninterrupted control
+    clean = Session().execute(RunSpec("web_search", "quantum", "agentx"))
+    session = Session(journal=RunJournal(str(tmp_path), fsync_batch=1))
+    spec = RunSpec("web_search", "quantum", "agentx", name)
+
+    dead = session.execute(spec)
+    assert dead.extras.get("aborted")
+    assert len(dead.extras["events"]) == 9
+    dead2 = resume_run(session, spec)
+    assert dead2.extras.get("aborted")
+    assert len(dead2.extras["events"]) == 14
+    seg = session.journal.read(session.journal.key_for(spec))
+    assert len(seg.events) == 14 and seg.resumes == 1
+
+    resumed = resume_run(session, spec)
+    assert not resumed.extras.get("aborted")
+    assert resumed.extras["resume"]["replayed_events"] == 14
+    assert _wire(resumed) == _wire(clean)
+    assert resumed.artifact == clean.artifact
+
+
+def test_resume_of_complete_segment_reexecutes(tmp_path):
+    session = Session(journal=RunJournal(str(tmp_path), fsync_batch=1))
+    spec = RunSpec("web_search", "quantum", "agentx")
+    first = session.execute(spec)
+    assert session.journal.read(session.journal.key_for(spec)).complete
+    again = resume_run(session, spec)
+    assert "resume" not in again.extras
+    assert _wire(again) == _wire(first)
+
+
+def test_tampered_journal_deviates_to_full_rerun(tmp_path):
+    """A journal that no longer matches the run's deterministic history
+    is detected by the replay cursor; resume falls back to a fresh,
+    fully billed rerun that still converges to the clean result."""
+    # seed=6: the attempt-0 draw kills the run, the attempt-1 draw does
+    # not — so the post-deviation fallback rerun completes
+    register_fault_plan("local+dtamper", "local",
+                        FaultPlan(crash_rate=0.5, crash_min_events=6,
+                                  crash_max_events=6, first_call_cold=False,
+                                  seed=6))
+    clean = Session().execute(RunSpec("web_search", "quantum", "agentx"))
+    session = Session(journal=RunJournal(str(tmp_path), fsync_batch=1))
+    spec = RunSpec("web_search", "quantum", "agentx", "local+dtamper")
+    dead = session.execute(spec)
+    assert dead.extras.get("aborted")
+    key = session.journal.key_for(spec)
+    path = session.journal.path_for(key)
+    lines = open(path).read().splitlines()
+    d = json.loads(lines[1])         # first event: RunStarted
+    d["task"] = "a task this run never saw"
+    lines[1] = json.dumps(d)
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+    resumed = resume_run(session, spec)
+    assert "resume" not in resumed.extras      # fallback, not recovery
+    assert not resumed.extras.get("aborted")
+    assert _wire(resumed) == _wire(clean)
+
+
+def test_foreign_journal_file_falls_back(tmp_path):
+    session = Session(journal=RunJournal(str(tmp_path), fsync_batch=1))
+    spec = RunSpec("web_search", "quantum", "agentx")
+    key = session.journal.key_for(spec)
+    with open(session.journal.path_for(key), "w") as f:
+        f.write("not a journal\n")
+    result = resume_run(session, spec)         # JournalError -> execute
+    assert result.extras.get("events")
+    assert "resume" not in result.extras
+
+
+# -- recovery economics -----------------------------------------------------
+
+
+def test_billing_identity_and_recovered_progress(tmp_path):
+    crash_dep, clean_dep = _twins("faas")
+    clean = Session().execute(
+        RunSpec("web_search", "quantum", "agentx", clean_dep))
+    session = Session(journal=RunJournal(str(tmp_path), fsync_batch=1))
+    spec = RunSpec("web_search", "quantum", "agentx", crash_dep)
+    session.execute(spec)
+    resumed = resume_run(session, spec)
+    assert recovered_tokens(resumed) > 0
+    assert recovered_cost(resumed) > 0
+    assert billed_cost(resumed) + recovered_cost(resumed) == pytest.approx(
+        resumed.total_cost)
+    # the resumed run re-derives the whole history, so its intrinsic
+    # totals equal the clean run's — and what it BILLS is strictly less
+    assert resumed.total_cost == pytest.approx(clean.total_cost)
+    assert billed_cost(resumed) < clean.total_cost
+    # fresh runs recover nothing by definition
+    assert recovered_cost(clean) == 0.0
+    assert billed_cost(clean) == clean.total_cost
+
+
+def test_aborted_runs_never_cached(tmp_path):
+    crash_dep, _ = _twins("local")
+    cache = RunCache()
+    session = Session(cache=cache)
+    spec = RunSpec("web_search", "quantum", "agentx", crash_dep)
+    dead = session.execute(spec)
+    assert dead.extras.get("aborted")
+    assert cache.get(spec_fingerprint(spec)) is None
+
+
+# -- the recovery traffic scenario ------------------------------------------
+
+MIX = (Scenario("web/local", "web_search", "quantum", "agentx", "local"),
+       Scenario("web/faas", "web_search", "edge", "react", "faas"))
+
+
+def _crash_mix(rate):
+    plan = FaultPlan(crash_rate=rate, first_call_cold=False)
+    out = []
+    for s in MIX:
+        name = f"{s.deployment}+tcrash"
+        register_fault_plan(name, s.deployment, plan)
+        out.append(Scenario(s.name, s.app, s.instance, s.pattern, name,
+                            s.llm, s.priority, s.weight))
+    return tuple(out)
+
+
+def test_driver_resumes_journaled_dead_runs(tmp_path):
+    """The recovery scenario end-to-end: under a heavy crash rate the
+    journal+resume driver recovers the crash-free success rate exactly
+    and bills less than restart-from-scratch."""
+    wl_kw = dict(arrival="poisson", rate=4.0, n_requests=16, seed=3)
+    clean_rep = TrafficDriver(Session()).run(
+        Workload(scenarios=MIX, **wl_kw))
+    crash_wl = Workload(scenarios=_crash_mix(0.5), **wl_kw)
+
+    rerun_rep = TrafficDriver(Session(), restart="rerun").run(crash_wl)
+    resume_rep = TrafficDriver(
+        Session(journal=RunJournal(str(tmp_path), fsync_batch=1)),
+        restart="resume").run(crash_wl)
+
+    def ok(rep):
+        return sum(r.result.success for r in rep.records)
+
+    assert sum(r.crashes for r in resume_rep.records) > 0
+    assert sum(r.resumes for r in resume_rep.records) > 0
+    assert ok(resume_rep) == ok(clean_rep)
+    assert ok(rerun_rep) == ok(clean_rep)
+    # per-run parity against the clean pass (same worlds via world_alias)
+    for c, r in zip(clean_rep.records, resume_rep.records):
+        assert r.result.success == c.result.success
+
+    def billed(rep):
+        return sum(r.sunk_cost + billed_cost(r.result) for r in rep.records)
+
+    assert billed(resume_rep) < billed(rerun_rep)
+    crashed = [r for r in resume_rep.records if r.crashes and r.resumes]
+    assert crashed and all(r.sunk_cost > 0 for r in crashed)
+
+
+def test_driver_restart_none_leaves_crashes_failed(tmp_path):
+    crash_wl = Workload(scenarios=_crash_mix(1.0), arrival="uniform",
+                        rate=4.0, n_requests=4, seed=1)
+    rep = TrafficDriver(Session(), restart="none").run(crash_wl)
+    # crash_rate=1.0: every run whose draw lands inside its natural
+    # length dies and STAYS dead (no restart loop engaged)
+    assert any(r.result.extras.get("aborted") for r in rep.records)
+    assert all(r.crashes == 0 for r in rep.records)
+
+
+def test_driver_auto_restart_resolution(tmp_path):
+    assert TrafficDriver(Session()).restart == "none"
+    assert TrafficDriver(
+        Session(journal=RunJournal(str(tmp_path)))).restart == "resume"
+    with pytest.raises(ValueError):
+        TrafficDriver(Session(), restart="nonsense")
+
+
+# -- shared disk-persistence helpers (repro.core.persist) -------------------
+
+
+def test_atomic_write_and_load_json_dir(tmp_path):
+    d = str(tmp_path)
+    atomic_write_json(os.path.join(d, "one.json"), {"v": 1})
+    atomic_write_json(os.path.join(d, "two.json"), {"v": 2})
+    with open(os.path.join(d, "bad.json"), "w") as f:
+        f.write("{corrupt")
+    with open(os.path.join(d, "ignored.txt"), "w") as f:
+        f.write("{}")
+    loaded = load_json_dir(d, lambda stem, payload: (stem, payload["v"]))
+    assert loaded == {"one": 1, "two": 2}      # corrupt + foreign skipped
+    assert not [p for p in os.listdir(d) if ".tmp." in p]
+
+
+def test_load_json_dir_prefix_filter(tmp_path):
+    d = str(tmp_path)
+    atomic_write_json(os.path.join(d, "plan_x.json"), {"v": 1})
+    atomic_write_json(os.path.join(d, "other.json"), {"v": 2})
+    loaded = load_json_dir(d, lambda stem, payload: (stem, payload["v"]),
+                           prefix="plan_")
+    assert loaded == {"x": 1}        # stem is the name MINUS the prefix
+
+
+def test_atomic_write_text_best_effort(tmp_path):
+    target = os.path.join(str(tmp_path), "no", "such", "dir", "f.txt")
+    assert atomic_write_text(target, "x", best_effort=True) is False
+    with pytest.raises(OSError):
+        atomic_write_text(target, "x")
+    ok_path = os.path.join(str(tmp_path), "f.txt")
+    assert atomic_write_text(ok_path, "hello") is True
+    assert open(ok_path).read() == "hello"

@@ -10,13 +10,15 @@ import dataclasses
 
 import pytest
 
-from repro.core.events import (_EVENT_TYPES, EngineStepped, LLMCompleted,
+from repro.core.events import (_EVENT_TYPES, MIN_WIRE_VERSION, WIRE_VERSION,
+                               EngineStepped, LLMCompleted,
                                OverheadIncurred, PlanCacheMiss, PlanCompiled,
                                PlanFallback, PlanProduced, ReflectionEmitted,
                                RunCompleted, RunHedged, RunStarted,
                                StageCompleted, StageStarted, ToolInvoked,
-                               ToolRetried, derive_trace, events_from_wire,
-                               events_to_wire, from_wire, to_wire)
+                               ToolRetried, WireVersionError, derive_trace,
+                               events_from_wire, events_to_wire, from_wire,
+                               to_wire)
 from repro.core.metrics import FrameworkEvent, LLMEvent, ToolEvent
 
 # one concrete instance of every wire-registered event type
@@ -113,9 +115,49 @@ def test_new_events_have_json_safe_wire():
 
 
 def test_wire_fields_are_dataclass_fields():
-    """to_wire emits exactly the dataclass fields + 'type' — the
-    contract _known_fields filtering rests on."""
+    """to_wire emits exactly the dataclass fields + 'type' + the schema
+    version stamp 'v' — the contract _known_fields filtering rests on."""
     for ev in SAMPLES:
         wire = to_wire(ev)
         names = {f.name for f in dataclasses.fields(ev)}
-        assert set(wire) == names | {"type"}
+        assert set(wire) == names | {"type", "v"}
+
+
+# -- explicit wire-schema versioning (durable-journal PR) -------------------
+
+
+def test_wire_version_stamped():
+    for ev in SAMPLES:
+        assert to_wire(ev)["v"] == WIRE_VERSION
+
+
+def test_old_stamped_payload_raises():
+    """A payload stamped with a pre-MIN_WIRE_VERSION schema is rejected
+    up front — never mis-parsed field by field."""
+    wire = to_wire(SAMPLES[0])
+    wire["v"] = MIN_WIRE_VERSION - 1
+    with pytest.raises(WireVersionError):
+        from_wire(wire)
+
+
+def test_unstamped_payload_tolerated():
+    """Pre-versioning payloads carry no 'v' at all — they predate the
+    stamp, not the schema floor, and must keep deserializing."""
+    wire = to_wire(SAMPLES[0])
+    del wire["v"]
+    assert from_wire(wire) == SAMPLES[0]
+
+
+def test_newer_stamped_payload_tolerated():
+    """A NEWER peer's stamp is fine: unknown fields drop, known fields
+    parse (same forward-compat rule as unknown wire fields)."""
+    wire = to_wire(SAMPLES[0])
+    wire["v"] = WIRE_VERSION + 7
+    wire["field_from_the_future"] = 1
+    assert from_wire(wire) == SAMPLES[0]
+
+
+def test_wire_version_error_is_value_error():
+    """Callers already catching ValueError on corrupt payloads keep
+    working."""
+    assert issubclass(WireVersionError, ValueError)
