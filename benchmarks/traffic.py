@@ -27,6 +27,15 @@ recovers the clean baseline *exactly* (determinism makes == meaningful),
 and resume bills strictly less than rerun (the recovered-prefix saving,
 Eq. 1 + Eq. 2).
 
+A sixth axis — **tenancy** (``repro.tenancy``) — drives a noisy-
+neighbor mix (one tenant bursting 5x against two steady tenants)
+through the weighted fair-share gate, plus a weighted-saturation pass
+and a budget-enforcement pass.  Asserted at exit: steady-tenant SLO
+attainment within 5% of the isolated baseline, per-tenant throughput
+tracking registry weights, and tight budgets producing both graceful
+degradation and hard rejection (``--tenancy-only`` merges just this
+section into an existing artifact — the CI smoke).
+
 Writes ``artifacts/BENCH_traffic.json`` (uploaded by CI).
 
     PYTHONPATH=src python -m benchmarks.traffic --requests 60 --rate 2
@@ -163,6 +172,162 @@ def measure_durability(n_requests: int = 100, rate: float = 2.0,
     }
 
 
+#: tolerance on the noisy-neighbor isolation criterion: each steady
+#: tenant's SLO latency attainment under the 5x burst must be within
+#: this of its isolated baseline (ISSUE acceptance: "within 5%")
+TENANCY_SLO_TOL = 0.05
+#: absolute tolerance on per-tenant shares in the weighted-saturation
+#: pass (weight shares are {4/7, 2/7, 1/7} — far wider apart than this)
+TENANCY_SHARE_TOL = 0.12
+
+
+def measure_tenancy(n_requests: int = 105, seed: int = 0,
+                    total_rate: float = 0.21, max_concurrency: int = 8,
+                    burst_factor: float = 5.0) -> dict:
+    """Multi-tenant serving (``repro.tenancy``): three sub-experiments
+    over the DEFAULT_MIX replicated per tenant.
+
+    1. **Noisy neighbor** — two steady tenants offering 1x load each
+       plus one tenant bursting ``burst_factor``x, all weight 1.0,
+       through the deficit-round-robin ``FairShareGate``.  Asserted:
+       each steady tenant's SLO latency attainment stays within
+       ``TENANCY_SLO_TOL`` of its isolated (no-noisy-tenant) baseline.
+       The same burst through the plain FIFO gate is reported as the
+       contrast case.
+
+    2. **Weight proportionality** — three tenants with weights 1:2:4
+       offering identical saturating load (every request arrives up
+       front).  Over the fully-contended window (admissions where every
+       tenant had queued work) both DRR admissions and token throughput
+       must track the weight shares within ``TENANCY_SHARE_TOL``.
+
+    3. **Budgets** — the burst workload re-driven with a finite token
+       budget on the noisy tenant: soft exhaustion must degrade at
+       least one run (``RunDegraded``) and hard exhaustion must reject
+       at least one (``BudgetExceeded``), with steady tenants untouched.
+    """
+    from repro.tenancy import Tenancy, Tenant, TenantRegistry
+    from repro.traffic import tenant_mix
+
+    slo = SLOTarget(latency_s=180.0, ttft_s=30.0, success_rate=0.85)
+    steady = ("steady-a", "steady-b")
+    noisy = "noisy"
+    registry = TenantRegistry(Tenant(steady[0]), Tenant(steady[1]),
+                              Tenant(noisy))
+
+    # -- 1: noisy neighbor ------------------------------------------------
+    # isolated baseline: the steady tenants alone, at the same per-tenant
+    # arrival rate they will offer during the burst (mix weights shape
+    # WHO arrives; the Workload rate is the total, so both scale by the
+    # steady fraction of the burst mix)
+    share = 2.0 / (2.0 + burst_factor)
+    iso_wl = Workload(scenarios=tenant_mix({t: 1.0 for t in steady}),
+                      rate=total_rate * share,
+                      n_requests=max(8, round(n_requests * share)),
+                      seed=seed)
+    iso = aggregate_report(
+        TrafficDriver(Session(tenancy=Tenancy(registry)),
+                      max_concurrency=max_concurrency,
+                      tenants=registry).run(iso_wl), slo)
+
+    burst_wl = Workload(
+        scenarios=tenant_mix({steady[0]: 1.0, steady[1]: 1.0,
+                              noisy: burst_factor}),
+        rate=total_rate, n_requests=n_requests, seed=seed)
+    burst = aggregate_report(
+        TrafficDriver(Session(tenancy=Tenancy(registry)),
+                      max_concurrency=max_concurrency,
+                      tenants=registry).run(burst_wl), slo)
+    # contrast: the identical burst through the tenant-blind FIFO gate
+    fifo = aggregate_report(
+        TrafficDriver(Session(), max_concurrency=max_concurrency)
+        .run(burst_wl), slo)
+
+    def attain(agg: dict, tenant: str) -> float:
+        return agg["tenants"][tenant]["slo"]["latency_attainment"]
+
+    steady_ok = all(attain(burst, t) >= attain(iso, t) - TENANCY_SLO_TOL
+                    for t in steady)
+
+    # -- 2: weight proportionality under saturation -----------------------
+    weights = {"bronze": 1.0, "silver": 2.0, "gold": 4.0}
+    wsum = sum(weights.values())
+    wreg = TenantRegistry(*(Tenant(t, weight=w)
+                            for t, w in weights.items()))
+    sat_wl = Workload(scenarios=tenant_mix({t: 1.0 for t in weights}),
+                      arrival="uniform", rate=50.0,
+                      n_requests=n_requests, seed=seed + 1)
+    sat_drv = TrafficDriver(Session(tenancy=Tenancy(wreg)),
+                            max_concurrency=max_concurrency, tenants=wreg)
+    sat_rep = sat_drv.run(sat_wl)
+    contended = [(t, tenant) for t, tenant, c
+                 in sat_drv.last_gate.admissions if c]
+    window_s = max(t for t, _ in contended)
+    adm_counts = {t: sum(tenant == t for _, tenant in contended)
+                  for t in weights}
+    tokens = {t: 0.0 for t in weights}
+    for r in sat_rep.records:
+        if r.start <= window_s:
+            tokens[r.spec.tenant] += (r.result.trace.input_tokens
+                                      + r.result.trace.output_tokens)
+    tok_sum, adm_sum = sum(tokens.values()), sum(adm_counts.values())
+    shares = {t: {"weight": weights[t] / wsum,
+                  "admissions": adm_counts[t] / adm_sum,
+                  "tokens": tokens[t] / tok_sum,
+                  "token_throughput": tokens[t] / window_s}
+              for t in weights}
+    weights_ok = all(
+        abs(s["admissions"] - s["weight"]) <= TENANCY_SHARE_TOL
+        and abs(s["tokens"] - s["weight"]) <= TENANCY_SHARE_TOL
+        for s in shares.values())
+
+    # -- 3: budgets: degrade then reject ----------------------------------
+    # sized to trip mid-workload: ~15k tokens/run, the noisy tenant draws
+    # burst_factor/(2+burst_factor) of the requests; soft at 40% leaves a
+    # wide degradation window before the hard cut
+    token_budget = 4800.0 * n_requests
+    breg = TenantRegistry(Tenant(steady[0]), Tenant(steady[1]),
+                          Tenant(noisy, token_budget=token_budget))
+    btenancy = Tenancy(breg, soft_fraction=0.4)
+    brep = TrafficDriver(Session(tenancy=btenancy),
+                         max_concurrency=max_concurrency,
+                         tenants=breg).run(burst_wl)
+    bagg = aggregate_report(brep, slo)
+    meter = btenancy.meter.snapshot()
+    noisy_meter = meter.get(noisy, {})
+    budget_ok = (noisy_meter.get("degraded_runs", 0) >= 1
+                 and noisy_meter.get("rejected_runs", 0) >= 1
+                 and all(meter.get(t, {}).get("degraded_runs", 0) == 0
+                         and meter.get(t, {}).get("rejected_runs", 0) == 0
+                         for t in steady))
+
+    return {
+        "config": {"steady_tenants": list(steady), "noisy_tenant": noisy,
+                   "burst_factor": burst_factor, "total_rate": total_rate,
+                   "max_concurrency": max_concurrency,
+                   "n_requests": n_requests,
+                   "slo_tolerance": TENANCY_SLO_TOL,
+                   "share_tolerance": TENANCY_SHARE_TOL,
+                   "token_budget": token_budget},
+        "noisy_neighbor": {
+            "isolated": {t: iso["tenants"][t] for t in steady},
+            "burst": burst["tenants"],
+            "burst_fifo_attainment": {t: attain(fifo, t) for t in steady},
+            "steady_attainment": {
+                t: {"isolated": attain(iso, t), "burst": attain(burst, t),
+                    "fifo": attain(fifo, t)} for t in steady},
+        },
+        "fair_share": {"weights": weights,
+                       "contended_admissions": adm_sum,
+                       "window_virtual_s": window_s,
+                       "shares": shares},
+        "budget": {"meter": meter, "tenants": bagg.get("tenants", {})},
+        "steady_slo_within_tolerance": steady_ok,
+        "throughput_tracks_weights": weights_ok,
+        "budget_degrades_and_rejects": budget_ok,
+    }
+
+
 def measure(n_requests: int = 100, rate: float = 2.0, seed: int = 0,
             arrival: str = "poisson", max_concurrency: int = 0) -> dict:
     from repro.traffic.faults import FaultStats
@@ -260,10 +425,22 @@ def main() -> None:
     ap.add_argument("--durability-only", action="store_true",
                     help="run only the durability passes and merge the "
                          "section into an existing artifact")
+    ap.add_argument("--no-tenancy", action="store_true",
+                    help="skip the multi-tenant passes")
+    ap.add_argument("--tenancy-only", action="store_true",
+                    help="run only the multi-tenant passes and merge the "
+                         "section into an existing artifact")
     ap.add_argument("--out", default=os.path.join(ART, "BENCH_traffic.json"))
     args = ap.parse_args()
 
-    if args.durability_only:
+    if args.tenancy_only:
+        rec = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                rec = json.load(f)
+        rec["tenancy"] = measure_tenancy(n_requests=args.requests,
+                                         seed=args.seed)
+    elif args.durability_only:
         # merge into whatever artifact is already there (the clean
         # overall, when present, is the recovery ground truth)
         rec = {}
@@ -285,6 +462,9 @@ def main() -> None:
                 arrival=args.arrival, max_concurrency=args.concurrency,
                 crash_rate=args.crash_rate,
                 clean_overall=rec["overall"])
+        if not args.no_tenancy:
+            rec["tenancy"] = measure_tenancy(n_requests=args.requests,
+                                             seed=args.seed)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
@@ -342,6 +522,37 @@ def main() -> None:
             failed = True
         if not du["resume_cheaper_than_rerun"]:
             print("# FAIL: resume did not bill less than rerun")
+            failed = True
+    if "tenancy" in rec:
+        te = rec["tenancy"]
+        nn = te["noisy_neighbor"]["steady_attainment"]
+        for t, a in sorted(nn.items()):
+            print(f"tenancy.{t}.attainment_isolated,{a['isolated']:.3f},")
+            print(f"tenancy.{t}.attainment_burst,{a['burst']:.3f},")
+            print(f"tenancy.{t}.attainment_burst_fifo,{a['fifo']:.3f},")
+        for t, s in sorted(te["fair_share"]["shares"].items()):
+            print(f"tenancy.share.{t},{s['tokens']:.3f},"
+                  f"(weight {s['weight']:.3f})")
+        nm = te["budget"]["meter"].get(te["config"]["noisy_tenant"], {})
+        print(f"tenancy.noisy_degraded_runs,"
+              f"{nm.get('degraded_runs', 0)},")
+        print(f"tenancy.noisy_rejected_runs,"
+              f"{nm.get('rejected_runs', 0)},")
+        print(f"tenancy.steady_slo_within_tolerance,"
+              f"{te['steady_slo_within_tolerance']},")
+        print(f"tenancy.throughput_tracks_weights,"
+              f"{te['throughput_tracks_weights']},")
+        print(f"tenancy.budget_degrades_and_rejects,"
+              f"{te['budget_degrades_and_rejects']},")
+        if not te["steady_slo_within_tolerance"]:
+            print("# FAIL: steady-tenant SLO attainment fell more than "
+                  f"{TENANCY_SLO_TOL:.0%} below the isolated baseline")
+            failed = True
+        if not te["throughput_tracks_weights"]:
+            print("# FAIL: per-tenant throughput does not track weights")
+            failed = True
+        if not te["budget_degrades_and_rejects"]:
+            print("# FAIL: tight budget produced no degradation/rejection")
             failed = True
     print(f"# wrote {args.out}")
     if failed:

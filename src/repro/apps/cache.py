@@ -48,13 +48,23 @@ def spec_fingerprint(spec) -> Optional[str]:
     ``spec.priority`` is deliberately NOT part of the address: serving
     priority steers admission order and preemption — latency, never
     tokens (preempted requests resume bit-identically) — so runs that
-    differ only in priority share a cache entry."""
+    differ only in priority share a cache entry.
+
+    ``spec.tenant`` IS part of the address (when non-empty): a cached
+    result carries its billing attribution (tenant-stamped events), so
+    two tenants issuing the identical request must never share an entry
+    — one tenant's spend would be served under the other's name.  The
+    default tenant ``""`` is omitted from the payload entirely, keeping
+    pre-tenancy fingerprints — and any disk caches written under them —
+    byte-identical."""
     if spec.backend_factory is not None:
         return None
     from ..core.runtime import resolve_pattern
     from ..faas.deployments import resolve_deployment
     from ..serving.api import resolve_llm_backend
+    tenant = getattr(spec, "tenant", "")
     payload = json.dumps({
+        **({"tenant": tenant} if tenant else {}),
         "app": spec.app,
         "instance": spec.instance,
         "pattern": spec.pattern,

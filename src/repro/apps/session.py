@@ -73,6 +73,14 @@ class RunSpec:
     priority affects latency, never tokens).  Like ``llm``, it does NOT
     enter the ``World`` seed: scheduling urgency must not reshuffle the
     environment.
+
+    tenant: the principal this run is billed to (multi-tenant serving,
+    :mod:`repro.tenancy`); ``""`` is the single default tenant.  Like
+    ``priority``, the tenant steers scheduling (fair-share weight) and
+    billing (budgets), never the run's content: it is EXCLUDED from the
+    ``World`` seed and the plan-cache key, but INCLUDED in the run-cache
+    fingerprint — identical requests from two tenants share a compiled
+    plan graph yet never a cached result billed to the wrong principal.
     """
     app: str
     instance: str
@@ -82,6 +90,7 @@ class RunSpec:
     backend_factory: Optional[Callable] = None
     llm: str = "oracle"
     priority: int = 0
+    tenant: str = ""
 
     def with_seed(self, seed: int) -> "RunSpec":
         return dataclasses.replace(self, seed=seed)
@@ -148,7 +157,17 @@ class Session:
     continue from its last committed event via
     :func:`repro.durable.resume.resume_run` — see ``docs/DURABLE.md``.
     Crashed (aborted) runs are never cached: their results are partial
-    by construction."""
+    by construction.
+
+    ``tenancy`` (:class:`repro.tenancy.Tenancy`) turns on per-tenant
+    budget enforcement at admission: a soft-exhausted tenant's runs are
+    downgraded to a cheaper configuration (``RunDegraded`` on the
+    stream), a hard-exhausted tenant's runs are rejected outright
+    (``BudgetExceeded``, nothing executes), and every finished run's
+    Eq. 1+2 spend is charged to its tenant's meter — see
+    ``docs/TENANCY.md``.  With ``tenancy=None`` (or a registry with no
+    finite budgets) the admission path is inert and runs are
+    bit-identical to a tenancy-free session."""
 
     def __init__(self,
                  on_event: Optional[Callable] = None,
@@ -156,13 +175,15 @@ class Session:
                  retry: Optional["RetryPolicy"] = None,
                  hedge: Optional["HedgePolicy"] = None,
                  plan_cache: Optional["PlanCache"] = None,
-                 journal: Optional["RunJournal"] = None):
+                 journal: Optional["RunJournal"] = None,
+                 tenancy: Optional["Tenancy"] = None):
         self.on_event = on_event
         self.cache = cache
         self.retry = retry
         self.hedge = hedge
         self.plan_cache = plan_cache
         self.journal = journal
+        self.tenancy = tenancy
 
     # ------------------------------------------------------------------
     def execute(self, spec: RunSpec,
@@ -177,12 +198,21 @@ class Session:
         execution): it keys the deployment's injected-crash draw so a
         rerun/resume of a crashed run is a fresh sample instead of
         deterministically dying at the same event again."""
+        pre_events: List = []
+        if self.tenancy is not None:
+            admitted = self._admit(spec, on_event)
+            if isinstance(admitted, RunResult):
+                return admitted                    # hard budget rejection
+            spec, pre_events = admitted
         # a plan-compilable spec bypasses the run cache: compiled replays
         # differ in cost/latency accounting (no planner calls), and the
         # run-cache key does not cover the plan-cache state — the same
-        # exclusion rule as retry/hedge policies
+        # exclusion rule as retry/hedge policies.  A degraded run is not
+        # cacheable either: its stream carries the RunDegraded admission
+        # event, which reflects the tenant's meter state, not the spec.
         cacheable = (self.cache is not None
                      and self.retry is None and self.hedge is None
+                     and not pre_events
                      and self._plan_key(spec) is None)
         key = spec_fingerprint(spec) if cacheable else None
         if cacheable:
@@ -190,11 +220,64 @@ class Session:
             if hit is not None:
                 return hit
         result = self._execute(spec, on_event, attempt=attempt)
+        if pre_events:
+            result.extras["events"] = (pre_events
+                                       + list(result.extras.get("events",
+                                                                ())))
         # an aborted (crashed) run is partial by construction: caching
         # it would serve the dead run to every later identical spec
         if cacheable and not result.extras.get("aborted"):
             self.cache.put(key, result)
+        if self.tenancy is not None:
+            # bill the run's Eq. 1 (LLM tokens) + Eq. 2 (FaaS) spend to
+            # its tenant; cache hits return above unbilled — the tenant
+            # already paid when the entry was first executed
+            self.tenancy.meter.charge(
+                spec.tenant,
+                result.trace.input_tokens + result.trace.output_tokens,
+                result.trace.llm_cost + result.faas_cost)
         return result
+
+    def _admit(self, spec: RunSpec, on_event: Optional[Callable]):
+        """Tenancy admission control for one spec.
+
+        Returns either a rejection ``RunResult`` (hard budget
+        exhaustion — nothing executes, nothing billed) or
+        ``(spec', pre_events)`` where ``spec'`` is possibly degraded to
+        a cheaper configuration and ``pre_events`` holds the
+        ``RunDegraded`` admission event to prepend to the run's
+        stream."""
+        from ..core.events import BudgetExceeded, RunDegraded
+        from ..tenancy.budget import HARD, SOFT
+        meter = self.tenancy.meter
+        state = meter.state(spec.tenant)
+        if state == HARD:
+            kind, used, budget = meter.exhausted_axis(spec.tenant)
+            ev = BudgetExceeded(t=0.0, tenant=spec.tenant, kind=kind,
+                                used=used, budget=budget)
+            obs = self._combined_observer(on_event)
+            if obs is not None:
+                obs(ev)
+            meter.record_rejected(spec.tenant)
+            return RunResult(
+                app=spec.app, instance=spec.instance, pattern=spec.pattern,
+                deployment=spec.deployment, success=False,
+                total_latency=0.0, trace=Trace(),
+                failure_reason=(f"BudgetExceeded: tenant {spec.tenant!r} "
+                                f"{kind} {used:.6g}/{budget:.6g}"),
+                extras={"spec": spec, "events": [ev], "rejected": True})
+        if state == SOFT:
+            spec2, info = self.tenancy.degrade.degrade(spec,
+                                                       self.plan_cache)
+            if info is not None:
+                ev = RunDegraded(t=0.0, tenant=spec.tenant,
+                                 reason="soft budget exhaustion", **info)
+                obs = self._combined_observer(on_event)
+                if obs is not None:
+                    obs(ev)
+                meter.record_degraded(spec.tenant)
+                return spec2, [ev]
+        return spec, []
 
     def _plan_key(self, spec: RunSpec) -> Optional[str]:
         if self.plan_cache is None:
@@ -283,16 +366,23 @@ class Session:
         # deferred import: serving.api pulls the JAX stack, which the
         # default oracle path should not pay at session import time
         from ..serving.api import get_llm_backend
+        # ``tenant`` is forwarded only when set: pre-tenancy backends
+        # (registered with a priority-only ``make``) keep working for
+        # default-tenant runs — the tenancy-off parity contract.
+        mk_kwargs: dict = {"priority": spec.priority}
+        if spec.tenant:
+            mk_kwargs["tenant"] = spec.tenant
         llm = (spec.backend_factory(world, policy, trace)
                if spec.backend_factory
                else get_llm_backend(spec.llm).make(world, policy, trace,
-                                                   priority=spec.priority))
+                                                   **mk_kwargs))
         pattern = spec.pattern if graph is None else "agentx-compiled"
         runner = create_runner(pattern, llm, env.clients, world, trace,
                                deployment=spec.deployment,
                                remote=backend.capabilities.remote,
                                on_event=self._combined_observer(on_event),
-                               retry=self.retry, hedge=self.hedge)
+                               retry=self.retry, hedge=self.hedge,
+                               tenant=spec.tenant)
         if graph is not None:
             from ..plans.execute import PlanDeviation
             runner.bind_graph(graph)

@@ -35,8 +35,12 @@ class RunEvent:
 
 @dataclasses.dataclass(frozen=True)
 class RunStarted(RunEvent):
+    """``tenant`` is the principal the run is billed to (multi-tenant
+    serving, :mod:`repro.tenancy`); ``""`` is the single default tenant
+    — pre-tenancy wire payloads deserialize to it."""
     pattern: str
     task: str
+    tenant: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +154,34 @@ class PlanFallback(RunEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class RunDegraded(RunEvent):
+    """A tenant's soft budget exhaustion downgraded this run to a cheaper
+    configuration before execution (:class:`repro.tenancy.DegradePolicy`):
+    ``from_pattern``/``to_pattern`` and ``from_deployment``/
+    ``to_deployment`` describe the swap (equal when that axis kept its
+    value).  Emitted on the degraded run's stream BEFORE its
+    ``RunStarted`` — the decision is part of the run's billed history."""
+    tenant: str
+    reason: str
+    from_pattern: str
+    to_pattern: str
+    from_deployment: str
+    to_deployment: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetExceeded(RunEvent):
+    """A tenant's hard budget exhaustion rejected this run outright —
+    no world is built, nothing executes, nothing is billed.  ``kind`` is
+    the exhausted axis (``"tokens"`` | ``"cost"``), ``used``/``budget``
+    the meter reading at rejection time."""
+    tenant: str
+    kind: str
+    used: float
+    budget: float
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineStepped(RunEvent):
     """Serving-side event: the continuous-batching scheduler advanced all
     live decode slots by one step.  Emitted by the *engine*, not a run —
@@ -202,7 +234,8 @@ _EVENT_TYPES: Dict[str, type] = {
     for cls in (RunStarted, StageStarted, PlanProduced, LLMCompleted,
                 ToolInvoked, OverheadIncurred, ReflectionEmitted,
                 StageCompleted, RunCompleted, ToolRetried, RunHedged,
-                PlanCompiled, PlanCacheMiss, PlanFallback, EngineStepped)
+                PlanCompiled, PlanCacheMiss, PlanFallback, EngineStepped,
+                RunDegraded, BudgetExceeded)
 }
 
 # events whose ``event`` field is a nested metrics dataclass

@@ -121,16 +121,19 @@ class JaxLLMBackend(LLMBackend):
     completion: against an ``EngineClient`` endpoint it steers the
     continuous-batching scheduler's admission queue and slot preemption,
     so a latency-sensitive run's completions jump ahead of bulk
-    traffic."""
+    traffic.  ``tenant`` (from ``RunSpec.tenant``) rides along the same
+    way: under fair-share admission the scheduler queues the completion
+    with its tenant's peers (:mod:`repro.tenancy.fair_share`)."""
 
     def __init__(self, world: World, policy, engine,
                  trace: Optional[Trace] = None, max_gen: int = 16,
-                 priority: int = 0):
+                 priority: int = 0, tenant: str = ""):
         self.world = world
         self.policy = policy
         self.engine = engine
         self.max_gen = max_gen
         self.priority = priority
+        self.tenant = tenant
         self.trace = trace if trace is not None else Trace()
 
     def complete(self, request: LLMRequest) -> LLMResponse:
@@ -143,7 +146,7 @@ class JaxLLMBackend(LLMBackend):
         # real forward passes (prefill + decode) on the JAX engine
         self.engine.generate(prompt[-512:],
                              max_new_tokens=min(tout, self.max_gen),
-                             priority=self.priority)
+                             priority=self.priority, tenant=self.tenant)
         latency = self.world.latency.llm_latency(tin, tout)
         self.world.clock.sleep(latency)
         self.trace.llm_events.append(

@@ -166,6 +166,7 @@ class AgentRuntime:
                  remote: Optional[bool] = None,
                  retry: Optional[RetryPolicy] = None,
                  hedge: Optional[HedgePolicy] = None,
+                 tenant: str = "",
                  **overrides):
         cfg = config if config is not None else type(self).default_config
         if overrides:
@@ -178,6 +179,9 @@ class AgentRuntime:
         self.deployment = deployment
         self.retry = retry
         self.hedge = hedge
+        # billing principal stamped on RunStarted (multi-tenant serving,
+        # :mod:`repro.tenancy`); "" = the single default tenant
+        self.tenant = tenant
         # off-workstation tooling: from the deployment backend's capability
         # descriptor when driven through Session, else the string heuristic
         self.remote = (deployment != "local") if remote is None else remote
@@ -323,7 +327,8 @@ class AgentRuntime:
     # -- run contract --------------------------------------------------------
     def run(self, task: str) -> RunOutcome:
         self.emit(RunStarted(t=self.now(), pattern=self.config.name
-                             or self.pattern, task=task))
+                             or self.pattern, task=task,
+                             tenant=self.tenant))
         try:
             outcome = self._run(task)
         except RunAborted:
@@ -414,9 +419,10 @@ def create_runner(name: str, backend: LLMBackend,
                   on_event: Optional[Callable[[RunEvent], None]] = None,
                   remote: Optional[bool] = None,
                   retry: Optional[RetryPolicy] = None,
-                  hedge: Optional[HedgePolicy] = None) -> AgentRuntime:
+                  hedge: Optional[HedgePolicy] = None,
+                  tenant: str = "") -> AgentRuntime:
     rp = resolve_pattern(name)
     return rp.runner_cls(backend, clients, world, trace,
                          deployment=deployment, config=rp.config,
                          on_event=on_event, remote=remote,
-                         retry=retry, hedge=hedge)
+                         retry=retry, hedge=hedge, tenant=tenant)

@@ -20,6 +20,15 @@ SLO telemetry.
         --unique-seeds 4 --requests 60 \
         --scenario web_search:quantum:agentx \
         --scenario stock_correlation:netflix:agentx:faas
+
+    # multi-tenant noisy neighbor: the mix replicated per tenant (noisy
+    # offers 5x the load), fair-share admission at 8 slots, a token
+    # budget on the noisy tenant, per-tenant telemetry at the end:
+    PYTHONPATH=src python -m repro.launch.traffic --requests 105 \
+        --rate 0.21 --concurrency 8 \
+        --tenants steady-a,steady-b,noisy:5 \
+        --tenant-weights steady-a:1,steady-b:1,noisy:1 \
+        --budget noisy:500000
 """
 from __future__ import annotations
 
@@ -56,6 +65,53 @@ def _mix(args) -> tuple:
     return mix
 
 
+def _tenancy(args):
+    """Parse the tenant knobs into (load multipliers, registry, Tenancy).
+
+    ``--tenants a,b,noisy:5`` — tenant names with optional arrival-load
+    multipliers; ``--tenant-weights a:1,noisy:0.5`` — fair-share
+    weights; ``--budget noisy:500000`` or ``noisy:500000:0.25`` — token
+    (and optional USD) caps.  Returns ``(None, None, None)`` when
+    ``--tenants`` is absent — the tenancy-off path, bit-identical to
+    the single-tenant launcher."""
+    if not args.tenants:
+        if args.tenant_weights or args.budget:
+            raise SystemExit("--tenant-weights/--budget require --tenants")
+        return None, None, None
+    from ..tenancy import Tenancy, Tenant, TenantRegistry
+
+    def pairs(raw, what):
+        out = {}
+        for part in raw.split(","):
+            if not part:
+                continue
+            bits = part.split(":")
+            try:
+                out[bits[0]] = [float(b) for b in bits[1:]]
+            except ValueError:
+                raise SystemExit(f"bad {what} entry {part!r}")
+        return out
+
+    mults = {t: (v[0] if v else 1.0)
+             for t, v in pairs(args.tenants, "--tenants").items()}
+    weights = {t: (v[0] if v else 1.0)
+               for t, v in pairs(args.tenant_weights or "",
+                                 "--tenant-weights").items()}
+    budgets = pairs(args.budget or "", "--budget")
+    for t in list(weights) + list(budgets):
+        if t not in mults:
+            raise SystemExit(f"tenant {t!r} not listed in --tenants")
+    registry = TenantRegistry(*(
+        Tenant(t, weight=weights.get(t, 1.0),
+               token_budget=(budgets[t][0] if t in budgets
+                             else float("inf")),
+               cost_budget_usd=(budgets[t][1]
+                                if t in budgets and len(budgets[t]) > 1
+                                else float("inf")))
+        for t in mults))
+    return mults, registry, Tenancy(registry)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", action="append", default=[],
@@ -73,6 +129,17 @@ def main() -> None:
     ap.add_argument("--concurrency", type=int, default=0,
                     help="in-flight run cap (0 = unbounded)")
     ap.add_argument("--llm", default="oracle")
+    # multi-tenant serving (repro.tenancy)
+    ap.add_argument("--tenants", default="",
+                    help="comma list of tenant[:load-multiplier] — "
+                         "replicate the mix per tenant (noisy neighbor: "
+                         "'a,b,noisy:5') and admit fair-share")
+    ap.add_argument("--tenant-weights", default="",
+                    help="comma list of tenant:weight fair-share weights "
+                         "(default 1.0 each)")
+    ap.add_argument("--budget", default="",
+                    help="comma list of tenant:tokens[:usd] budget caps "
+                         "(soft 80%% degrades, hard cap rejects)")
     # plan compilation (repro.plans)
     ap.add_argument("--plan-cache", action="store_true",
                     help="compile successful agentx runs into plan graphs "
@@ -108,6 +175,10 @@ def main() -> None:
     args = ap.parse_args()
 
     mix = _mix(args)
+    mults, registry, tenancy = _tenancy(args)
+    if mults is not None:
+        from ..traffic import tenant_mix
+        mix = tenant_mix(mults, base=mix)
     stats = None
     if (args.transient_rate or args.throttle_rate or args.cold_start_rate
             or args.crash_rate):
@@ -139,7 +210,8 @@ def main() -> None:
         hedge=HedgePolicy(hedge_after_s=args.hedge_after)
         if args.hedge_after > 0 else None,
         plan_cache=plan_cache,
-        journal=journal)
+        journal=journal,
+        tenancy=tenancy)
     wl = Workload(scenarios=mix, arrival=args.arrival, rate=args.rate,
                   n_requests=args.requests, seed=args.seed,
                   users=args.users, think_s=args.think,
@@ -149,7 +221,8 @@ def main() -> None:
     driver = TrafficDriver(session, max_concurrency=args.concurrency,
                            mode="real" if args.real else "virtual",
                            time_scale=args.time_scale,
-                           restart=restart)
+                           restart=restart,
+                           tenants=registry)
     report = driver.run(wl)
     agg = aggregate_report(report, SLOTarget())
 
@@ -186,6 +259,15 @@ def main() -> None:
               f"{a['ttft_s']['p95']:7.1f} {a['queue_wait_s']['p95']:8.1f} "
               f"{a['cost_usd']['total_mean']:9.5f} "
               f"{a['resilience']['retries']:5d}")
+    if "tenants" in agg:
+        print(f"{'tenant':28s} {'n':>4s} {'tokens':>9s} {'$total':>9s} "
+              f"{'tok/s':>7s} {'qwait95':>8s} {'degr':>4s} {'rej':>4s}")
+        for name, a in agg["tenants"].items():
+            t = a["tenant"]
+            print(f"{name:28s} {a['n']:4d} {t['tokens']:9.0f} "
+                  f"{t['cost_usd']:9.5f} {t['token_throughput']:7.1f} "
+                  f"{a['queue_wait_s']['p95']:8.1f} "
+                  f"{t['degraded_runs']:4d} {t['rejected_runs']:4d}")
 
 
 if __name__ == "__main__":

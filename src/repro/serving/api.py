@@ -81,12 +81,17 @@ class ServingBackend:
         self.capabilities = (capabilities if capabilities is not None
                              else type(self).default_capabilities)
 
-    def make(self, world, policy, trace, priority: int = 0) -> LLMBackend:
+    def make(self, world, policy, trace, priority: int = 0,
+             tenant: str = "") -> LLMBackend:
         """Build the LLMBackend one run talks to.
 
         ``priority`` comes from ``RunSpec.priority``: scheduler-backed
         backends hand it to the serving engine's priority queue
-        (admission order + slot preemption); others ignore it."""
+        (admission order + slot preemption); others ignore it.
+        ``tenant`` comes from ``RunSpec.tenant``: scheduler-backed
+        backends stamp it on every submitted request so fair-share
+        admission (:mod:`repro.tenancy.fair_share`) can queue per
+        tenant; others ignore it."""
         raise NotImplementedError
 
     def subscribe(self, fn: Callable) -> None:
@@ -161,7 +166,8 @@ class OracleServing(ServingBackend):
 
     name = "oracle"
 
-    def make(self, world, policy, trace, priority: int = 0) -> LLMBackend:
+    def make(self, world, policy, trace, priority: int = 0,
+             tenant: str = "") -> LLMBackend:
         return OracleLLMBackend(world, policy, trace)
 
 
@@ -192,10 +198,11 @@ class _JaxServingBase(ServingBackend):
         """What ``JaxLLMBackend`` generates against."""
         return self.engine()
 
-    def make(self, world, policy, trace, priority: int = 0) -> LLMBackend:
+    def make(self, world, policy, trace, priority: int = 0,
+             tenant: str = "") -> LLMBackend:
         return JaxLLMBackend(world, policy, self.endpoint(), trace,
                              max_gen=self.capabilities.max_gen or 16,
-                             priority=priority)
+                             priority=priority, tenant=tenant)
 
 
 @register_llm_backend("jax", rank=20)
@@ -216,6 +223,12 @@ class JaxBatchedServing(_JaxServingBase):
     # registered as variants inherit truthful capability metadata
     default_capabilities = dataclasses.replace(
         _JaxServingBase.default_capabilities, batched=True, n_slots=4)
+    # fair-share weight source handed to the scheduler (TenantRegistry /
+    # dict / True for equal weights); None = the single global priority
+    # queue.  Subclass-register a variant (or set the attribute before
+    # the first completion builds the client) to serve tenants under
+    # DRR admission.
+    fair_share = None
 
     def __init__(self, capabilities: Optional[ServingCapabilities] = None):
         super().__init__(capabilities)
@@ -229,7 +242,8 @@ class JaxBatchedServing(_JaxServingBase):
             if self._client is None:
                 sched = BatchScheduler(engine,
                                        n_slots=self.capabilities.n_slots or 4,
-                                       max_len=self.capabilities.max_len)
+                                       max_len=self.capabilities.max_len,
+                                       fair_share=self.fair_share)
                 for fn in self._pending_subs:
                     sched.subscribe(fn)
                 self._pending_subs.clear()

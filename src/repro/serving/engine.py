@@ -113,6 +113,14 @@ class RunMonitor:
     ``scheduler.subscribe(monitor)``) and the serving-side
     ``EngineStepped`` stream keeps live engine-occupancy gauges:
     decode-batch fill, queue depth, tokens decoded.
+
+    Per-tenant gauges (multi-tenant serving): ``RunStarted.tenant``
+    opens a run's billing context — a run's events all arrive on the
+    thread executing it, so the current tenant is tracked thread-locally
+    between ``RunStarted`` and ``RunCompleted`` — and the admission
+    events (``RunDegraded`` / ``BudgetExceeded``) carry their tenant
+    explicitly.  ``tenants`` maps tenant -> {runs, completed, llm_calls,
+    tokens, cost_usd, degraded, rejected}.
     """
 
     def __init__(self):
@@ -135,15 +143,32 @@ class RunMonitor:
         self.engine_tokens = 0
         self.engine_prefill_tokens = 0
         self.engine_preemptions = 0
+        # per-tenant gauges (multi-tenant serving)
+        self.tenants: Dict[str, Dict[str, Any]] = {}
+        self._tls = threading.local()
+
+    def _tenant(self, name: str) -> Dict[str, Any]:
+        g = self.tenants.get(name)
+        if g is None:
+            g = self.tenants[name] = {
+                "runs": 0, "completed": 0, "llm_calls": 0, "tokens": 0,
+                "cost_usd": 0.0, "degraded": 0, "rejected": 0}
+        return g
 
     def __call__(self, event) -> None:
         ev = run_events   # alias: keep the isinstance chain readable
         with self._lock:
             if isinstance(event, ev.RunStarted):
                 self.runs_started += 1
+                self._tls.tenant = event.tenant
+                self._tenant(event.tenant)["runs"] += 1
             elif isinstance(event, ev.RunCompleted):
                 self.runs_completed += 1
                 self.runs_succeeded += bool(event.completed)
+                tenant = getattr(self._tls, "tenant", None)
+                if tenant is not None:
+                    self._tenant(tenant)["completed"] += 1
+                self._tls.tenant = None
             elif isinstance(event, ev.LLMCompleted):
                 self.llm_calls += 1
                 self.input_tokens += event.event.input_tokens
@@ -151,11 +176,22 @@ class RunMonitor:
                 agent = event.event.agent
                 self.calls_per_agent[agent] = \
                     self.calls_per_agent.get(agent, 0) + 1
+                tenant = getattr(self._tls, "tenant", None)
+                if tenant is not None:
+                    g = self._tenant(tenant)
+                    g["llm_calls"] += 1
+                    g["tokens"] += (event.event.input_tokens
+                                    + event.event.output_tokens)
+                    g["cost_usd"] += event.event.cost
             elif isinstance(event, ev.ToolInvoked):
                 self.tool_calls += 1
                 self.tool_errors += not event.event.ok
             elif isinstance(event, ev.OverheadIncurred):
                 self.framework_events += 1
+            elif isinstance(event, ev.RunDegraded):
+                self._tenant(event.tenant)["degraded"] += 1
+            elif isinstance(event, ev.BudgetExceeded):
+                self._tenant(event.tenant)["rejected"] += 1
             elif isinstance(event, ev.EngineStepped):
                 self.engine_steps += 1
                 self.engine_live = event.live
@@ -201,6 +237,8 @@ class RunMonitor:
                 "engine_tokens": self.engine_tokens,
                 "engine_prefill_tokens": self.engine_prefill_tokens,
                 "engine_preemptions": self.engine_preemptions,
+                "tenants": {name: dict(g)
+                            for name, g in self.tenants.items()},
             }
 
 
@@ -314,10 +352,12 @@ class Engine:
                                    jnp.asarray(steps, jnp.int32))
 
     def generate(self, prompt: str, max_new_tokens: int = 32,
-                 rid: int = 0, priority: int = 0) -> GenerationResult:
-        """``priority`` is accepted (and ignored) so ``Engine`` and
-        ``EngineClient`` stay interchangeable endpoints for
-        ``JaxLLMBackend``; only the scheduler-backed client uses it."""
+                 rid: int = 0, priority: int = 0,
+                 tenant: str = "") -> GenerationResult:
+        """``priority`` and ``tenant`` are accepted (and ignored) so
+        ``Engine`` and ``EngineClient`` stay interchangeable endpoints
+        for ``JaxLLMBackend``; only the scheduler-backed client uses
+        them."""
         ids = self.tokenizer.encode(prompt)
         return self.generate_ids(ids, max_new_tokens, rid=rid)
 

@@ -72,6 +72,9 @@ class Request:
     ``priority``: higher jumps the queue (FIFO within a class).
     ``seq``: the submission ticket — preserved across preemptions so a
     requeued request keeps its place among equal-priority peers.
+    ``tenant``: the billing principal (multi-tenant serving) — under
+    fair-share admission requests queue per tenant and slots are granted
+    in deficit-round-robin order across tenants.
     ``t_submit`` / ``t_first_token``: wall-clock stamps (``time.perf_counter``)
     used by ``benchmarks/serving.py`` for admission-latency (TTFT)
     percentiles.
@@ -80,6 +83,7 @@ class Request:
     prompt_ids: List[int]
     max_new: int
     priority: int = 0
+    tenant: str = ""
     out_ids: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     seq: int = 0
@@ -162,7 +166,8 @@ class BatchScheduler:
     def __init__(self, engine: Engine, n_slots: int = 4,
                  max_len: int = 512,
                  on_event: Optional[Callable] = None,
-                 batched_prefill: bool = True):
+                 batched_prefill: bool = True,
+                 fair_share=None):
         self.engine = engine
         self.cfg = engine.cfg
         self.n_slots = n_slots
@@ -173,6 +178,18 @@ class BatchScheduler:
         # priority queue of (-priority, seq, Request): highest priority
         # first, FIFO (submission ticket) within a class
         self._heap: List[Tuple[int, int, Request]] = []
+        # fair-share admission (multi-tenant serving): per-tenant heaps
+        # drained in deficit-round-robin order — DRR picks WHICH tenant
+        # admits next, priority classes still order WITHIN a tenant.
+        # ``fair_share`` is the weight source (TenantRegistry / dict /
+        # callable / True for equal weights); None keeps the single
+        # global heap, bit-identical to the pre-tenancy scheduler.
+        if fair_share is not None:
+            from ..tenancy.fair_share import TenantQueue
+            self._tq: Optional["TenantQueue"] = TenantQueue(
+                None if fair_share is True else fair_share)
+        else:
+            self._tq = None
         self._qlock = threading.Lock()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self._reserved: set = set()   # slots held by an in-flight chunk job
@@ -204,42 +221,56 @@ class BatchScheduler:
     # -- admission ----------------------------------------------------------
     def submit(self, prompt: Optional[str] = None, max_new: int = 32,
                prompt_ids: Optional[List[int]] = None,
-               priority: int = 0) -> int:
+               priority: int = 0, tenant: str = "") -> int:
         """Enqueue one request; returns its rid. Thread-safe.
 
         ``priority``: higher-priority requests are admitted first and may
         preempt lower-priority live slots; within a class admission is
-        FIFO. The prompt is truncated to half the slot context and
-        ``max_new`` clamped so prompt+generation always fit the fixed
-        cache."""
+        FIFO. ``tenant``: under fair-share admission the request queues
+        with its tenant's peers and waits its tenant's DRR turn. The
+        prompt is truncated to half the slot context and ``max_new``
+        clamped so prompt+generation always fit the fixed cache."""
         ids = (list(prompt_ids) if prompt_ids is not None
                else self.engine.tokenizer.encode(prompt))
         ids = ids[-(self.max_len // 2):]
         max_new = max(1, min(max_new, self.max_len - len(ids)))
         with self._qlock:
             req = Request(self._next_rid, ids, max_new, priority=priority,
-                          seq=self._seq, t_submit=time.perf_counter())
+                          tenant=tenant, seq=self._seq,
+                          t_submit=time.perf_counter())
             self._next_rid += 1
             self._seq += 1
             self.requests[req.rid] = req
-            heapq.heappush(self._heap, (-req.priority, req.seq, req))
+            if self._tq is not None:
+                self._tq.push(req.tenant, (-req.priority, req.seq), req)
+            else:
+                heapq.heappush(self._heap, (-req.priority, req.seq, req))
         return req.rid
 
     def queue_depth(self) -> int:
         with self._qlock:
-            return len(self._heap)
+            return (len(self._tq) if self._tq is not None
+                    else len(self._heap))
 
     def _peek(self) -> Optional[Request]:
         with self._qlock:
+            if self._tq is not None:
+                return self._tq.peek()
             return self._heap[0][2] if self._heap else None
 
     def _pop(self) -> Optional[Request]:
         with self._qlock:
+            if self._tq is not None:
+                popped = self._tq.pop()
+                return popped[1] if popped is not None else None
             return heapq.heappop(self._heap)[2] if self._heap else None
 
     def _push(self, req: Request) -> None:
         with self._qlock:
-            heapq.heappush(self._heap, (-req.priority, req.seq, req))
+            if self._tq is not None:
+                self._tq.push(req.tenant, (-req.priority, req.seq), req)
+            else:
+                heapq.heappush(self._heap, (-req.priority, req.seq, req))
 
     def _needs_chunk(self, req: Request) -> bool:
         return bool(self.engine.prefill_chunk
@@ -353,7 +384,7 @@ class BatchScheduler:
                 group = [req]
                 bucket = prefill_bucket(len(req.prompt_ids))
                 while len(group) < len(free):
-                    nxt = self._pop_matching(bucket)
+                    nxt = self._pop_matching(bucket, req)
                     if nxt is None:
                         break
                     group.append(nxt)
@@ -361,17 +392,27 @@ class BatchScheduler:
             else:
                 self._prefill_into(free[0], req, finished, stats)
 
-    def _pop_matching(self, bucket: int) -> Optional[Request]:
+    def _pop_matching(self, bucket: int,
+                      leader: Optional[Request] = None) -> Optional[Request]:
         """Pop the queue head iff it is a plain same-bucket admission
         (no resume, no chunking) — grows a bucket group without
-        reordering across priorities."""
+        reordering across priorities.  Under fair-share admission the
+        group additionally stays within the ``leader``'s tenant, and
+        each extra member spends one more of that tenant's DRR turns —
+        a batched prefill never becomes a cross-tenant queue jump."""
+        def plain(r: Request) -> bool:
+            return (not r.out_ids and not self._needs_chunk(r)
+                    and prefill_bucket(len(r.prompt_ids)) == bucket)
+
         with self._qlock:
+            if self._tq is not None:
+                if leader is None:
+                    return None
+                return self._tq.pop_same_tenant(leader.tenant, plain)
             if not self._heap:
                 return None
             req = self._heap[0][2]
-            if req.out_ids or self._needs_chunk(req):
-                return None
-            if prefill_bucket(len(req.prompt_ids)) != bucket:
+            if not plain(req):
                 return None
             return heapq.heappop(self._heap)[2]
 
@@ -485,10 +526,10 @@ class EngineClient:
         self._results: Dict[int, GenerationResult] = {}
 
     def generate(self, prompt: str, max_new_tokens: int = 32,
-                 priority: int = 0) -> GenerationResult:
+                 priority: int = 0, tenant: str = "") -> GenerationResult:
         with self._cv:
             rid = self.scheduler.submit(prompt, max_new=max_new_tokens,
-                                        priority=priority)
+                                        priority=priority, tenant=tenant)
             while rid not in self._results:
                 if self._pumping:
                     # someone else is driving the engine; wake on step end
@@ -516,7 +557,8 @@ class EngineClient:
         self._cv.notify_all()
 
     async def generate_async(self, prompt: str, max_new_tokens: int = 32,
-                             priority: int = 0) -> GenerationResult:
+                             priority: int = 0,
+                             tenant: str = "") -> GenerationResult:
         """Asyncio-friendly pump: like :meth:`generate`, but awaitable —
         many coroutines on ONE event loop multiplex onto the shared
         decode batch with no thread per request.
@@ -531,7 +573,7 @@ class EngineClient:
         loop = asyncio.get_running_loop()
         with self._cv:
             rid = self.scheduler.submit(prompt, max_new=max_new_tokens,
-                                        priority=priority)
+                                        priority=priority, tenant=tenant)
         while True:
             with self._cv:
                 if rid in self._results:

@@ -1,0 +1,20 @@
+"""Multi-tenant serving: identity, fair share, budgets, span export.
+
+See ``docs/TENANCY.md``.  The subsystem is strictly additive: with no
+tenants configured (every ``RunSpec.tenant == ""``, no ``Tenancy`` on
+the session, no weights on the driver) the stack behaves bit-identically
+to the pre-tenancy code.
+"""
+from .budget import HARD, OK, SOFT, BudgetMeter, DegradePolicy, Tenancy
+from .fair_share import DeficitRoundRobin, FairShareGate, TenantQueue
+from .registry import DEFAULT_TENANT, Tenant, TenantRegistry
+from .tracing import (Span, export_otlp_json, fold_spans, spans_for_result,
+                      to_otlp)
+
+__all__ = [
+    "DEFAULT_TENANT", "Tenant", "TenantRegistry",
+    "BudgetMeter", "DegradePolicy", "Tenancy", "OK", "SOFT", "HARD",
+    "DeficitRoundRobin", "FairShareGate", "TenantQueue",
+    "Span", "fold_spans", "spans_for_result", "to_otlp",
+    "export_otlp_json",
+]

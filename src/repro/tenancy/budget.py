@@ -1,0 +1,206 @@
+"""Per-tenant budgets: metering, graceful degradation, hard rejection.
+
+The :class:`BudgetMeter` accumulates each tenant's Eq. 1 (LLM token
+cost) + Eq. 2 (FaaS invocation cost) spend from finished runs'
+accounting traces.  Two thresholds per axis (tokens, dollars):
+
+* **soft** — ``soft_fraction`` (default 0.8) of the tenant's cap: the
+  tenant keeps running, but :class:`DegradePolicy` downgrades each new
+  run to a cheaper configuration (pattern and/or deployment) and emits
+  a :class:`repro.core.events.RunDegraded` on the run's stream.
+* **hard** — the cap itself: new runs are rejected outright with a
+  typed :class:`repro.core.events.BudgetExceeded` event; nothing is
+  built, nothing billed.
+
+The default tenant (``""``) has infinite caps, so the whole machinery
+is inert until somebody configures a :class:`repro.tenancy.Tenant` with
+finite budgets — the tenancy-off parity contract.
+
+:class:`Tenancy` bundles registry + meter + degrade policy into the one
+object ``Session(tenancy=...)`` takes.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Optional, Tuple
+
+from .registry import Tenant, TenantRegistry
+
+#: meter states, in order of severity
+OK, SOFT, HARD = "ok", "soft", "hard"
+
+
+class BudgetMeter:
+    """Thread-safe per-tenant token/cost accumulator with soft/hard
+    exhaustion states.
+
+    ``charge`` is called by the session after every finished run with
+    the run's billed tokens and Eq. 1+2 dollars; ``state`` classifies a
+    tenant before admission.  Rejected runs are tallied (for telemetry)
+    but never billed."""
+
+    def __init__(self, registry: TenantRegistry,
+                 soft_fraction: float = 0.8):
+        if not 0.0 < soft_fraction <= 1.0:
+            raise ValueError(f"soft_fraction must be in (0, 1] "
+                             f"(got {soft_fraction})")
+        self.registry = registry
+        self.soft_fraction = soft_fraction
+        self._lock = threading.Lock()
+        self._tokens: Dict[str, float] = {}
+        self._cost: Dict[str, float] = {}
+        self._degraded: Dict[str, int] = {}
+        self._rejected: Dict[str, int] = {}
+
+    def charge(self, tenant: str, tokens: float, cost_usd: float) -> None:
+        with self._lock:
+            self._tokens[tenant] = self._tokens.get(tenant, 0.0) + tokens
+            self._cost[tenant] = self._cost.get(tenant, 0.0) + cost_usd
+
+    def record_degraded(self, tenant: str) -> None:
+        with self._lock:
+            self._degraded[tenant] = self._degraded.get(tenant, 0) + 1
+
+    def record_rejected(self, tenant: str) -> None:
+        with self._lock:
+            self._rejected[tenant] = self._rejected.get(tenant, 0) + 1
+
+    def used(self, tenant: str) -> Tuple[float, float]:
+        with self._lock:
+            return (self._tokens.get(tenant, 0.0),
+                    self._cost.get(tenant, 0.0))
+
+    def _axis_state(self, used: float, cap: float) -> str:
+        if math.isinf(cap):
+            return OK
+        if used >= cap:
+            return HARD
+        if used >= self.soft_fraction * cap:
+            return SOFT
+        return OK
+
+    def state(self, tenant: str) -> str:
+        """``"ok"`` | ``"soft"`` | ``"hard"`` — the worse of the two
+        axes."""
+        t = self.registry.resolve(tenant)
+        tokens, cost = self.used(tenant)
+        states = (self._axis_state(tokens, t.token_budget),
+                  self._axis_state(cost, t.cost_budget_usd))
+        if HARD in states:
+            return HARD
+        if SOFT in states:
+            return SOFT
+        return OK
+
+    def exhausted_axis(self, tenant: str) -> Tuple[str, float, float]:
+        """For a HARD tenant: ``(kind, used, budget)`` of the axis that
+        tripped (tokens first, then cost)."""
+        t = self.registry.resolve(tenant)
+        tokens, cost = self.used(tenant)
+        if self._axis_state(tokens, t.token_budget) == HARD:
+            return "tokens", tokens, t.token_budget
+        return "cost", cost, t.cost_budget_usd
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant telemetry: tokens, cost, degraded/rejected counts,
+        current state."""
+        with self._lock:
+            names = (set(self._tokens) | set(self._cost)
+                     | set(self._degraded) | set(self._rejected))
+        return {name: {
+            "tokens": self._tokens.get(name, 0.0),
+            "cost_usd": self._cost.get(name, 0.0),
+            "degraded_runs": self._degraded.get(name, 0),
+            "rejected_runs": self._rejected.get(name, 0),
+            "state": self.state(name),
+        } for name in sorted(names)}
+
+
+class DegradePolicy:
+    """Maps a soft-exhausted tenant's spec to a cheaper one.
+
+    Two independent axes, both optional:
+
+    * **deployment** — remote transports fall back to in-process
+      execution (``faas``/``faas-mono``/``a2a`` → ``local``), shedding
+      the Eq. 2 invocation bill and the simulated network overhead.
+    * **pattern** — ``agentx`` → ``agentx-compiled`` *only when* the
+      session's plan cache already holds a graph for the (possibly
+      deployment-degraded) spec's task template: compiled replay skips
+      the planner/critic LLM calls.  The spec's ``pattern`` field is NOT
+      rewritten for this axis — the plan key is pattern-scoped, and the
+      session replays a cached graph on its own — the policy merely
+      *commits* the run to the compiled path and reports it; a downgrade
+      whose graph is not cached would fall straight back to full
+      planning, so it is skipped.
+
+    :meth:`degrade` returns ``(spec', info)``: ``spec'`` is the spec to
+    execute and ``info`` is ``None`` when nothing applies, else the
+    from/to description for the :class:`repro.core.events.RunDegraded`
+    event."""
+
+    DEPLOYMENT_MAP = {"faas": "local", "faas-mono": "local", "a2a": "local"}
+    PATTERN_MAP = {"agentx": "agentx-compiled"}
+
+    def __init__(self, deployment_map: Optional[dict] = None,
+                 pattern_map: Optional[dict] = None):
+        self.deployment_map = (self.DEPLOYMENT_MAP if deployment_map is None
+                               else dict(deployment_map))
+        self.pattern_map = (self.PATTERN_MAP if pattern_map is None
+                            else dict(pattern_map))
+
+    def degrade(self, spec, plan_cache=None):
+        """Cheapen ``spec``: returns ``(new_spec, info)`` — see class
+        docstring."""
+        import dataclasses
+
+        to_dep = self.deployment_map.get(spec.deployment, spec.deployment)
+        to_pat = spec.pattern
+        mapped = self.pattern_map.get(spec.pattern)
+        changes = {}
+        if to_dep != spec.deployment:
+            changes["deployment"] = to_dep
+        if mapped == "agentx-compiled":
+            # probe under the (possibly degraded) deployment: the plan
+            # key is deployment-scoped too
+            probe = (dataclasses.replace(spec, **changes) if changes
+                     else spec)
+            if plan_cache is not None and self._plan_cached(probe,
+                                                            plan_cache):
+                to_pat = mapped    # spec.pattern intentionally unchanged
+        elif mapped is not None:
+            to_pat = mapped
+            changes["pattern"] = mapped
+        if to_dep == spec.deployment and to_pat == spec.pattern:
+            return spec, None
+        new_spec = dataclasses.replace(spec, **changes) if changes else spec
+        return new_spec, {
+            "from_pattern": spec.pattern, "to_pattern": to_pat,
+            "from_deployment": spec.deployment, "to_deployment": to_dep,
+        }
+
+    @staticmethod
+    def _plan_cached(spec, plan_cache) -> bool:
+        try:
+            from repro.plans.compile import plan_key
+            return plan_cache.get(plan_key(spec)) is not None
+        except Exception:
+            return False
+
+
+class Tenancy:
+    """The bundle ``Session(tenancy=...)`` takes: registry + meter +
+    degrade policy.  Constructing it with just a registry gives
+    fair-share weights and telemetry with no budget enforcement."""
+
+    def __init__(self, registry: Optional[TenantRegistry] = None,
+                 soft_fraction: float = 0.8,
+                 degrade: Optional[DegradePolicy] = None):
+        self.registry = registry if registry is not None else TenantRegistry()
+        self.meter = BudgetMeter(self.registry, soft_fraction=soft_fraction)
+        self.degrade = degrade if degrade is not None else DegradePolicy()
+
+    @classmethod
+    def with_tenants(cls, *tenants: Tenant, **kw) -> "Tenancy":
+        return cls(TenantRegistry(*tenants), **kw)

@@ -1,0 +1,232 @@
+"""Weighted fair-share admission: deficit round-robin (DRR) over tenants.
+
+Three layers, smallest first:
+
+  * :class:`DeficitRoundRobin` — the pure scheduling core.  Tenants
+    accumulate *deficit* in proportion to their weight each time the
+    round-robin pointer visits them; an admission spends ``cost`` units
+    of it.  Over any contended window, admissions per tenant converge to
+    the weight ratio — a bursting tenant is throttled to its share, an
+    idle tenant's credit is reset (no hoarding), and nobody starves
+    (every ring pass replenishes every backlogged tenant).  Fully
+    deterministic: no randomness, insertion-ordered ring.
+
+  * :class:`FairShareGate` — the virtual-clock capacity gate
+    (:mod:`repro.traffic.driver`): the drop-in tenant-aware replacement
+    for ``VirtualSemaphore``.  Waiters park per-tenant; each freed slot
+    is granted to the DRR-chosen tenant's oldest waiter.  Parked waiters
+    count as *blocked* on the shared ``VirtualTimeline``, so a queued
+    run's wait shows up as measured queueing delay, exactly like the
+    plain semaphore.  With a single tenant the gate degenerates to FIFO
+    — bit-identical to ``VirtualSemaphore`` (tested).
+
+  * :class:`TenantQueue` — the real-mode admission structure layered
+    between ``BatchScheduler.submit`` and the scheduler's priority
+    classes: one priority heap per tenant, drained in DRR order.  DRR
+    picks WHICH tenant admits next; ``priority`` (FIFO within a class)
+    still orders that tenant's own requests — fairness across
+    principals, urgency within one.
+"""
+from __future__ import annotations
+
+import asyncio
+import heapq
+from collections import deque
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from .registry import TenantRegistry
+
+
+def _weight_fn(weights) -> Callable[[str], float]:
+    if weights is None:
+        return lambda tenant: 1.0
+    if isinstance(weights, TenantRegistry):
+        return weights.weight
+    if isinstance(weights, dict):
+        return lambda tenant: weights.get(tenant, 1.0)
+    return weights   # already a callable
+
+
+class DeficitRoundRobin:
+    """The DRR core: pick the next tenant to admit among the backlogged.
+
+    ``weights`` may be a :class:`TenantRegistry`, a plain dict, a
+    callable ``tenant -> weight``, or ``None`` (all weights 1.0).
+    ``quantum`` scales how much deficit one ring visit grants
+    (``quantum * weight``); with unit admission cost any positive value
+    yields the same long-run shares.
+    """
+
+    def __init__(self, weights=None, quantum: float = 1.0):
+        self.weight = _weight_fn(weights)
+        self.quantum = quantum
+        self._ring: List[str] = []
+        self._idx = 0
+        self._visited = False    # current position already replenished?
+        self._deficit: Dict[str, float] = {}
+        self.admitted: Dict[str, int] = {}
+
+    def _observe(self, backlogged: Iterable[str]) -> List[str]:
+        active = []
+        for t in backlogged:
+            if t not in self._deficit:
+                self._deficit[t] = 0.0
+                self._ring.append(t)
+            active.append(t)
+        return active
+
+    def next_tenant(self, backlogged: Iterable[str],
+                    cost: float = 1.0) -> Optional[str]:
+        """Charge ``cost`` against the DRR-chosen backlogged tenant and
+        return its name (``None`` when nothing is backlogged)."""
+        t = self._advance(set(self._observe(backlogged)), cost, charge=True)
+        if t is not None:
+            self.admitted[t] = self.admitted.get(t, 0) + 1
+        return t
+
+    def preview(self, backlogged: Iterable[str],
+                cost: float = 1.0) -> Optional[str]:
+        """What :meth:`next_tenant` would return, without charging."""
+        return self._advance(set(self._observe(backlogged)), cost,
+                             charge=False)
+
+    def _advance(self, active: set, cost: float,
+                 charge: bool) -> Optional[str]:
+        if not active:
+            return None
+        idx, visited = self._idx, self._visited
+        deficit = self._deficit if charge else dict(self._deficit)
+        # each full ring pass replenishes every backlogged tenant by
+        # quantum*weight, so as long as one weight is positive the loop
+        # terminates; the guard is a defensive ceiling, not a budget
+        for _ in range(64 * (len(self._ring) + 1)
+                       * max(2, int(cost / self.quantum) + 1)):
+            t = self._ring[idx % len(self._ring)]
+            if t not in active:
+                # idle tenants lose their credit: an empty queue must not
+                # hoard deficit and burst past its share later
+                deficit[t] = 0.0
+                idx, visited = idx + 1, False
+                continue
+            if not visited:
+                deficit[t] += self.quantum * self.weight(t)
+                visited = True
+            if deficit[t] >= cost:
+                if charge:
+                    deficit[t] -= cost
+                    self._idx, self._visited = idx, visited
+                return t
+            idx, visited = idx + 1, False
+        raise RuntimeError("DRR failed to converge — non-positive weights?")
+
+    def shares(self) -> Dict[str, float]:
+        total = sum(self.admitted.values())
+        return {t: n / total for t, n in self.admitted.items()} if total \
+            else {}
+
+
+class FairShareGate:
+    """DRR capacity gate over a :class:`repro.traffic.driver.VirtualTimeline`.
+
+    Duck-types ``VirtualSemaphore`` (``acquire``/``release``), with the
+    acquiring run's tenant as the extra argument.  Waiters park in
+    per-tenant FIFO queues; each release (or initial free slot) is
+    dispatched to the tenant :class:`DeficitRoundRobin` picks.  The
+    ``admissions`` log — ``(virtual time, tenant, contended)`` with
+    ``contended`` true when EVERY tenant that has arrived so far had
+    queued work — is what the noisy-neighbor benchmark reads
+    weight-proportionality off.
+    """
+
+    def __init__(self, timeline, capacity: int, weights=None,
+                 quantum: float = 1.0):
+        self._tl = timeline
+        self._free = capacity
+        self.capacity = capacity
+        self._drr = DeficitRoundRobin(weights, quantum=quantum)
+        self._queues: Dict[str, deque] = {}
+        self._seen: set = set()
+        self.admissions: List[Tuple[float, str, bool]] = []
+
+    async def acquire(self, tenant: str = "") -> None:
+        fut = asyncio.get_running_loop().create_future()
+        self._seen.add(tenant)
+        self._queues.setdefault(tenant, deque()).append(fut)
+        self._tl._blocked += 1
+        self._dispatch()
+        self._tl._maybe_fire()
+        await fut
+
+    def release(self) -> None:
+        self._free += 1
+        self._dispatch()
+
+    def _backlogged(self) -> List[str]:
+        return [t for t, q in self._queues.items() if q]
+
+    def _dispatch(self) -> None:
+        while self._free > 0:
+            backlogged = self._backlogged()
+            tenant = self._drr.next_tenant(backlogged)
+            if tenant is None:
+                return
+            fut = self._queues[tenant].popleft()
+            self._tl._blocked -= 1
+            self._free -= 1
+            self.admissions.append((self._tl.now(), tenant,
+                                    len(backlogged) == len(self._seen)))
+            fut.set_result(None)
+
+    def queue_depth(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+
+class TenantQueue:
+    """Per-tenant priority heaps drained in DRR order — the real-mode
+    admission layer for :class:`repro.serving.scheduler.BatchScheduler`.
+
+    ``push`` files an item under its tenant with the scheduler's own
+    sort key (``(-priority, seq)``: priority classes, FIFO within);
+    ``pop`` charges the DRR and returns the chosen tenant's head;
+    ``peek`` previews it without charging.  ``pop_same_tenant`` grows a
+    same-bucket prefill group without crossing tenants more than the DRR
+    allows."""
+
+    def __init__(self, weights=None, quantum: float = 1.0):
+        self._drr = DeficitRoundRobin(weights, quantum=quantum)
+        self._heaps: Dict[str, List] = {}
+
+    def _backlogged(self) -> List[str]:
+        return [t for t, h in self._heaps.items() if h]
+
+    def push(self, tenant: str, key: tuple, item: Any) -> None:
+        heapq.heappush(self._heaps.setdefault(tenant, []), (key, item))
+
+    def peek(self) -> Optional[Any]:
+        t = self._drr.preview(self._backlogged())
+        return self._heaps[t][0][1] if t is not None else None
+
+    def pop(self) -> Optional[Tuple[str, Any]]:
+        t = self._drr.next_tenant(self._backlogged())
+        if t is None:
+            return None
+        return t, heapq.heappop(self._heaps[t])[1]
+
+    def pop_same_tenant(self, tenant: str,
+                        pred: Callable[[Any], bool]) -> Optional[Any]:
+        """Pop ``tenant``'s head iff the DRR would pick that tenant next
+        AND ``pred`` accepts the head — one more admission inside the
+        tenant's own share, never a cross-tenant cut."""
+        heap = self._heaps.get(tenant)
+        if not heap or not pred(heap[0][1]):
+            return None
+        if self._drr.preview(self._backlogged()) != tenant:
+            return None
+        self._drr.next_tenant(self._backlogged())
+        return heapq.heappop(heap)[1]
+
+    def __len__(self) -> int:
+        return sum(len(h) for h in self._heaps.values())
+
+    def shares(self) -> Dict[str, float]:
+        return self._drr.shares()

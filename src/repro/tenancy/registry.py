@@ -1,0 +1,96 @@
+"""Tenant identity: who a run is billed to, and what they are entitled to.
+
+A :class:`Tenant` names one principal sharing the serving stack — its
+fair-share ``weight`` (deficit-round-robin admission,
+:mod:`repro.tenancy.fair_share`), its token/cost budgets (metered by
+:class:`repro.tenancy.budget.BudgetMeter`), and its SLO class.  The
+:class:`TenantRegistry` resolves ``RunSpec.tenant`` names; the empty name
+``""`` is the single DEFAULT tenant — unlimited budget, weight 1.0 — so
+a stack that never mentions tenants behaves exactly as before tenancy
+existed (the bit-identical parity contract).
+
+Like ``priority``, a spec's ``tenant`` steers scheduling and billing,
+never the run's content: it is EXCLUDED from the ``World`` seed and the
+plan-cache key, but INCLUDED in the run-cache fingerprint — two tenants
+issuing the identical request share a plan graph yet never a cached
+result billed to the wrong principal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterator, Optional
+
+#: the implicit single-tenant principal (``RunSpec.tenant == ""``)
+DEFAULT_TENANT = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    """One principal: fair-share weight, budgets, SLO class.
+
+    ``token_budget`` / ``cost_budget_usd`` are hard caps over the
+    meter's lifetime (``inf`` = unlimited); soft exhaustion — the point
+    where :class:`repro.tenancy.budget.DegradePolicy` starts downgrading
+    runs — is a *fraction* of the hard cap, owned by the meter, not the
+    tenant."""
+    name: str
+    weight: float = 1.0
+    token_budget: float = math.inf
+    cost_budget_usd: float = math.inf
+    slo_class: str = "standard"
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"tenant {self.name!r}: weight must be > 0 "
+                             f"(got {self.weight})")
+
+
+class TenantRegistry:
+    """Name -> :class:`Tenant` table with a permissive default.
+
+    Unknown names resolve to an unlimited weight-1.0 tenant of that name
+    (registered on first resolve), so traffic can stamp tenants before
+    anyone configures entitlements — configuration tightens behavior, it
+    never gates admission."""
+
+    def __init__(self, *tenants: Tenant):
+        self._tenants: Dict[str, Tenant] = {}
+        self.register(Tenant(DEFAULT_TENANT))
+        for t in tenants:
+            self.register(t)
+
+    def register(self, tenant: Tenant) -> Tenant:
+        self._tenants[tenant.name] = tenant
+        return tenant
+
+    def resolve(self, name: str) -> Tenant:
+        t = self._tenants.get(name)
+        if t is None:
+            t = self.register(Tenant(name))
+        return t
+
+    def weight(self, name: str) -> float:
+        return self.resolve(name).weight
+
+    def get(self, name: str) -> Optional[Tenant]:
+        return self._tenants.get(name)
+
+    def __iter__(self) -> Iterator[Tenant]:
+        return iter(self._tenants.values())
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def names(self) -> list:
+        return list(self._tenants)
+
+    def describe(self) -> Dict[str, Dict]:
+        return {t.name or "<default>": {
+            "weight": t.weight,
+            "token_budget": (None if math.isinf(t.token_budget)
+                             else t.token_budget),
+            "cost_budget_usd": (None if math.isinf(t.cost_budget_usd)
+                                else t.cost_budget_usd),
+            "slo_class": t.slo_class,
+        } for t in self}

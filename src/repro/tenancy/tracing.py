@@ -1,0 +1,314 @@
+"""OTel-style span export: fold a ``RunEvent`` stream into a span tree.
+
+The event stream is already the run's complete history — it replays
+bit-identically across FaaS / A2A wire boundaries (PR 4/5 parity) — so
+spans are a *derived view*, never a second instrumentation path:
+``fold_spans(events)`` on an in-process stream and on
+``events_from_wire(events_to_wire(events))`` produce identical trees
+(tested).
+
+Tree shape::
+
+    run (RunStarted .. RunCompleted)           tenant, pattern, cost attrs
+    ├── stage[i] (StageStarted .. StageCompleted / next stage)
+    │   ├── llm  <agent>        [t-latency, t]   token + cost attrs
+    │   ├── tool <server.tool>  [t-latency, t]
+    │   │   ├── retry #n        zero-width, at the retry's emission time
+    │   │   └── hedge           zero-width, winner/saved_s attrs
+    │   └── annotation events (PlanProduced, ReflectionEmitted, ...)
+    └── (patterns without stages — react — attach children to the run)
+
+Every span carries the run's ``tenant`` and its own ``cost_usd``
+(Eq. 1 for llm spans, summed upward), so a span dump is a billing
+attribution document.  **Losslessness**: every event in the stream is
+represented — as a span, or as a zero-width annotation event on the
+innermost open span — so no accounting escapes the export.
+
+``to_otlp`` renders the tree as OTLP-shaped JSON
+(``resourceSpans → scopeSpans → spans`` with hex trace/span ids and
+UnixNano timestamps); ids are deterministic sequence numbers, keeping
+exports reproducible under the virtual clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.core.events import (BudgetExceeded, LLMCompleted,
+                               OverheadIncurred, RunCompleted, RunDegraded,
+                               RunEvent, RunHedged, RunStarted,
+                               StageCompleted, StageStarted, ToolInvoked,
+                               ToolRetried)
+
+
+@dataclasses.dataclass
+class Span:
+    """One node of the tree.  ``start``/``end`` are virtual-clock
+    seconds; zero-width spans (retry/hedge markers) have
+    ``start == end``."""
+    name: str
+    kind: str                     # run | stage | llm | tool | retry | hedge
+    start: float
+    end: float
+    span_id: str
+    parent_id: Optional[str]
+    attributes: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    children: List["Span"] = dataclasses.field(default_factory=list)
+
+    def walk(self):
+        yield self
+        for c in self.children:
+            yield from c.walk()
+
+
+class _Ids:
+    """Deterministic 8-byte hex span ids: a simple counter, so the same
+    event stream always yields the same ids (virtual clock, no RNG)."""
+
+    def __init__(self):
+        self._n = 0
+
+    def next(self) -> str:
+        self._n += 1
+        return "%016x" % self._n
+
+
+def fold_spans(events: List[RunEvent],
+               service: str = "repro") -> List[Span]:
+    """Fold one run's event stream into its span tree (list of roots —
+    normally one run span; pre-run admission events such as
+    ``BudgetExceeded`` on a rejected stream produce a zero-width root)."""
+    ids = _Ids()
+    roots: List[Span] = []
+    run: Optional[Span] = None
+    stage: Optional[Span] = None
+    # retries/hedges are emitted DURING a tool call, before its
+    # ToolInvoked: buffer per (server, tool) and attach to the next
+    # matching tool span
+    pending: Dict[tuple, List[Span]] = {}
+    # admission decisions (RunDegraded) precede RunStarted: buffer and
+    # attach to the run span once it opens
+    preamble: List[Span] = []
+
+    def container() -> Optional[Span]:
+        return stage if stage is not None else run
+
+    def close_stage(t: float, success: Optional[bool] = None) -> None:
+        nonlocal stage
+        if stage is None:
+            return
+        stage.end = t
+        if success is not None:
+            stage.attributes["success"] = success
+        stage = None
+
+    for ev in events:
+        if isinstance(ev, RunStarted):
+            run = Span(name=f"run {ev.pattern}", kind="run", start=ev.t,
+                       end=ev.t, span_id=ids.next(), parent_id=None,
+                       attributes={"service": service,
+                                   "tenant": ev.tenant,
+                                   "pattern": ev.pattern,
+                                   "task": ev.task})
+            for p in preamble:
+                p.parent_id = run.span_id
+                run.children.append(p)
+            preamble.clear()
+            roots.append(run)
+        elif isinstance(ev, StageStarted):
+            close_stage(ev.t)
+            parent = run
+            stage = Span(name=f"stage[{ev.index}] {ev.name}", kind="stage",
+                         start=ev.t, end=ev.t, span_id=ids.next(),
+                         parent_id=parent.span_id if parent else None,
+                         attributes={"index": ev.index})
+            if parent is not None:
+                parent.children.append(stage)
+            else:
+                roots.append(stage)
+        elif isinstance(ev, StageCompleted):
+            close_stage(ev.t, success=ev.success)
+        elif isinstance(ev, LLMCompleted):
+            e = ev.event
+            parent = container()
+            span = Span(name=f"llm {e.agent}", kind="llm",
+                        start=ev.t - e.latency, end=ev.t,
+                        span_id=ids.next(),
+                        parent_id=parent.span_id if parent else None,
+                        attributes={"agent": e.agent,
+                                    "input_tokens": e.input_tokens,
+                                    "output_tokens": e.output_tokens,
+                                    "cost_usd": e.cost})
+            (parent.children if parent else roots).append(span)
+        elif isinstance(ev, ToolInvoked):
+            e = ev.event
+            parent = container()
+            span = Span(name=f"tool {e.server}.{e.tool}", kind="tool",
+                        start=ev.t - e.latency, end=ev.t,
+                        span_id=ids.next(),
+                        parent_id=parent.span_id if parent else None,
+                        attributes={"server": e.server, "tool": e.tool,
+                                    "ok": e.ok})
+            for child in pending.pop((e.server, e.tool), []):
+                child.parent_id = span.span_id
+                span.children.append(child)
+            (parent.children if parent else roots).append(span)
+        elif isinstance(ev, ToolRetried):
+            pending.setdefault((ev.server, ev.tool), []).append(
+                Span(name=f"retry #{ev.attempt}", kind="retry",
+                     start=ev.t, end=ev.t, span_id=ids.next(),
+                     parent_id=None,
+                     attributes={"attempt": ev.attempt, "error": ev.error,
+                                 "backoff_s": ev.backoff_s}))
+        elif isinstance(ev, RunHedged):
+            pending.setdefault((ev.server, ev.tool), []).append(
+                Span(name=f"hedge {ev.winner}", kind="hedge",
+                     start=ev.t, end=ev.t, span_id=ids.next(),
+                     parent_id=None,
+                     attributes={"winner": ev.winner,
+                                 "primary_s": ev.primary_s,
+                                 "hedge_s": ev.hedge_s,
+                                 "saved_s": ev.saved_s}))
+        elif isinstance(ev, RunCompleted):
+            close_stage(ev.t)
+            if run is not None:
+                run.end = ev.t
+                run.attributes["completed"] = ev.completed
+        elif isinstance(ev, RunDegraded) and run is None:
+            preamble.append(
+                Span(name="degraded", kind="admission", start=ev.t,
+                     end=ev.t, span_id=ids.next(), parent_id=None,
+                     attributes={"tenant": ev.tenant, "reason": ev.reason,
+                                 "from_pattern": ev.from_pattern,
+                                 "to_pattern": ev.to_pattern,
+                                 "from_deployment": ev.from_deployment,
+                                 "to_deployment": ev.to_deployment}))
+        elif isinstance(ev, BudgetExceeded) and run is None:
+            roots.append(
+                Span(name="rejected", kind="admission", start=ev.t,
+                     end=ev.t, span_id=ids.next(), parent_id=None,
+                     attributes={"tenant": ev.tenant, "kind": ev.kind,
+                                 "used": ev.used, "budget": ev.budget}))
+        else:
+            # losslessness: every remaining event (PlanProduced,
+            # ReflectionEmitted, PlanCompiled, EngineStepped, ...)
+            # becomes a zero-width annotation on the innermost open span
+            c = container()
+            record = {"t": ev.t, "type": type(ev).__name__}
+            for f in dataclasses.fields(ev):
+                if f.name == "t":
+                    continue
+                record[f.name] = _short(getattr(ev, f.name))
+            if c is not None:
+                c.events.append(record)
+            else:
+                roots.append(Span(name=type(ev).__name__, kind="event",
+                                  start=ev.t, end=ev.t,
+                                  span_id=ids.next(), parent_id=None,
+                                  attributes=record))
+
+    # orphaned retries/hedges (policy gave up before any ToolInvoked):
+    # attach to the innermost open container so nothing is dropped
+    for key, orphans in sorted(pending.items()):
+        target = container() or run
+        for o in orphans:
+            if target is not None:
+                o.parent_id = target.span_id
+                target.children.append(o)
+            else:
+                roots.append(o)
+
+    for root in roots:
+        _propagate(root, root.attributes.get("tenant", ""))
+    return roots
+
+
+def _short(v: Any, limit: int = 200) -> Any:
+    if isinstance(v, (bool, int, float)) or v is None:
+        return v
+    s = v if isinstance(v, str) else repr(v)
+    return s if len(s) <= limit else s[:limit] + "…"
+
+
+def _propagate(span: Span, tenant: str) -> float:
+    """Stamp ``tenant`` on every span and roll ``cost_usd`` upward
+    (a parent's cost = own + sum of children's)."""
+    span.attributes.setdefault("tenant", tenant)
+    cost = float(span.attributes.get("cost_usd", 0.0))
+    for c in span.children:
+        cost += _propagate(c, tenant)
+    span.attributes["cost_usd"] = cost
+    return cost
+
+
+def spans_for_result(result) -> List[Span]:
+    """Span tree for a finished :class:`repro.core.metrics.RunResult`
+    (its ``extras["events"]`` stream)."""
+    return fold_spans(list(result.extras.get("events", ())))
+
+
+# ---------------------------------------------------------------------------
+# OTLP-shaped JSON export
+
+def _nanos(t: float) -> int:
+    return int(round(t * 1e9))
+
+
+def _otlp_value(v: Any) -> Dict[str, Any]:
+    if isinstance(v, bool):
+        return {"boolValue": v}
+    if isinstance(v, int):
+        return {"intValue": str(v)}
+    if isinstance(v, float):
+        return {"doubleValue": v}
+    return {"stringValue": str(v)}
+
+
+def _otlp_span(span: Span, trace_id: str) -> Dict[str, Any]:
+    d = {
+        "traceId": trace_id,
+        "spanId": span.span_id,
+        "name": span.name,
+        "kind": 1,   # SPAN_KIND_INTERNAL
+        "startTimeUnixNano": str(_nanos(span.start)),
+        "endTimeUnixNano": str(_nanos(span.end)),
+        "attributes": [{"key": k, "value": _otlp_value(v)}
+                       for k, v in sorted(span.attributes.items())],
+    }
+    if span.parent_id is not None:
+        d["parentSpanId"] = span.parent_id
+    if span.events:
+        d["events"] = [{
+            "timeUnixNano": str(_nanos(e["t"])),
+            "name": e["type"],
+            "attributes": [{"key": k, "value": _otlp_value(v)}
+                           for k, v in sorted(e.items())
+                           if k not in ("t", "type")],
+        } for e in span.events]
+    return d
+
+
+def to_otlp(roots: List[Span], service: str = "repro",
+            trace_id: str = "%032x" % 1) -> Dict[str, Any]:
+    """Render a span tree as an OTLP/JSON ``ExportTraceServiceRequest``
+    payload (the shape an OTel collector's HTTP receiver accepts)."""
+    flat = [s for root in roots for s in root.walk()]
+    return {"resourceSpans": [{
+        "resource": {"attributes": [
+            {"key": "service.name", "value": {"stringValue": service}},
+        ]},
+        "scopeSpans": [{
+            "scope": {"name": "repro.tenancy.tracing"},
+            "spans": [_otlp_span(s, trace_id) for s in flat],
+        }],
+    }]}
+
+
+def export_otlp_json(events: List[RunEvent], service: str = "repro",
+                     indent: Optional[int] = None) -> str:
+    """One-call convenience: events → span tree → OTLP JSON string."""
+    return json.dumps(to_otlp(fold_spans(events, service=service),
+                              service=service), indent=indent,
+                      sort_keys=True)

@@ -13,19 +13,20 @@ evaluation system (ROADMAP "Traffic"):
     countered by ``Session(retry=..., hedge=...)``;
   * :mod:`repro.traffic.slo` — per-scenario success/latency/TTFT/cost
     aggregation against SLO targets (``benchmarks/traffic.py`` writes
-    it to ``artifacts/BENCH_traffic.json``).
+    it to ``artifacts/BENCH_traffic.json``), with a per-tenant section
+    when the mix is multi-tenant (:mod:`repro.tenancy`).
 """
 from .driver import (TrafficDriver, TrafficRecord, TrafficReport,
                      VirtualSemaphore, VirtualTimeline, drive_specs)
 from .faults import (FaultInjectingTransport, FaultPlan, FaultStats,
                      FaultyDeployment, register_fault_plan)
 from .slo import SLOTarget, aggregate_report, percentile
-from .workload import DEFAULT_MIX, Arrival, Scenario, Workload
+from .workload import DEFAULT_MIX, Arrival, Scenario, Workload, tenant_mix
 
 __all__ = [
     "Arrival", "DEFAULT_MIX", "FaultInjectingTransport", "FaultPlan",
     "FaultStats", "FaultyDeployment", "SLOTarget", "Scenario",
     "TrafficDriver", "TrafficRecord", "TrafficReport", "VirtualSemaphore",
     "VirtualTimeline", "Workload", "aggregate_report", "drive_specs",
-    "percentile", "register_fault_plan",
+    "percentile", "register_fault_plan", "tenant_mix",
 ]

@@ -114,7 +114,10 @@ class VirtualSemaphore:
         self._free = capacity
         self._waiters: deque = deque()
 
-    async def acquire(self) -> None:
+    async def acquire(self, tenant: str = "") -> None:
+        """``tenant`` is accepted (and ignored) so the plain FIFO gate
+        and the tenant-aware :class:`repro.tenancy.FairShareGate` stay
+        interchangeable for the driver."""
         if self._free > 0:
             self._free -= 1
             return
@@ -251,7 +254,7 @@ async def _run_on_timeline(session, timeline: VirtualTimeline,
     the loop."""
     t_arrive = timeline.now()
     if sem is not None:
-        await sem.acquire()
+        await sem.acquire(getattr(spec, "tenant", ""))
     crashes = resumes = 0
     sunk = 0.0
     try:
@@ -313,7 +316,8 @@ async def drive_specs(session, specs: List, arrivals=None,
     sem = timeline.semaphore(max_concurrency) if max_concurrency > 0 else None
     wrapped = [Arrival(i, t, Scenario(scenario, s.app, s.instance,
                                       s.pattern, s.deployment, s.llm,
-                                      s.priority), s)
+                                      s.priority,
+                                      tenant=getattr(s, "tenant", "")), s)
                for i, (t, s) in enumerate(zip(times, specs))]
     for _ in wrapped:
         timeline.register()
@@ -342,12 +346,23 @@ class TrafficDriver:
     otherwise; ``"rerun"`` restarts crashed runs from scratch (the
     non-durable baseline the durability benchmark prices resume
     against).
+
+    ``tenants`` (virtual mode) turns the capacity gate tenant-aware: a
+    :class:`repro.tenancy.TenantRegistry` (or a plain ``{tenant:
+    weight}`` dict) makes the driver admit queued runs in weighted
+    deficit-round-robin order across tenants
+    (:class:`repro.tenancy.FairShareGate`) instead of global FIFO —
+    a tenant bursting past its weight queues behind its own backlog
+    while other tenants keep their share.  Requires
+    ``max_concurrency > 0`` (an unbounded driver has no admission point
+    to arbitrate).  The gate of the most recent :meth:`run` is kept on
+    ``last_gate`` for its admission log.
     """
 
     def __init__(self, session=None, max_concurrency: int = 0,
                  mode: str = "virtual", time_scale: float = 1.0,
                  restart: str = "auto", max_restarts: int = 8,
-                 restart_delay_s: float = 0.0):
+                 restart_delay_s: float = 0.0, tenants=None):
         if mode not in ("virtual", "real"):
             raise ValueError(f"unknown mode {mode!r}")
         # deferred: repro.apps.session imports this module lazily too
@@ -365,6 +380,23 @@ class TrafficDriver:
         self.restart = restart
         self.max_restarts = max_restarts
         self.restart_delay_s = restart_delay_s
+        self.tenants = tenants
+        self.last_gate = None
+
+    def _gate(self, timeline: VirtualTimeline):
+        """Build this workload's capacity gate: tenant-aware fair share
+        when ``tenants`` is configured, plain FIFO otherwise."""
+        if self.max_concurrency <= 0:
+            self.last_gate = None
+            return None
+        if self.tenants is not None:
+            from ..tenancy.fair_share import FairShareGate
+            gate = FairShareGate(timeline, self.max_concurrency,
+                                 self.tenants)
+        else:
+            gate = timeline.semaphore(self.max_concurrency)
+        self.last_gate = gate
+        return gate
 
     # -- entry point --------------------------------------------------------
     def run(self, workload: Workload) -> TrafficReport:
@@ -405,8 +437,7 @@ class TrafficDriver:
     # -- virtual, open loop --------------------------------------------------
     async def _drive_open(self, workload: Workload) -> List[TrafficRecord]:
         timeline = VirtualTimeline()
-        sem = (timeline.semaphore(self.max_concurrency)
-               if self.max_concurrency > 0 else None)
+        sem = self._gate(timeline)
         arrivals = workload.arrivals()
         for _ in arrivals:
             timeline.register()
@@ -424,8 +455,7 @@ class TrafficDriver:
         offered load adapts to observed latency, the classic saturation
         probe."""
         timeline = VirtualTimeline()
-        sem = (timeline.semaphore(self.max_concurrency)
-               if self.max_concurrency > 0 else None)
+        sem = self._gate(timeline)
         # exactly n_requests total: early users absorb the remainder
         base, extra = divmod(workload.n_requests, workload.users)
         counts = [base + (1 if u < extra else 0)

@@ -114,10 +114,43 @@ def _aggregate(records: List[TrafficRecord],
     }
 
 
+def _tenant_section(records: List[TrafficRecord], virtual_s: float,
+                    slo: SLOTarget) -> Dict[str, object]:
+    """Per-tenant rollup: the scenario aggregate plus billing telemetry
+    — tokens, cost, degraded/rejected run counts (from the admission
+    events on each run's stream) and fair-share token throughput
+    (tokens per virtual second over the workload span)."""
+    from ..core.events import BudgetExceeded, RunDegraded
+    by_tenant: Dict[str, List[TrafficRecord]] = {}
+    for r in records:
+        by_tenant.setdefault(getattr(r.spec, "tenant", ""), []).append(r)
+
+    out: Dict[str, object] = {}
+    for tenant, recs in sorted(by_tenant.items()):
+        agg = _aggregate(recs, slo)
+        tokens = sum(r.result.trace.input_tokens
+                     + r.result.trace.output_tokens for r in recs)
+        events = [e for r in recs
+                  for e in r.result.extras.get("events", ())]
+        agg["tenant"] = {
+            "tokens": tokens,
+            "token_throughput": tokens / virtual_s if virtual_s else 0.0,
+            "cost_usd": sum(r.result.total_cost for r in recs),
+            "degraded_runs": sum(isinstance(e, RunDegraded)
+                                 for e in events),
+            "rejected_runs": sum(isinstance(e, BudgetExceeded)
+                                 for e in events),
+        }
+        out[tenant or "<default>"] = agg
+    return out
+
+
 def aggregate_report(report: TrafficReport,
                      slo: Optional[SLOTarget] = None) -> Dict[str, object]:
     """The full summary: one section per scenario + an overall rollup +
-    the replay economics (virtual seconds simulated per wall second)."""
+    the replay economics (virtual seconds simulated per wall second).
+    When any record carries a non-default tenant, a ``tenants`` section
+    breaks the same aggregate down per billing principal."""
     slo = slo if slo is not None else SLOTarget()
     by_scenario: Dict[str, List[TrafficRecord]] = {}
     for r in report.records:
@@ -135,6 +168,9 @@ def aggregate_report(report: TrafficReport,
                                if report.virtual_s else 0.0),
         },
     }
+    if any(getattr(r.spec, "tenant", "") for r in report.records):
+        out["tenants"] = _tenant_section(report.records, report.virtual_s,
+                                         slo)
     if report.plan_cache is not None:
         out["plan_cache"] = report.plan_cache
     return out

@@ -33,7 +33,11 @@ from ..apps.session import RunSpec
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One weighted cell of the traffic mix."""
+    """One weighted cell of the traffic mix.
+
+    ``tenant`` stamps every spec this cell emits with its billing
+    principal (multi-tenant serving, :mod:`repro.tenancy`); ``""`` is
+    the single default tenant."""
     name: str
     app: str
     instance: str
@@ -42,11 +46,12 @@ class Scenario:
     llm: str = "oracle"
     priority: int = 0
     weight: float = 1.0
+    tenant: str = ""
 
     def spec(self, seed: int) -> RunSpec:
         return RunSpec(self.app, self.instance, self.pattern,
                        self.deployment, seed=seed, llm=self.llm,
-                       priority=self.priority)
+                       priority=self.priority, tenant=self.tenant)
 
 
 #: the default evaluation mix: the paper's three applications across the
@@ -64,6 +69,23 @@ DEFAULT_MIX: Tuple[Scenario, ...] = (
     Scenario("research/local/magentic", "research_report", "flow",
              "magentic", "local", weight=1.0),
 )
+
+
+def tenant_mix(tenants: dict,
+               base: Tuple[Scenario, ...] = DEFAULT_MIX
+               ) -> Tuple[Scenario, ...]:
+    """Replicate a scenario mix per tenant: ``tenants`` maps tenant name
+    -> arrival-rate multiplier (1.0 = the base mix's share, 5.0 = a
+    tenant offering 5× that load — the noisy-neighbor shape).  Each base
+    scenario is copied per tenant as ``"<tenant>/<name>"`` with its
+    arrival weight scaled; fair-share entitlement stays with the
+    :class:`repro.tenancy.TenantRegistry` weights — this helper shapes
+    *offered* load, not *admitted* share."""
+    return tuple(
+        dataclasses.replace(s, name=f"{tenant}/{s.name}", tenant=tenant,
+                            weight=s.weight * mult)
+        for tenant, mult in tenants.items()
+        for s in base)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,14 +11,14 @@ import dataclasses
 import pytest
 
 from repro.core.events import (_EVENT_TYPES, MIN_WIRE_VERSION, WIRE_VERSION,
-                               EngineStepped, LLMCompleted,
+                               BudgetExceeded, EngineStepped, LLMCompleted,
                                OverheadIncurred, PlanCacheMiss, PlanCompiled,
                                PlanFallback, PlanProduced, ReflectionEmitted,
-                               RunCompleted, RunHedged, RunStarted,
-                               StageCompleted, StageStarted, ToolInvoked,
-                               ToolRetried, WireVersionError, derive_trace,
-                               events_from_wire, events_to_wire, from_wire,
-                               to_wire)
+                               RunCompleted, RunDegraded, RunHedged,
+                               RunStarted, StageCompleted, StageStarted,
+                               ToolInvoked, ToolRetried, WireVersionError,
+                               derive_trace, events_from_wire,
+                               events_to_wire, from_wire, to_wire)
 from repro.core.metrics import FrameworkEvent, LLMEvent, ToolEvent
 
 # one concrete instance of every wire-registered event type
@@ -47,6 +47,11 @@ SAMPLES = [
                  stage=1),
     EngineStepped(t=7.0, live=3, queued=2, generated=3, prefilled=64,
                   preempted=1),
+    RunDegraded(t=0.0, tenant="acme", reason="soft budget exhaustion",
+                from_pattern="agentx", to_pattern="agentx-compiled",
+                from_deployment="faas", to_deployment="local"),
+    BudgetExceeded(t=0.0, tenant="acme", kind="tokens", used=1_000_001.0,
+                   budget=1_000_000.0),
 ]
 
 
@@ -101,6 +106,21 @@ def test_pre_plan_toolevent_payload_defaults():
                      "latency": 0.8, "ok": True, "t": 3.0}}
     ev = from_wire(old)
     assert ev.event.args is None and ev.event.result is None
+
+
+def test_pre_tenancy_runstarted_payload_defaults():
+    """A pre-tenancy RunStarted payload (no ``tenant`` field) still
+    deserializes — the tenant defaults to the single default tenant."""
+    old = {"type": "RunStarted", "t": 0.0, "pattern": "agentx",
+           "task": "do the thing"}
+    ev = from_wire(old)
+    assert ev.tenant == ""
+
+
+def test_tenant_stamped_runstarted_roundtrips():
+    ev = RunStarted(t=0.0, pattern="react", task="t", tenant="acme")
+    assert from_wire(to_wire(ev)) == ev
+    assert to_wire(ev)["tenant"] == "acme"
 
 
 def test_unknown_type_raises():

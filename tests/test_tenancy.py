@@ -1,0 +1,511 @@
+"""Multi-tenant serving (``repro.tenancy``): fair share, budgets, spans.
+
+Acceptance criteria pinned here:
+
+  * **fingerprint hygiene** — ``RunSpec.tenant`` enters the run-cache
+    fingerprint (no cross-tenant cache hits) but neither the world seed
+    nor the plan key (tenants share worlds and compiled graphs);
+  * **fair share** — deficit-round-robin admission tracks weights, a
+    single tenant degenerates to the plain FIFO semaphore bit-identically,
+    and the real-mode scheduler interleaves tenants instead of FIFO;
+  * **budgets** — soft exhaustion degrades (``RunDegraded`` precedes
+    ``RunStarted`` on the stream, run not cached), hard exhaustion
+    rejects (``BudgetExceeded``, nothing billed);
+  * **span export** — lossless folding, identical trees for in-process
+    and wire-replayed streams, correct nesting across patterns;
+  * **parity** — with tenancy off (or a default tenant and no budgets)
+    every run is bit-identical to a tenancy-free session.
+"""
+import asyncio
+import dataclasses
+import json
+
+import pytest
+
+from repro.apps.cache import RunCache, spec_fingerprint
+from repro.apps.session import RunSpec, Session, stable_world_seed
+from repro.core.events import (BudgetExceeded, LLMCompleted, RunCompleted,
+                               RunDegraded, RunStarted, StageCompleted,
+                               events_from_wire, events_to_wire)
+from repro.core.metrics import LLMEvent
+from repro.plans.compile import plan_key
+from repro.tenancy import (DEFAULT_TENANT, BudgetMeter, DeficitRoundRobin,
+                           DegradePolicy, FairShareGate, Tenancy, Tenant,
+                           TenantQueue, TenantRegistry, fold_spans,
+                           to_otlp)
+from repro.traffic import TrafficDriver, Workload, tenant_mix
+from repro.traffic.driver import VirtualTimeline
+from repro.traffic.workload import DEFAULT_MIX
+
+WEB = ("web_search", "quantum", "agentx")
+REACT = ("web_search", "edge", "react")
+MAGENTIC = ("research_report", "flow", "magentic")
+
+
+def spec(app=WEB[0], inst=WEB[1], pattern=WEB[2], **kw):
+    return RunSpec(app, inst, pattern, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint hygiene
+
+
+def test_tenant_in_run_cache_fingerprint():
+    assert (spec_fingerprint(spec(tenant="acme"))
+            != spec_fingerprint(spec()))
+    assert (spec_fingerprint(spec(tenant="acme"))
+            != spec_fingerprint(spec(tenant="zeta")))
+
+
+def test_default_tenant_fingerprint_unchanged():
+    """The default tenant is OMITTED from the fingerprint payload, so
+    pre-tenancy fingerprints (and on-disk caches keyed by them) stay
+    byte-identical."""
+    assert (spec_fingerprint(spec())
+            == spec_fingerprint(dataclasses.replace(spec(tenant="x"),
+                                                    tenant="")))
+
+
+def test_tenant_excluded_from_world_seed_and_plan_key():
+    assert stable_world_seed(spec(tenant="acme")) == stable_world_seed(spec())
+    assert plan_key(spec(tenant="acme")) == plan_key(spec())
+
+
+def test_no_cross_tenant_cache_hits():
+    """Same spec, two tenants, one shared RunCache: both executions are
+    billed — the second tenant is never served the first's result."""
+    tenancy = Tenancy.with_tenants(Tenant("a"), Tenant("b"))
+    sess = Session(cache=RunCache(), tenancy=tenancy)
+    sess.execute(spec(tenant="a", seed=3))
+    sess.execute(spec(tenant="b", seed=3))
+    tok_a, _ = tenancy.meter.used("a")
+    tok_b, _ = tenancy.meter.used("b")
+    assert tok_a > 0 and tok_b > 0
+
+    # ... while a repeat from the SAME tenant is a cache hit: returned
+    # unbilled (the tenant already paid at first execution)
+    sess.execute(spec(tenant="a", seed=3))
+    assert tenancy.meter.used("a") == (tok_a, _)
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def test_registry_defaults_and_validation():
+    reg = TenantRegistry(Tenant("gold", weight=4.0))
+    assert reg.weight("gold") == 4.0
+    assert reg.weight("unknown") == 1.0           # permissive resolve
+    assert reg.resolve(DEFAULT_TENANT).token_budget == float("inf")
+    with pytest.raises(ValueError):
+        Tenant("bad", weight=0.0)
+    with pytest.raises(ValueError):
+        Tenant("bad", weight=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# deficit round robin
+
+
+def test_drr_equal_weights_alternate():
+    drr = DeficitRoundRobin()
+    picks = [drr.next_tenant(["a", "b"]) for _ in range(6)]
+    assert picks == ["a", "b", "a", "b", "a", "b"]
+
+
+def test_drr_weighted_shares():
+    drr = DeficitRoundRobin({"a": 2.0, "b": 1.0})
+    picks = [drr.next_tenant(["a", "b"]) for _ in range(300)]
+    assert abs(picks.count("a") / 300 - 2 / 3) < 0.02
+    # and deterministically so
+    drr2 = DeficitRoundRobin({"a": 2.0, "b": 1.0})
+    assert [drr2.next_tenant(["a", "b"]) for _ in range(300)] == picks
+
+
+def test_drr_idle_tenant_does_not_hoard():
+    """A tenant idle for many rounds re-enters with RESET credit — it
+    gets its fair share going forward, not a burst repaying the idle
+    time."""
+    drr = DeficitRoundRobin()
+    for _ in range(50):                  # b idle: a absorbs everything
+        assert drr.next_tenant(["a"]) == "a"
+    picks = [drr.next_tenant(["a", "b"]) for _ in range(20)]
+    assert picks.count("b") <= 11        # ~half, never a catch-up burst
+
+
+def test_drr_preview_does_not_charge():
+    drr = DeficitRoundRobin()
+    assert drr.preview(["a", "b"]) == drr.next_tenant(["a", "b"]) == "a"
+    assert drr.admitted == {"a": 1}
+
+
+# ---------------------------------------------------------------------------
+# FairShareGate on the virtual timeline
+
+
+def _drive_gate(jobs, capacity=1, weights=None, fifo=False):
+    """Run ``jobs`` = [(tenant, duration), ...] (all arriving at t=0, in
+    order) through a capacity gate; returns the admission order as
+    [(virtual_t, tenant), ...]."""
+    order = []
+
+    async def main():
+        tl = VirtualTimeline()
+        gate = (tl.semaphore(capacity) if fifo
+                else FairShareGate(tl, capacity, weights))
+
+        async def worker(tenant, dur):
+            try:
+                await gate.acquire(tenant)
+                order.append((tl.now(), tenant))
+                await tl.sleep(dur)
+                gate.release()
+            finally:
+                tl.unregister()
+
+        for _ in jobs:
+            tl.register()
+        await asyncio.gather(*[asyncio.ensure_future(worker(t, d))
+                               for t, d in jobs])
+
+    asyncio.run(main())
+    return order
+
+
+def test_gate_interleaves_tenants_not_fifo():
+    """4 queued runs from a bursting tenant vs 2 from a steady one,
+    capacity 1: FIFO starves the steady tenant to the tail; DRR
+    alternates."""
+    jobs = [("a", 1.0)] * 4 + [("b", 1.0)] * 2
+    assert [t for _, t in _drive_gate(jobs, fifo=True)] \
+        == ["a", "a", "a", "a", "b", "b"]
+    assert [t for _, t in _drive_gate(jobs)] \
+        == ["a", "b", "a", "b", "a", "a"]
+
+
+def test_gate_weighted_admission():
+    jobs = [("a", 1.0)] * 6 + [("b", 1.0)] * 3
+    order = [t for _, t in _drive_gate(jobs, weights={"a": 2.0, "b": 1.0})]
+    assert order == ["a", "a", "b", "a", "a", "b", "a", "a", "b"]
+
+
+def test_gate_single_tenant_is_fifo_bit_identical():
+    jobs = [("", d) for d in (2.0, 1.0, 3.0, 1.5, 0.5)]
+    assert _drive_gate(jobs, capacity=2) == _drive_gate(jobs, capacity=2,
+                                                        fifo=True)
+
+
+def test_driver_single_tenant_gate_parity():
+    """A whole workload through TrafficDriver: the tenant-aware gate
+    with one (default) tenant reproduces the FIFO semaphore's timeline
+    exactly."""
+    wl = Workload(rate=3.0, n_requests=12, seed=1)
+    plain = TrafficDriver(Session(), max_concurrency=2).run(wl)
+    gated = TrafficDriver(Session(), max_concurrency=2,
+                          tenants=TenantRegistry()).run(wl)
+    assert ([(r.start, r.end, r.queue_wait) for r in plain.records]
+            == [(r.start, r.end, r.queue_wait) for r in gated.records])
+
+
+# ---------------------------------------------------------------------------
+# TenantQueue (real-mode admission)
+
+
+def test_tenant_queue_priority_within_tenant_drr_across():
+    tq = TenantQueue()
+    tq.push("a", (0, 0), "a-low")
+    tq.push("a", (-5, 1), "a-high")
+    tq.push("b", (0, 2), "b-only")
+    first = tq.pop()
+    assert first == ("a", "a-high")      # priority class within tenant
+    assert tq.pop() == ("b", "b-only")   # DRR alternates tenants
+    assert tq.pop() == ("a", "a-low")
+    assert tq.pop() is None and len(tq) == 0
+
+
+def test_tenant_queue_same_tenant_pop_respects_drr():
+    tq = TenantQueue()
+    tq.push("a", (0, 0), "a0")
+    tq.push("a", (0, 1), "a1")
+    tq.push("b", (0, 2), "b0")
+    assert tq.pop() == ("a", "a0")
+    # growing a's prefill group would cut in front of b — refused
+    assert tq.pop_same_tenant("a", lambda item: True) is None
+    assert tq.pop() == ("b", "b0")
+    # now it's a's turn again
+    assert tq.pop_same_tenant("a", lambda item: True) == "a1"
+
+
+def test_scheduler_fair_share_interleaves_tenants():
+    """BatchScheduler with ``fair_share``: one slot, tenant a's four
+    requests queued ahead of tenant b's two — b's first token lands
+    before a's third request (DRR), and generation is token-identical
+    to the FIFO scheduler."""
+    from repro.configs import get_config
+    from repro.serving import BatchScheduler, Engine
+
+    eng = Engine(get_config("tinyllama-1.1b").reduced(), temperature=0.0)
+    subs = [("a", "alpha one"), ("a", "alpha two"), ("a", "alpha three"),
+            ("a", "alpha four"), ("b", "beta one"), ("b", "beta two")]
+
+    fair = BatchScheduler(eng, n_slots=1, max_len=48, fair_share=True)
+    rids = [fair.submit(p, max_new=4, tenant=t) for t, p in subs]
+    fair_out = fair.drain()
+    admit = sorted(rids, key=lambda r: fair.requests[r].t_first_token)
+    tenants_in_order = [fair.requests[r].tenant for r in admit]
+    assert tenants_in_order == ["a", "b", "a", "b", "a", "a"]
+
+    fifo = BatchScheduler(eng, n_slots=1, max_len=48)
+    rids2 = [fifo.submit(p, max_new=4, tenant=t) for t, p in subs]
+    fifo_out = fifo.drain()
+    for r1, r2 in zip(rids, rids2):
+        assert fair_out[r1].token_ids == fifo_out[r2].token_ids
+
+
+# ---------------------------------------------------------------------------
+# budgets
+
+
+def test_budget_meter_state_machine():
+    reg = TenantRegistry(Tenant("t", token_budget=100.0))
+    meter = BudgetMeter(reg, soft_fraction=0.8)
+    assert meter.state("t") == "ok"
+    meter.charge("t", 79.0, 0.0)
+    assert meter.state("t") == "ok"
+    meter.charge("t", 1.0, 0.0)
+    assert meter.state("t") == "soft"
+    meter.charge("t", 20.0, 0.0)
+    assert meter.state("t") == "hard"
+    assert meter.exhausted_axis("t") == ("tokens", 100.0, 100.0)
+    assert meter.state("other") == "ok"  # unlimited by default
+
+
+def test_hard_exhaustion_rejects_unbilled():
+    tenancy = Tenancy.with_tenants(Tenant("poor", token_budget=1.0))
+    sess = Session(cache=RunCache(), tenancy=tenancy)
+    first = sess.execute(spec(tenant="poor", seed=0))
+    tokens, cost = tenancy.meter.used("poor")
+    assert tokens > 1.0                  # cap trips AFTER the first run
+
+    rejected = sess.execute(spec(tenant="poor", seed=1))
+    assert not rejected.success
+    assert rejected.failure_reason.startswith("BudgetExceeded")
+    assert rejected.total_latency == 0.0
+    assert rejected.extras.get("rejected") is True
+    evs = rejected.extras["events"]
+    assert len(evs) == 1 and isinstance(evs[0], BudgetExceeded)
+    assert evs[0].kind == "tokens" and evs[0].tenant == "poor"
+    # nothing billed, telemetry recorded
+    assert tenancy.meter.used("poor") == (tokens, cost)
+    assert tenancy.meter.snapshot()["poor"]["rejected_runs"] == 1
+    assert first.success in (True, False)  # first run executed for real
+
+
+def test_soft_exhaustion_degrades_faas_to_local():
+    # soft_fraction 0.1: one run puts the tenant in the soft band while
+    # leaving plenty of hard headroom
+    tenancy = Tenancy.with_tenants(Tenant("t", token_budget=10_000_000.0),
+                                   soft_fraction=0.1)
+    tenancy.meter.charge("t", 5_000_000.0, 0.0)   # into the soft band
+    sess = Session(cache=RunCache(), tenancy=tenancy)
+    res = sess.execute(spec(deployment="faas", tenant="t", seed=2))
+    evs = res.extras["events"]
+    assert isinstance(evs[0], RunDegraded)
+    assert isinstance(evs[1], RunStarted)         # admission precedes run
+    assert evs[0].from_deployment == "faas"
+    assert evs[0].to_deployment == "local"
+    assert res.deployment == "local"              # actually ran degraded
+    assert res.faas_cost == 0.0                   # Eq. 2 bill shed
+    assert tenancy.meter.snapshot()["t"]["degraded_runs"] == 1
+    # a degraded result must not be cached (the RunDegraded on its
+    # stream reflects meter state, not the spec)
+    again = sess.execute(spec(deployment="faas", tenant="t", seed=2))
+    assert tenancy.meter.snapshot()["t"]["degraded_runs"] == 2
+    assert again is not res
+
+
+def test_degrade_policy_mappings():
+    pol = DegradePolicy()
+    s = spec(pattern="react", deployment="faas")
+    new, info = pol.degrade(s)
+    assert new.deployment == "local" and new.pattern == "react"
+    assert info == {"from_pattern": "react", "to_pattern": "react",
+                    "from_deployment": "faas", "to_deployment": "local"}
+    # nothing to cheapen
+    assert pol.degrade(spec(pattern="react"))[1] is None
+    # agentx -> compiled is only claimed when the plan graph is cached;
+    # the spec's pattern field stays untouched either way (the plan key
+    # is pattern-scoped; the session replays cached graphs on its own)
+    assert pol.degrade(spec())[1] is None
+
+    class FakeCache:
+        def get(self, key):
+            return object()
+
+    new, info = pol.degrade(spec(), plan_cache=FakeCache())
+    assert new.pattern == "agentx"
+    assert info["to_pattern"] == "agentx-compiled"
+
+
+# ---------------------------------------------------------------------------
+# span export
+
+
+def _run_events(app, inst, pattern, **kw):
+    res = Session().execute(RunSpec(app, inst, pattern, **kw))
+    return list(res.extras["events"])
+
+
+@pytest.mark.parametrize("app,inst,pattern", [WEB, REACT, MAGENTIC],
+                         ids=["agentx", "react", "magentic"])
+def test_fold_spans_lossless(app, inst, pattern):
+    """Every event is represented: as a span or as a zero-width
+    annotation.  RunCompleted/StageCompleted close existing spans rather
+    than opening new ones, so they are excluded from the count."""
+    events = _run_events(app, inst, pattern)
+    roots = fold_spans(events)
+    assert len(roots) == 1 and roots[0].kind == "run"
+    spans = list(roots[0].walk())
+    reps = len(spans) + sum(len(s.events) for s in spans)
+    closers = sum(isinstance(e, (RunCompleted, StageCompleted))
+                  for e in events)
+    assert reps == len(events) - closers
+
+
+@pytest.mark.parametrize("app,inst,pattern", [WEB, REACT, MAGENTIC],
+                         ids=["agentx", "react", "magentic"])
+def test_fold_spans_wire_replay_identical(app, inst, pattern):
+    """Spans are a derived view of the stream: folding the in-process
+    events and folding the wire round-tripped events give identical
+    trees — the export works from any transport boundary."""
+    events = _run_events(app, inst, pattern)
+    assert fold_spans(events) \
+        == fold_spans(events_from_wire(events_to_wire(events)))
+
+
+def test_span_nesting_and_attribution():
+    events = _run_events(*WEB, tenant="acme")
+    root = fold_spans(events)[0]
+    spans = list(root.walk())
+    # agentx is staged: llm/tool spans nest under stage spans
+    stages = [s for s in spans if s.kind == "stage"]
+    assert stages and all(s.parent_id == root.span_id for s in stages)
+    leaves = [s for s in spans if s.kind in ("llm", "tool")]
+    stage_ids = {s.span_id for s in stages}
+    assert leaves and all(s.parent_id in stage_ids | {root.span_id}
+                          for s in leaves)
+    # tenant stamped everywhere, costs roll up to the run's Eq. 1 total
+    assert all(s.attributes["tenant"] == "acme" for s in spans)
+    llm_cost = sum(s.attributes["cost_usd"] for s in spans
+                   if s.kind == "llm")
+    assert root.attributes["cost_usd"] == pytest.approx(llm_cost)
+
+    # react has no stages: leaves attach straight to the run span
+    react_root = fold_spans(_run_events(*REACT))[0]
+    assert all(s.parent_id == react_root.span_id
+               for s in react_root.children)
+
+
+def test_degraded_and_rejected_streams_fold():
+    pre = RunDegraded(t=0.0, tenant="t", reason="soft budget exhaustion",
+                      from_pattern="agentx", to_pattern="agentx",
+                      from_deployment="faas", to_deployment="local")
+    events = [pre] + _run_events(*WEB, tenant="t")
+    root = fold_spans(events)[0]
+    kinds = [c.kind for c in root.children]
+    assert kinds[0] == "admission"       # preamble attached under the run
+
+    rej = fold_spans([BudgetExceeded(t=0.0, tenant="t", kind="tokens",
+                                     used=2.0, budget=1.0)])
+    assert len(rej) == 1 and rej[0].kind == "admission"
+    assert rej[0].start == rej[0].end    # zero-width root
+
+
+def test_otlp_export_shape():
+    events = _run_events(*WEB, tenant="acme")
+    roots = fold_spans(events)
+    payload = to_otlp(roots, service="svc")
+    assert json.loads(json.dumps(payload)) == payload   # JSON-safe
+    spans = payload["resourceSpans"][0]["scopeSpans"][0]["spans"]
+    assert len(spans) == len(list(roots[0].walk()))
+    by_id = {s["spanId"]: s for s in spans}
+    for s in spans:
+        if "parentSpanId" in s:
+            assert s["parentSpanId"] in by_id
+        assert int(s["endTimeUnixNano"]) >= int(s["startTimeUnixNano"])
+
+
+def test_run_monitor_per_tenant_gauges():
+    from repro.serving.engine import RunMonitor
+    mon = RunMonitor()
+    mon(RunStarted(t=0.0, pattern="agentx", task="x", tenant="acme"))
+    mon(LLMCompleted(t=1.0, event=LLMEvent("planner", 100, 50, 1.0, 1.0)))
+    mon(RunCompleted(t=2.0, completed=True, data=None))
+    mon(RunDegraded(t=0.0, tenant="acme", reason="r", from_pattern="p",
+                    to_pattern="p", from_deployment="faas",
+                    to_deployment="local"))
+    mon(BudgetExceeded(t=0.0, tenant="acme", kind="tokens", used=2.0,
+                       budget=1.0))
+    g = mon.snapshot()["tenants"]["acme"]
+    assert g["runs"] == 1 and g["completed"] == 1
+    assert g["llm_calls"] == 1 and g["tokens"] == 150
+    assert g["degraded"] == 1 and g["rejected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# workload + SLO plumbing
+
+
+def test_tenant_mix_shapes_offered_load():
+    mix = tenant_mix({"a": 1.0, "noisy": 5.0})
+    assert len(mix) == 2 * len(DEFAULT_MIX)
+    noisy = [s for s in mix if s.tenant == "noisy"]
+    base_by_suffix = {s.name: s for s in DEFAULT_MIX}
+    for s in noisy:
+        assert s.name.startswith("noisy/")
+        base = base_by_suffix[s.name.split("/", 1)[1]]
+        assert s.weight == base.weight * 5.0
+        assert s.spec(7).tenant == "noisy"
+
+
+def test_aggregate_report_tenant_section():
+    from repro.traffic import aggregate_report
+    wl = Workload(scenarios=tenant_mix({"a": 1.0, "b": 1.0}), rate=3.0,
+                  n_requests=8, seed=0)
+    reg = TenantRegistry(Tenant("a"), Tenant("b"))
+    agg = aggregate_report(
+        TrafficDriver(Session(tenancy=Tenancy(reg)), max_concurrency=2,
+                      tenants=reg).run(wl))
+    assert set(agg["tenants"]) <= {"a", "b"}
+    for t in agg["tenants"].values():
+        assert {"tokens", "token_throughput", "cost_usd", "degraded_runs",
+                "rejected_runs"} <= set(t["tenant"])
+    # single default tenant: no tenants section at all (parity)
+    plain = aggregate_report(
+        TrafficDriver(Session()).run(Workload(rate=3.0, n_requests=4)))
+    assert "tenants" not in plain
+
+
+# ---------------------------------------------------------------------------
+# tenancy-off parity
+
+
+def test_tenancy_off_bit_identical():
+    s = spec(seed=5)
+    base = Session().execute(s)
+    inert = Session(tenancy=Tenancy()).execute(s)
+    assert base.extras["events"] == inert.extras["events"]
+    assert (base.artifact, base.success, base.total_latency) \
+        == (inert.artifact, inert.success, inert.total_latency)
+
+
+def test_tenant_stamp_changes_only_runstarted():
+    plain = Session().execute(spec(seed=6)).extras["events"]
+    stamped = Session().execute(spec(seed=6,
+                                     tenant="acme")).extras["events"]
+    assert len(plain) == len(stamped)
+    for a, b in zip(plain, stamped):
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        if isinstance(a, RunStarted):
+            assert da.pop("tenant") == "" and db.pop("tenant") == "acme"
+        assert da == db
