@@ -195,12 +195,20 @@ class EngineStepped(RunEvent):
     still deserialize): ``prefilled`` counts the prompt tokens prefilled
     during the step's admission phase (bucketed batches, one chunk of a
     chunked admission, or a preemption-resume replay), ``preempted`` the
-    number of live slots evicted for a higher-priority request."""
+    number of live slots evicted for a higher-priority request.
+
+    Paged-KV gauges (default 0, so pre-paging wire payloads still
+    deserialize — and the contiguous-cache scheduler emits exactly the
+    pre-paging payload): ``blocks_in_use`` is the block allocator's
+    occupancy after the step, ``prefix_hits`` how many admissions this
+    step reused cached prefix blocks."""
     live: int
     queued: int
     generated: int
     prefilled: int = 0
     preempted: int = 0
+    blocks_in_use: int = 0
+    prefix_hits: int = 0
 
 
 # ---------------------------------------------------------------------------

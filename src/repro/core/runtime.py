@@ -86,12 +86,20 @@ class RunAborted(RuntimeError):
     deterministic failures would fail again)."""
 
 
-def stable_fingerprint(config) -> str:
+def stable_fingerprint(config, exclude: tuple = ()) -> str:
     """Stable digest of a config dataclass (sorted-JSON SHA-256, 16 hex
     chars) — the cache-invalidation primitive shared by ``PatternConfig``
-    and ``DeploymentCapabilities``: any knob change changes the digest."""
-    payload = json.dumps(dataclasses.asdict(config), sort_keys=True,
-                         default=repr)
+    and ``DeploymentCapabilities``: any knob change changes the digest.
+
+    ``exclude`` drops fields from the payload before hashing — the
+    back-compat hatch for fields added AFTER runs were cached under the
+    digest: excluding a new field while it holds its default keeps every
+    pre-existing address valid (callers exclude conditionally, so a
+    non-default value still changes the digest)."""
+    payload_dict = dataclasses.asdict(config)
+    for name in exclude:
+        payload_dict.pop(name, None)
+    payload = json.dumps(payload_dict, sort_keys=True, default=repr)
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 

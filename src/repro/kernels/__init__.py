@@ -3,6 +3,7 @@
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper in
 ops.py, and a pure-jnp oracle in ref.py.
 """
-from .ops import (flash_attention_op, decode_attention_op, ssd_scan_op,
+from .ops import (flash_attention_op, decode_attention_op,
+                  paged_decode_attention_op, ssd_scan_op,
                   rmsnorm_op, default_interpret)
 from . import ref

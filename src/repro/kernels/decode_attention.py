@@ -104,3 +104,112 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(lengths.astype(jnp.int32), qg, kf, vf)
     return out.reshape(b, hkv * group, hd)
+
+
+def _paged_dec_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_scr, l_scr, acc_scr, *, scale: float,
+                      block_size: int, max_blocks: int, kv_heads: int):
+    bh = pl.program_id(0)
+    bi = pl.program_id(1)
+    b = bh // kv_heads
+
+    @pl.when(bi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_start = bi * block_size
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (group, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+
+    pl.when(k_start < length)(_compute)
+
+    @pl.when(bi == max_blocks - 1)
+    def _finalize():
+        # length == 0 leaves l at 0: the clamp makes the output exact
+        # zeros (the documented empty-sequence semantics) instead of NaN
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """Single-token GQA decode over a block-paged KV pool.
+
+    q: (B, Hq, hd); k_pool/v_pool: (n_blocks, bs, Hkv, hd) — the
+    scheduler's pool layout, one leaf, no layer axis; block_tables:
+    (B, max_blocks) int32 physical block ids (rows past the sequence
+    may point anywhere valid — the length mask discards them);
+    lengths: (B,) int32. Returns (B, Hq, hd); ``lengths[b] == 0``
+    rows come back exact zeros.
+
+    The pool never materialises per-sequence: both scalar-prefetch
+    operands (lengths + tables) are available to the BlockSpec index
+    maps, so each grid step DMAs exactly one physical block
+    ``k_pool[h, tables[b, bi]]`` into VMEM. Grid and flash state
+    (running max / sum / acc in VMEM scratch) mirror
+    :func:`decode_attention` with ``block_k == block_size``.
+    """
+    b, hq, hd = q.shape
+    n_blocks, bs, hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    mb = block_tables.shape[1]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, hkv, group, hd).reshape(b * hkv, group, hd)
+    # (Hkv, n_blocks, bs, hd): head-major so one (block, head) pair is a
+    # contiguous (bs, hd) tile for the index-mapped DMA
+    kp = k_pool.transpose(2, 0, 1, 3)
+    vp = v_pool.transpose(2, 0, 1, 3)
+    # every index map must yield a real block even past the written
+    # prefix (masked anyway) — clamp junk/sentinel table entries
+    tables = jnp.clip(block_tables.astype(jnp.int32), 0, n_blocks - 1)
+
+    kernel = functools.partial(
+        _paged_dec_kernel, scale=scale, block_size=bs, max_blocks=mb,
+        kv_heads=hkv)
+
+    def kv_map(bh, bi, lens, tbl):
+        return (bh % hkv, tbl[bh // hkv, bi], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, group, hd), lambda bh, bi, lens, tbl: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), kv_map),
+            pl.BlockSpec((1, 1, bs, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, group, hd),
+                               lambda bh, bi, lens, tbl: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), tables, qg, kp, vp)
+    return out.reshape(b, hkv * group, hd)

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention as _fa
 from .decode_attention import decode_attention as _dec
+from .decode_attention import paged_decode_attention as _paged_dec
 from .ssd_scan import ssd_scan as _ssd
 from .rmsnorm import rmsnorm as _rms
 
@@ -63,6 +64,16 @@ def decode_attention_op(q, k, v, lengths, *, block_k=256, interpret=None):
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return _dec(q, k, v, lengths, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_op(q, k_pool, v_pool, block_tables, lengths, *,
+                              interpret=None):
+    """q: (B,Hq,hd); pools: (n_blocks,bs,Hkv,hd); block_tables: (B,MB);
+    lengths: (B,) -> (B,Hq,hd). Zero-length rows return exact zeros."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _paged_dec(q, k_pool, v_pool, block_tables, lengths,
+                      interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -55,6 +55,36 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, hq, hd)
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """Single-token decode over a block-paged KV pool.
+
+    q: (B, Hq, hd); k_pool/v_pool: (n_blocks, bs, Hkv, hd);
+    block_tables: (B, max_blocks) physical block ids; lengths: (B,).
+    Gathers the pool into a dense per-sequence view through the table,
+    then masked-softmax attends; ``lengths[b] == 0`` rows are exact
+    zeros (mirrors the kernel's empty-sequence semantics — plain
+    softmax would emit the mean of junk rows instead)."""
+    b, hq, hd = q.shape
+    n_blocks, bs, hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    mb = block_tables.shape[1]
+    group = hq // hkv
+    tables = jnp.clip(block_tables, 0, n_blocks - 1)
+    k = k_pool[tables].reshape(b, mb * bs, hkv, hd)   # (B, C, Hkv, hd)
+    v = v_pool[tables].reshape(b, mb * bs, hkv, hd)
+    qg = q.reshape(b, hkv, group, hd)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    valid = jnp.arange(mb * bs)[None] < lengths[:, None]     # (B, C)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None], jnp.exp(scores - m), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgt,bthd->bhgd", (p / denom).astype(v.dtype), v)
+    return out.reshape(b, hq, hd)
+
+
 def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
                  C: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Naive O(S) SSD recurrence (the definitional semantics).

@@ -282,6 +282,130 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Paged caches (block-paged serving; see repro.serving.paging)
+#
+# The paged decode cache replaces each attention leaf's dense
+# (stack, B, C, ...) layout with a block *pool* (stack, n_blocks,
+# block_size, ...) plus per-sequence block tables (B, max_blocks) int32.
+# Row r of sequence b lives at pool[..., table[b, r // bs], r % bs, ...]
+# — every attention-cache leaf (k/v/ckv/kpe) has its block axes at tree
+# positions 1 and 2, so gather/scatter are uniform tree_maps.
+#
+# Parity by construction: ``gather_cache`` materializes the exact dense
+# (stack, B, C, ...) view the contiguous path holds (junk rows from
+# unallocated table slots are masked by decode's validity mask exactly
+# like the contiguous cache's zero rows), so the scheduler can feed the
+# gathered view through the SAME jitted ``decode_step`` executable as
+# the contiguous path — paged decode is bit-identical, not just close.
+# The TPU kernel that avoids the materialized gather is
+# ``repro.kernels.decode_attention.paged_decode_attention``.
+
+
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Paged layout covers the attention-cache archs with absolute
+    positions (GQA/MLA, no sliding-window ring, no frontend offset, no
+    recurrent state — SSM/hybrid states are position-free and gain
+    nothing from paging)."""
+    return (cfg.arch_type not in ("ssm", "hybrid")
+            and not cfg.sliding_window and not cfg.frontend)
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.float32) -> Dict[str, Any]:
+    """Block pool pytree: ``init_cache``'s attention leaves with the
+    (batch, cache_len) axes replaced by (n_blocks, block_size)."""
+    if not supports_paged_cache(cfg):
+        raise NotImplementedError(
+            f"paged KV covers attention-cache archs; {cfg.name} "
+            f"({cfg.arch_type}) keeps the contiguous layout")
+    if cfg.attention == "mla":
+        m = cfg.mla
+        return {"layers": {
+            "ckv": jnp.zeros((cfg.n_layers, n_blocks, block_size,
+                              m.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((cfg.n_layers, n_blocks, block_size,
+                              m.qk_rope_dim), dtype)}}
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"layers": {"k": jnp.zeros(shape, dtype),
+                       "v": jnp.zeros(shape, dtype)}}
+
+
+def gather_cache(pool: Dict[str, Any], tables: jax.Array) -> Dict[str, Any]:
+    """Materialize the dense cache view of ``tables`` (B, max_blocks)
+    from a block pool: leaf (L, NB, bs, ...) -> (L, B, max_blocks*bs, ...).
+    Unallocated table entries point at the trash block — their junk rows
+    sit beyond every sequence's valid length and are masked by decode."""
+    def g(leaf):
+        v = leaf[:, tables]                    # (L, B, MB, bs, ...)
+        return v.reshape(v.shape[0], v.shape[1], v.shape[2] * v.shape[3],
+                         *v.shape[4:])
+    return jax.tree_util.tree_map(g, pool)
+
+
+def scatter_cache(pool: Dict[str, Any], cache: Dict[str, Any],
+                  table: jax.Array, start: jax.Array) -> Dict[str, Any]:
+    """Write a batch-1 dense cache's rows into the pool blocks of one
+    sequence.  ``table``: (max_blocks,) int32; rows with position <
+    ``start`` are redirected to the trash block (prefix-cache hits: the
+    leading blocks are SHARED and already hold identical data — they are
+    never rewritten), as are rows in unallocated tail blocks (their
+    table entries already point at trash).  One trace total: the write
+    always covers the full cache length."""
+    def s(pool_leaf, cache_leaf):
+        bs = pool_leaf.shape[2]
+        c = cache_leaf.shape[2]
+        positions = jnp.arange(c)
+        blk = table[positions // bs]
+        trash = pool_leaf.shape[1] - 1
+        blk = jnp.where(positions < start, trash, blk)
+        return pool_leaf.at[:, blk, positions % bs].set(
+            cache_leaf[:, 0].astype(pool_leaf.dtype))
+    return jax.tree_util.tree_map(s, pool, cache)
+
+
+def scatter_decode_rows(pool: Dict[str, Any], cache: Dict[str, Any],
+                        tables: jax.Array, pos: jax.Array) -> Dict[str, Any]:
+    """Write the rows ``decode_step`` just produced (one per sequence,
+    at that sequence's position) from the dense view back into the pool.
+    ``tables``: (B, MB) int32 — dead slots' all-trash tables land their
+    writes in the trash block."""
+    def s(pool_leaf, cache_leaf):
+        bs = pool_leaf.shape[2]
+        c = cache_leaf.shape[2]
+        b = cache_leaf.shape[1]
+        slot = jnp.minimum(jnp.asarray(pos, jnp.int32), c - 1)
+        rows = jnp.arange(b)
+        blk = tables[rows, slot // bs]
+        vals = cache_leaf[:, rows, slot]       # (L, B, ...)
+        return pool_leaf.at[:, blk, slot % bs].set(
+            vals.astype(pool_leaf.dtype))
+    return jax.tree_util.tree_map(s, pool, cache)
+
+
+def copy_block(pool: Dict[str, Any], src: jax.Array,
+               dst: jax.Array) -> Dict[str, Any]:
+    """Copy one physical block (copy-on-write fork: the allocator moved
+    a shared reference onto ``dst``; the data follows here)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf.at[:, dst].set(leaf[:, src]), pool)
+
+
+def paged_decode_step(params: Params, cfg: ModelConfig,
+                      pool: Dict[str, Any], tables: jax.Array,
+                      token: jax.Array, pos: jax.Array
+                      ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step against the block pool: gather the dense view,
+    run the ordinary :func:`decode_step`, scatter the written rows back.
+    Convenience composition for tests/benchmarks — the scheduler runs
+    the three stages through its own jits so the middle one is the SAME
+    compiled executable as the contiguous path (the parity mechanism)."""
+    view = gather_cache(pool, tables)
+    logits, new_view = decode_step(params, cfg, view, token, pos)
+    return logits, scatter_decode_rows(pool, new_view, tables, pos)
+
+
+# ---------------------------------------------------------------------------
 # Prefill
 
 

@@ -14,6 +14,8 @@ _EXPORTS = {
     "BatchScheduler": "scheduler", "EngineClient": "scheduler",
     "Request": "scheduler", "write_slot": "scheduler",
     "take_slot": "scheduler",
+    "BlockAllocator": "paging", "PrefixCache": "paging",
+    "PagingError": "paging", "prefix_block_keys": "paging",
     "ServingBackend": "api", "ServingCapabilities": "api",
     "get_llm_backend": "api", "llm_backend_names": "api",
     "register_llm_backend": "api", "reset_llm_backends": "api",

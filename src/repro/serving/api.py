@@ -63,10 +63,21 @@ class ServingCapabilities:
     max_len: int = 256          # slot context length
     temperature: float = 0.0    # greedy by default: deterministic serving
     prefill_chunk: int = 0      # chunked-prefill budget (0 = whole-prompt)
+    paged: bool = False         # block-paged KV cache + prefix reuse
+    block_size: int = 0         # KV block rows (paged backends; 0 = n/a)
     tags: tuple = ()
     rank: int = 50              # listing order
 
     def fingerprint(self) -> str:
+        # The paged knobs joined the dataclass after runs were already
+        # cached under the pre-paging digest; for non-paged backends they
+        # are dropped from the payload so every existing run-cache
+        # address stays valid.  Turning paging on (or retuning its block
+        # size) changes the digest — paged serving is bit-identical to
+        # contiguous BY TEST, not by assumption, so cached runs do not
+        # silently cross that boundary.
+        if not self.paged and not self.block_size:
+            return stable_fingerprint(self, exclude=("paged", "block_size"))
         return stable_fingerprint(self)
 
 
@@ -240,10 +251,20 @@ class JaxBatchedServing(_JaxServingBase):
         engine = self.engine()
         with self._lock:
             if self._client is None:
+                caps = self.capabilities
+                paged: dict = {}
+                if caps.paged:
+                    # the prefix-key chain is salted by the capability
+                    # fingerprint: retuning the backend can never alias
+                    # cached prefix blocks across engine configurations
+                    paged = dict(paged_kv=True,
+                                 block_size=caps.block_size or 32,
+                                 prefix_salt=caps.fingerprint())
                 sched = BatchScheduler(engine,
-                                       n_slots=self.capabilities.n_slots or 4,
-                                       max_len=self.capabilities.max_len,
-                                       fair_share=self.fair_share)
+                                       n_slots=caps.n_slots or 4,
+                                       max_len=caps.max_len,
+                                       fair_share=self.fair_share,
+                                       **paged)
                 for fn in self._pending_subs:
                     sched.subscribe(fn)
                 self._pending_subs.clear()
@@ -259,3 +280,17 @@ class JaxBatchedServing(_JaxServingBase):
 
     def endpoint(self):
         return self.client()
+
+
+@register_llm_backend("jax-batched-paged", rank=35, paged=True,
+                      block_size=32)
+class JaxPagedServing(JaxBatchedServing):
+    """``jax-batched`` over the block-paged KV cache with prefix reuse:
+    same scheduler, same bit-identical token streams (enforced by the
+    property suite), but hot shared prefixes prefill once and admissions
+    that match them skip straight to the divergent suffix.  The paged
+    knobs join the capability fingerprint, so switching a deployment
+    between this backend and ``jax-batched`` re-addresses its cached
+    runs instead of mixing them."""
+
+    name = "jax-batched-paged"

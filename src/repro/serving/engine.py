@@ -143,6 +143,8 @@ class RunMonitor:
         self.engine_tokens = 0
         self.engine_prefill_tokens = 0
         self.engine_preemptions = 0
+        self.engine_blocks_in_use = 0
+        self.engine_prefix_hits = 0
         # per-tenant gauges (multi-tenant serving)
         self.tenants: Dict[str, Dict[str, Any]] = {}
         self._tls = threading.local()
@@ -201,6 +203,8 @@ class RunMonitor:
                 self.engine_tokens += event.generated
                 self.engine_prefill_tokens += event.prefilled
                 self.engine_preemptions += event.preempted
+                self.engine_blocks_in_use = event.blocks_in_use
+                self.engine_prefix_hits += event.prefix_hits
 
     def wire_observer(self):
         """Observer accepting wire-serialized event dicts
@@ -237,6 +241,8 @@ class RunMonitor:
                 "engine_tokens": self.engine_tokens,
                 "engine_prefill_tokens": self.engine_prefill_tokens,
                 "engine_preemptions": self.engine_preemptions,
+                "engine_blocks_in_use": self.engine_blocks_in_use,
+                "engine_prefix_hits": self.engine_prefix_hits,
                 "tenants": {name: dict(g)
                             for name, g in self.tenants.items()},
             }
@@ -437,6 +443,32 @@ class Engine:
         prompt bounds (instead of monopolizing) the stall it causes."""
         return PrefillJob(self, ids, cache_len)
 
+    def prefill_continue(self, ids: List[int], start: int, cache):
+        """Prefill only ``ids[start:]`` against a cache whose rows
+        ``0..start-1`` already hold the prompt's prefix K/V — the
+        prefix-reuse admission recipe (paged serving): a prefix-cache hit
+        hands the scheduler the shared blocks, and only the divergent
+        suffix runs through the model.
+
+        Bit-identical to whole-prompt :meth:`prefill_ids` by the chunked
+        ==-whole argument: :func:`repro.models.model.prefill_attend`
+        continuation is split-agnostic (every query attends over the
+        full cache width under the ``col <= q_pos`` validity mask, and
+        padded suffix rows sit beyond every valid query's mask), so
+        resuming at ``start`` over reused rows reproduces the exact
+        logits the full prefill would have produced.  The suffix is
+        padded to its power-of-two bucket — same trace economy as
+        admission.  Returns (last logits (1, V), cache); ``cache`` is
+        donated."""
+        suffix = list(ids)[start:]
+        bucket = prefill_bucket(len(suffix))
+        tokens = jnp.asarray([suffix + [0] * (bucket - len(suffix))],
+                             jnp.int32)
+        return self._prefill_extend(self.params, cache=cache, tokens=tokens,
+                                    off=jnp.int32(start),
+                                    lengths=jnp.asarray([len(suffix)],
+                                                        jnp.int32))
+
     def replay_ids(self, ids: List[int], kept: List[int], cache_len: int):
         """Rebuild the exact decode state of a request that already
         generated ``kept`` tokens (preemption resume): canonical prefill
@@ -511,9 +543,15 @@ class PrefillJob:
     and ``BatchScheduler`` (one chunk per scheduler step, interleaved
     with live decode) drive the same job, so chunked admission stays
     bit-identical to serial generation.
+
+    ``start`` > 0 resumes the job at that offset against a caller-built
+    ``cache`` already holding rows ``0..start-1`` (prefix-reuse
+    admission: shared blocks skip their chunks entirely) — the chunk
+    trace is the same either way, only the traced offset differs.
     """
 
-    def __init__(self, engine: Engine, ids: List[int], cache_len: int):
+    def __init__(self, engine: Engine, ids: List[int], cache_len: int,
+                 cache=None, start: int = 0):
         if not engine.supports_fixed_shape_prefill:
             raise NotImplementedError(
                 f"chunked prefill needs fixed-shape prefill support; "
@@ -522,10 +560,12 @@ class PrefillJob:
         self.ids = list(ids)
         self.cache_len = int(cache_len)
         self.chunk = max(1, engine.prefill_chunk or len(self.ids))
-        self.off = 0
+        self.start = int(start)
+        self.off = self.start
         self.logits = None
-        self.cache = init_cache(engine.cfg, 1, self.cache_len,
-                                dtype=engine.params["embed"].dtype)
+        self.cache = cache if cache is not None else init_cache(
+            engine.cfg, 1, self.cache_len,
+            dtype=engine.params["embed"].dtype)
 
     @property
     def done(self) -> bool:
@@ -533,7 +573,14 @@ class PrefillJob:
 
     def step(self) -> int:
         """Prefill the next chunk; returns how many prompt tokens it
-        consumed (the scheduler's ``prefilled`` gauge)."""
+        consumed (the scheduler's ``prefilled`` gauge).
+
+        No-op once ``done``: a prefix-reuse job whose suffix fits one
+        chunk completes at creation, and the scheduler's next-step
+        drive must not run a zero-length chunk over the finished
+        logits."""
+        if self.done:
+            return 0
         chunk = self.ids[self.off:self.off + self.chunk]
         valid = len(chunk)
         tokens = jnp.asarray([chunk + [0] * (self.chunk - valid)], jnp.int32)

@@ -1,0 +1,248 @@
+"""Block-paged KV storage: the allocator and the prefix cache.
+
+vLLM-style paging for the serving engine: the decode cache stops being a
+dense ``n_slots x max_len`` buffer and becomes a pool of fixed-size
+*blocks* (``block_size`` token rows each).  Every live sequence owns a
+*block table* — the ordered list of block ids whose concatenation is its
+logical KV layout — and blocks are **refcounted** so the same physical
+block can back many sequences at once.  That sharing is what makes
+prefix reuse possible: the blocks holding a hot system-prompt /
+tool-catalog prefix are prefilled once and referenced by every request
+that starts the same way.
+
+This module is deliberately *host-side and array-free*: it manages block
+ids, refcounts, the free list and the content-keyed prefix index.  The
+device-side pool arrays (and the gather/scatter of rows through block
+tables) live in :mod:`repro.models.model` and
+:mod:`repro.serving.scheduler`; the TPU kernel that reads K/V through a
+block table without materializing the gather is
+:func:`repro.kernels.decode_attention.paged_decode_attention`.
+
+Invariants (fuzz-enforced by ``tests/test_paging.py``):
+
+  * a block's refcount equals the number of live references to it
+    (sequence block-table entries + prefix-cache entries);
+  * a block is on the free list iff its refcount is zero — no
+    double-free, no leaked block: ``free + in_use == n_blocks`` always;
+  * :meth:`BlockAllocator.fork` (copy-on-write) never hands out a
+    shared block for writing — a block with refcount > 1 is replaced by
+    a fresh block (the caller copies the data), the share stays intact.
+
+Prefix keys form a **hash chain** (the same construction as the run
+cache's fingerprint chain, see docs/ARCHITECTURE.md): block *i*'s key is
+``sha256(key_{i-1} || tokens_of_block_i)`` seeded by a salt that
+includes the serving fingerprint — so a key commits to the *entire*
+token prefix up to and including its block, and two caches serving
+different models/engines can never alias.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class PagingError(RuntimeError):
+    """Raised on allocator misuse (double-free, unknown block id)."""
+
+
+class BlockAllocator:
+    """Refcounted fixed-size block pool with a deterministic free list.
+
+    Pure bookkeeping: block *ids* in ``[0, n_blocks)``, their refcounts,
+    and a FIFO free list (deterministic reuse order keeps paged runs
+    reproducible).  Data movement (zeroing, CoW copies) is the caller's
+    job — the allocator tells it *which* physical block to touch.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks <= 0 or block_size <= 0:
+            raise ValueError("n_blocks and block_size must be positive")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._ref: List[int] = [0] * n_blocks
+        # FIFO free list: freed blocks recycle oldest-first
+        self._free: List[int] = list(range(n_blocks))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def ref(self, bid: int) -> int:
+        self._check(bid)
+        return self._ref[bid]
+
+    def _check(self, bid: int) -> None:
+        if not 0 <= bid < self.n_blocks:
+            raise PagingError(f"unknown block id {bid}")
+
+    # -- lifecycle ----------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """Take one block off the free list (ref := 1); ``None`` when the
+        pool is exhausted (the caller evicts prefix-cache entries or
+        defers admission)."""
+        if not self._free:
+            return None
+        bid = self._free.pop(0)
+        self._ref[bid] = 1
+        return bid
+
+    def incref(self, bid: int) -> None:
+        self._check(bid)
+        if self._ref[bid] <= 0:
+            raise PagingError(f"incref on free block {bid}")
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop one reference; returns True when this freed the block."""
+        self._check(bid)
+        if self._ref[bid] <= 0:
+            raise PagingError(f"double free of block {bid}")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            self._free.append(bid)
+            return True
+        return False
+
+    def fork(self, bid: int) -> Optional[Tuple[int, bool]]:
+        """Copy-on-write: make ``bid`` safely writable by its caller.
+
+        ref == 1: the caller is the sole owner — returns ``(bid, False)``
+        (write in place).  ref > 1: allocates a fresh block, moves one of
+        the references onto it and returns ``(new_bid, True)`` — the
+        caller must copy the block's data before writing; the shared
+        original is never mutated.  ``None`` when a copy is needed but
+        the pool is exhausted.
+        """
+        self._check(bid)
+        if self._ref[bid] <= 0:
+            raise PagingError(f"fork of free block {bid}")
+        if self._ref[bid] == 1:
+            return bid, False
+        new = self.alloc()
+        if new is None:
+            return None
+        self._ref[bid] -= 1   # shared: never drops to zero here
+        return new, True
+
+
+def prefix_block_keys(ids: Sequence[int], block_size: int,
+                      salt: str = "") -> List[str]:
+    """Chained content keys for every *full* block of ``ids``.
+
+    ``key_i = sha256(key_{i-1} || tokens_of_block_i)`` — the same
+    chain-of-custody construction as the run-cache fingerprint chain: a
+    block's key commits to the whole prefix before it, so a key match
+    implies the entire leading token sequence matches.  ``salt`` scopes
+    the chain (serving fingerprint: model arch, block size) so caches
+    never alias across engines.
+    """
+    keys: List[str] = []
+    h = hashlib.sha256(f"prefix-chain:{salt}:{block_size}".encode())
+    for i in range(len(ids) // block_size):
+        block = ids[i * block_size:(i + 1) * block_size]
+        h.update((",".join(str(t) for t in block) + ";").encode())
+        keys.append(h.hexdigest())
+    return keys
+
+
+class PrefixCache:
+    """Content-addressed index of prefilled prefix blocks (LRU).
+
+    Maps chained block keys (:func:`prefix_block_keys`) to block ids in
+    a :class:`BlockAllocator` pool.  The cache holds ONE reference per
+    entry, so cached blocks survive the sequences that prefilled them;
+    eviction (LRU) drops that reference and the allocator reclaims the
+    block once no live sequence shares it.
+
+    ``match`` walks the chain until the first miss and returns the
+    shared blocks a new request can skip prefilling; the usable prefix
+    is capped at ``len(ids) - 1`` rounded down to a block boundary — at
+    least one prompt token is always freshly prefilled, because the
+    admission path needs last-position logits to sample the first token
+    (exactly vLLM's full-prompt-hit rule).
+    """
+
+    def __init__(self, allocator: BlockAllocator, salt: str = ""):
+        self.allocator = allocator
+        self.block_size = allocator.block_size
+        self.salt = salt
+        self._entries: "OrderedDict[str, int]" = OrderedDict()
+        self.hits = 0        # admissions that reused >= 1 block
+        self.misses = 0      # admissions that reused none
+        self.tokens_reused = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def cached_block_ids(self) -> List[int]:
+        return list(self._entries.values())
+
+    def match(self, ids: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``ids`` in full blocks.
+
+        Returns ``(n_tokens, block_ids)`` with ``n_tokens`` a multiple
+        of the block size and ``< len(ids)``.  Does NOT take references —
+        the caller pins the returned blocks (``incref``) into the
+        admitted sequence's table before anything can evict them.
+        """
+        bs = self.block_size
+        usable = max(0, (len(ids) - 1) // bs)   # never the whole prompt
+        keys = prefix_block_keys(list(ids)[:usable * bs], bs, self.salt)
+        bids: List[int] = []
+        for key in keys:
+            bid = self._entries.get(key)
+            if bid is None:
+                break
+            self._entries.move_to_end(key)      # LRU touch
+            bids.append(bid)
+        if bids:
+            self.hits += 1
+            self.tokens_reused += len(bids) * bs
+        else:
+            self.misses += 1
+        return len(bids) * bs, bids
+
+    def insert(self, ids: Sequence[int], blocks: Sequence[int]) -> int:
+        """Index the full prompt blocks of a freshly admitted sequence.
+
+        ``blocks`` is the sequence's block table; every full block of
+        ``ids`` not already cached gains a cache entry + one reference.
+        Already-cached keys keep their existing block (first writer
+        wins — the contents are identical by construction).  Returns the
+        number of new entries.
+        """
+        bs = self.block_size
+        keys = prefix_block_keys(ids, bs, self.salt)
+        added = 0
+        for i, key in enumerate(keys):
+            if i >= len(blocks):
+                break
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                continue
+            self.allocator.incref(blocks[i])
+            self._entries[key] = blocks[i]
+            added += 1
+        return added
+
+    def evict(self, n_blocks: int = 1) -> int:
+        """Drop up to ``n_blocks`` LRU entries' references; returns how
+        many blocks this actually freed (shared blocks stay alive until
+        their sequences finish)."""
+        freed = 0
+        while n_blocks > 0 and self._entries:
+            _, bid = self._entries.popitem(last=False)
+            if self.allocator.decref(bid):
+                freed += 1
+            n_blocks -= 1
+        return freed
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "tokens_reused": self.tokens_reused}

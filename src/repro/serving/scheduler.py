@@ -1,8 +1,7 @@
 """Continuous-batching scheduler v2: batched + chunked prefill with
-priority preemption.
+priority preemption, with an optional block-paged KV mode.
 
-Slot-based, vLLM-style, TPU-friendly fixed shapes (no paged indirection,
-which doesn't map well onto dense XLA buffers):
+Slot-based, vLLM-style, TPU-friendly fixed shapes:
 
   * the decode cache carries an ``n_slots`` batch axis allocated once
     (``init_cache(cfg, n_slots, max_len)``);
@@ -10,6 +9,25 @@ which doesn't map well onto dense XLA buffers):
     over the whole slot batch with a per-slot position *vector* — live
     slots advance together, finished slots free their row and queued
     requests are admitted into it.
+
+**Paged KV mode** (``paged_kv=True``): the dense ``n_slots x max_len``
+cache is replaced by a refcounted block pool
+(:mod:`repro.serving.paging` bookkeeping +
+:func:`repro.models.model.init_paged_cache` arrays) with per-slot block
+tables, and a content-hashed prefix cache on top — admissions whose
+leading full blocks match a cached prefix pin the SHARED blocks and
+prefill only the divergent suffix (``Engine.prefill_continue``).  The
+decode step stays bit-identical to the contiguous path by construction:
+the pool is gathered through the block tables into the exact dense view
+the contiguous cache holds (``max_len % block_size == 0`` makes the
+widths equal), that view runs through the SAME jitted ``decode_step``
+executable, and the freshly written rows scatter back into the pool.
+Junk rows gathered from recycled blocks sit beyond every sequence's
+valid length, where the decode validity mask zeroes them exactly as it
+zeroes the contiguous cache's stale rows.  Preemption frees the
+victim's blocks; resume re-pins (prefix blocks re-shared, the rest
+freshly allocated).  The contiguous path stays the default — parity is
+testable request-for-request (``tests/test_properties.py``).
 
 Admission (the v2 overhaul) no longer prefills one request per exact
 prompt length:
@@ -60,9 +78,12 @@ import jax
 import jax.numpy as jnp
 
 from ..core.events import EngineStepped
-from ..models.model import init_cache
+from ..models.model import (copy_block, gather_cache, init_cache,
+                            init_paged_cache, scatter_cache,
+                            scatter_decode_rows, supports_paged_cache)
 from .engine import (Engine, GenerationResult, PrefillJob, cache_leaf_name,
                      prefill_bucket)
+from .paging import BlockAllocator, PrefixCache
 
 
 @dataclasses.dataclass
@@ -167,7 +188,12 @@ class BatchScheduler:
                  max_len: int = 512,
                  on_event: Optional[Callable] = None,
                  batched_prefill: bool = True,
-                 fair_share=None):
+                 fair_share=None,
+                 paged_kv: bool = False,
+                 block_size: int = 32,
+                 n_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 prefix_salt: str = ""):
         self.engine = engine
         self.cfg = engine.cfg
         self.n_slots = n_slots
@@ -200,8 +226,52 @@ class BatchScheduler:
         self._steps = 0
         self._pos = [0] * n_slots   # next decode position per slot
         self._tok = [0] * n_slots   # last sampled token per slot
-        self._cache = init_cache(self.cfg, n_slots, self._cache_len,
-                                 dtype=self.engine.params["embed"].dtype)
+        dtype = self.engine.params["embed"].dtype
+        self._paged = bool(paged_kv)
+        if self._paged:
+            if (not supports_paged_cache(self.cfg)
+                    or not engine.supports_fixed_shape_prefill):
+                raise NotImplementedError(
+                    f"paged KV needs an attention cache with fixed-shape "
+                    f"prefill; {self.cfg.name} keeps the contiguous path")
+            if max_len % block_size != 0:
+                # gathered view width (max_blocks * block_size) must equal
+                # the contiguous cache width — that equality is what lets
+                # both paths share one decode executable (bit parity)
+                raise ValueError(
+                    f"max_len ({max_len}) must be a multiple of "
+                    f"block_size ({block_size})")
+            self.block_size = int(block_size)
+            self._mb = max_len // self.block_size   # max blocks / sequence
+            self.n_blocks = (int(n_blocks) if n_blocks is not None
+                             else n_slots * self._mb)
+            if self.n_blocks < self._mb:
+                raise ValueError(
+                    "n_blocks must cover at least one full-length sequence")
+            # physical pool carries one extra TRASH block (index n_blocks):
+            # the scatter target for rows outside a sequence's allocated
+            # blocks (prefill padding, shared-prefix redirects, dead slots)
+            self._trash = self.n_blocks
+            self._alloc = BlockAllocator(self.n_blocks, self.block_size)
+            self._prefix = (PrefixCache(self._alloc,
+                                        salt=f"{self.cfg.name}:{prefix_salt}")
+                            if prefix_cache else None)
+            self._pool = init_paged_cache(self.cfg, self.n_blocks + 1,
+                                          self.block_size, dtype=dtype)
+            self._blocks: List[List[int]] = [[] for _ in range(n_slots)]
+            self._tables_dirty = True
+            self._tables_dev = None
+            self._cache = None
+            self._gather = jax.jit(gather_cache)
+            self._scatter_rows = jax.jit(scatter_decode_rows,
+                                         donate_argnums=(0,))
+            self._scatter_prefill = jax.jit(scatter_cache,
+                                            donate_argnums=(0,))
+            self._copy = jax.jit(copy_block, donate_argnums=(0,))
+        else:
+            self._prefix = None
+            self._cache = init_cache(self.cfg, n_slots, self._cache_len,
+                                     dtype=dtype)
         # batched cache is donated through admission writes too: the slot
         # row update happens in place instead of copying all slots
         self._insert = jax.jit(write_slot, donate_argnums=(0,))
@@ -299,11 +369,120 @@ class BatchScheduler:
         self._pos[slot] = pos
         self._tok[slot] = tok
 
+    # -- paged-KV bookkeeping ------------------------------------------------
+    def _table_row(self, slot: int) -> jax.Array:
+        """One slot's device block table, trash-padded to max blocks."""
+        blocks = self._blocks[slot]
+        return jnp.asarray(blocks + [self._trash] * (self._mb - len(blocks)),
+                           jnp.int32)
+
+    def _tables_device(self) -> jax.Array:
+        """The (n_slots, max_blocks) int32 block-table array, rebuilt
+        lazily after any host-side table change."""
+        if self._tables_dirty:
+            self._tables_dev = jnp.asarray(
+                [b + [self._trash] * (self._mb - len(b))
+                 for b in self._blocks], jnp.int32)
+            self._tables_dirty = False
+        return self._tables_dev
+
+    def _alloc_block(self) -> Optional[int]:
+        """One fresh block, evicting LRU prefix-cache entries on demand;
+        ``None`` only once the pool is exhausted AND the prefix cache is
+        empty (live sequences hold everything)."""
+        while True:
+            bid = self._alloc.alloc()
+            if bid is not None:
+                return bid
+            if self._prefix is not None and len(self._prefix):
+                self._prefix.evict()
+                continue
+            return None
+
+    def _paged_admit_blocks(self, ids: List[int], n_rows: int,
+                            stats: Dict[str, int]
+                            ) -> Optional[Tuple[int, List[int]]]:
+        """Pin the longest cached prefix of ``ids`` and allocate fresh
+        blocks to cover ``n_rows`` rows.  Returns ``(start, blocks)``
+        with ``start`` the reused-prefix row count, or ``None`` (all
+        acquisitions rolled back) when the pool is exhausted."""
+        start, shared = 0, []
+        if self._prefix is not None:
+            start, shared = self._prefix.match(ids)
+            for bid in shared:
+                self._alloc.incref(bid)     # pin before anything can evict
+        blocks = list(shared)
+        need = -(-n_rows // self.block_size)
+        while len(blocks) < need:
+            bid = self._alloc_block()
+            if bid is None:
+                for b in blocks:
+                    self._alloc.decref(b)
+                return None
+            blocks.append(bid)
+        if start:
+            stats["prefix_hits"] += 1
+        return start, blocks
+
+    def _free_slot_blocks(self, slot: int) -> None:
+        """Drop one slot's block references (finish / preemption) — the
+        allocator reclaims blocks nobody else shares."""
+        for bid in self._blocks[slot]:
+            self._alloc.decref(bid)
+        self._blocks[slot] = []
+        self._tables_dirty = True
+
+    def _ensure_block(self, slot: int) -> bool:
+        """Make the block holding this slot's next write position exist
+        and be exclusively owned.  The fork branch is defensive
+        copy-on-write: admission never leaves a shared block at the
+        write position (cached prefix blocks are always *full*, and the
+        next write lands past them), but if a layout change ever does,
+        the shared block is copied rather than corrupted.  False = pool
+        exhausted (the caller self-preempts the slot)."""
+        bi = self._pos[slot] // self.block_size
+        blocks = self._blocks[slot]
+        while bi >= len(blocks):
+            bid = self._alloc_block()
+            if bid is None:
+                return False
+            blocks.append(bid)
+            self._tables_dirty = True
+        if self._alloc.ref(blocks[bi]) > 1:
+            got = self._alloc.fork(blocks[bi])
+            while got is None:
+                if self._prefix is None or not len(self._prefix):
+                    return False
+                self._prefix.evict()
+                got = self._alloc.fork(blocks[bi])
+            new, needs_copy = got
+            if needs_copy:
+                self._pool = self._copy(self._pool, jnp.int32(blocks[bi]),
+                                        jnp.int32(new))
+                blocks[bi] = new
+                self._tables_dirty = True
+        return True
+
+    def paging_stats(self) -> Dict[str, int]:
+        """Allocator + prefix-cache counters (benchmarks/tests); empty
+        for the contiguous path."""
+        if not self._paged:
+            return {}
+        s = {"blocks_in_use": self._alloc.in_use,
+             "blocks_free": self._alloc.free_count,
+             "n_blocks": self.n_blocks, "block_size": self.block_size}
+        if self._prefix is not None:
+            s.update(self._prefix.stats())
+        return s
+
     def _prefill_into(self, slot: int, req: Request,
-                      finished: List[Request], stats: Dict[str, int]) -> None:
+                      finished: List[Request], stats: Dict[str, int]) -> bool:
         """Admit one request on its own: the engine's canonical prefill
         (bucketed where supported), or the v1 exact-length recipe when
-        ``batched_prefill=False``."""
+        ``batched_prefill=False``.  False = paged pool exhausted (the
+        request was requeued; stop admitting this step)."""
+        if self._paged:
+            return self._paged_prefill_into(slot, req, finished, stats)
         prefill = (self.engine.prefill_ids if self.batched_prefill
                    else self.engine.prefill_ids_exact)
         logits, cache = prefill(req.prompt_ids, self.max_len)
@@ -312,36 +491,123 @@ class BatchScheduler:
         if self._first_token(req, tok, finished):
             self._cache = self._insert(self._cache, cache, slot)
             self._occupy(slot, req, self._offset + len(req.prompt_ids), tok)
+        return True
+
+    def _paged_prefill_into(self, slot: int, req: Request,
+                            finished: List[Request],
+                            stats: Dict[str, int]) -> bool:
+        """Paged admission of one request: pin/allocate its blocks, skip
+        the cached prefix (suffix-only prefill on a hit), scatter the
+        prefilled rows into the pool, and index the prompt's full blocks
+        in the prefix cache for the next same-prefix admission."""
+        got = self._paged_admit_blocks(req.prompt_ids, len(req.prompt_ids),
+                                       stats)
+        if got is None:
+            self._push(req)
+            return False
+        start, blocks = got
+        self._blocks[slot] = blocks
+        self._tables_dirty = True
+        if start:
+            # shared blocks already hold rows 0..start-1: gather this
+            # slot's view and prefill only the divergent suffix
+            view = self._gather(self._pool, self._table_row(slot)[None])
+            logits, cache = self.engine.prefill_continue(
+                req.prompt_ids, start, view)
+            stats["prefilled"] += len(req.prompt_ids) - start
+        else:
+            logits, cache = self.engine.prefill_ids(req.prompt_ids,
+                                                    self.max_len)
+            stats["prefilled"] += len(req.prompt_ids)
+        self._pool = self._scatter_prefill(self._pool, cache,
+                                           self._table_row(slot),
+                                           jnp.int32(start))
+        if self._prefix is not None:
+            self._prefix.insert(req.prompt_ids, blocks)
+        tok = int(self.engine.sample(logits, [req.rid], [0])[0])
+        if self._first_token(req, tok, finished):
+            self._occupy(slot, req, self._offset + len(req.prompt_ids), tok)
+        else:
+            self._free_slot_blocks(slot)
+        return True
 
     def _admit_bucket(self, group: List[Request], free: List[int],
-                      finished: List[Request], stats: Dict[str, int]) -> None:
+                      finished: List[Request], stats: Dict[str, int]) -> bool:
         """Admit a same-bucket group with ONE jitted batched prefill
         (batch padded to ``n_slots`` rows so every group size shares the
-        same trace)."""
+        same trace).  In paged mode (prefix cache off — hit-aware
+        admission goes per-request through ``_paged_prefill_into``) each
+        row scatters into its slot's freshly allocated blocks.  False =
+        the paged pool ran out mid-group (unplaced members requeued)."""
         logits, cache = self.engine.prefill_batch_ids(
             [r.prompt_ids for r in group], self.max_len, width=self.n_slots)
         slot_iter = iter(free)
+        exhausted = False
         for j, req in enumerate(group):
+            if exhausted:
+                self._push(req)
+                continue
+            blocks: List[int] = []
+            if self._paged:
+                got = self._paged_admit_blocks(req.prompt_ids,
+                                               len(req.prompt_ids), stats)
+                if got is None:
+                    exhausted = True
+                    self._push(req)
+                    continue
+                _, blocks = got
             stats["prefilled"] += len(req.prompt_ids)
             tok = int(self.engine.sample(logits[j:j + 1], [req.rid], [0])[0])
             if self._first_token(req, tok, finished):
                 slot = next(slot_iter)
                 row = self._take(cache, j)
-                self._cache = self._insert(self._cache, row, slot)
+                if self._paged:
+                    self._blocks[slot] = blocks
+                    self._tables_dirty = True
+                    self._pool = self._scatter_prefill(
+                        self._pool, row, self._table_row(slot), jnp.int32(0))
+                else:
+                    self._cache = self._insert(self._cache, row, slot)
                 self._occupy(req=req, slot=slot, tok=tok,
                              pos=self._offset + len(req.prompt_ids))
+            elif self._paged:
+                for bid in blocks:
+                    self._alloc.decref(bid)
+        return not exhausted
 
     def _resume_into(self, slot: int, req: Request,
-                     stats: Dict[str, int]) -> None:
+                     stats: Dict[str, int]) -> bool:
         """Re-admit a preempted request: canonical prefill of the prompt
         plus decode replay of its kept tokens (``Engine.replay_ids``) —
         the state rebuild is bit-identical, generated tokens are never
-        resampled."""
+        resampled.  In paged mode the replayed rows scatter into
+        re-pinned blocks (shared prefix blocks are reused, not
+        rewritten).  False = pool exhausted (request requeued)."""
+        if self._paged:
+            n_rows = len(req.prompt_ids) + len(req.out_ids) - 1
+            got = self._paged_admit_blocks(req.prompt_ids, n_rows, stats)
+            if got is None:
+                self._push(req)
+                return False
+            start, blocks = got
+            self._blocks[slot] = blocks
+            self._tables_dirty = True
+            cache, pos, tok = self.engine.replay_ids(
+                req.prompt_ids, req.out_ids, self.max_len)
+            stats["prefilled"] += len(req.prompt_ids) + len(req.out_ids) - 1
+            self._pool = self._scatter_prefill(self._pool, cache,
+                                               self._table_row(slot),
+                                               jnp.int32(start))
+            if self._prefix is not None:
+                self._prefix.insert(req.prompt_ids, blocks)
+            self._occupy(slot, req, pos, tok)
+            return True
         cache, pos, tok = self.engine.replay_ids(
             req.prompt_ids, req.out_ids, self.max_len)
         stats["prefilled"] += len(req.prompt_ids) + len(req.out_ids) - 1
         self._cache = self._insert(self._cache, cache, slot)
         self._occupy(slot, req, pos, tok)
+        return True
 
     def _admit(self, finished: List[Request], stats: Dict[str, int]) -> None:
         """Fill free slots from the priority queue (strict priority
@@ -354,7 +620,21 @@ class BatchScheduler:
                 self._chunk_job = None
                 self._reserved.discard(slot)
                 tok = int(self.engine.sample(job.logits, [req.rid], [0])[0])
-                if self._first_token(req, tok, finished):
+                if self._paged:
+                    # scatter skips the job's reused-prefix rows (they
+                    # live in shared blocks the job never rewrote)
+                    self._pool = self._scatter_prefill(
+                        self._pool, job.cache, self._table_row(slot),
+                        jnp.int32(job.start))
+                    if self._prefix is not None:
+                        self._prefix.insert(req.prompt_ids,
+                                            self._blocks[slot])
+                    if self._first_token(req, tok, finished):
+                        self._occupy(slot, req,
+                                     self._offset + len(req.prompt_ids), tok)
+                    else:
+                        self._free_slot_blocks(slot)
+                elif self._first_token(req, tok, finished):
                     self._cache = self._insert(self._cache, job.cache, slot)
                     self._occupy(slot, req,
                                  self._offset + len(req.prompt_ids), tok)
@@ -366,7 +646,8 @@ class BatchScheduler:
             if req is None:
                 return
             if req.out_ids:                     # preempted: replay resume
-                self._resume_into(free[0], req, stats)
+                if not self._resume_into(free[0], req, stats):
+                    return                      # pool exhausted this step
                 continue
             if self._needs_chunk(req):
                 if self._chunk_job is not None:
@@ -375,12 +656,36 @@ class BatchScheduler:
                     self._push(req)
                     return
                 slot = free[0]
+                if self._paged:
+                    got = self._paged_admit_blocks(
+                        req.prompt_ids, len(req.prompt_ids), stats)
+                    if got is None:
+                        self._push(req)
+                        return
+                    start, blocks = got
+                    self._blocks[slot] = blocks
+                    self._tables_dirty = True
+                    if start:
+                        # hot prefix: the chunk job starts at the first
+                        # divergent row against the gathered slot view
+                        view = self._gather(self._pool,
+                                            self._table_row(slot)[None])
+                        job = PrefillJob(self.engine, req.prompt_ids,
+                                         self.max_len, cache=view,
+                                         start=start)
+                    else:
+                        job = self.engine.prefill_job(req.prompt_ids,
+                                                      self.max_len)
+                else:
+                    job = self.engine.prefill_job(req.prompt_ids,
+                                                  self.max_len)
                 self._reserved.add(slot)
-                job = self.engine.prefill_job(req.prompt_ids, self.max_len)
                 stats["prefilled"] += job.step()   # first chunk this step
                 self._chunk_job = (job, req, slot)
                 continue
-            if self.batched_prefill and self.engine.supports_fixed_shape_prefill:
+            if (self.batched_prefill
+                    and self.engine.supports_fixed_shape_prefill
+                    and not (self._paged and self._prefix is not None)):
                 group = [req]
                 bucket = prefill_bucket(len(req.prompt_ids))
                 while len(group) < len(free):
@@ -388,9 +693,11 @@ class BatchScheduler:
                     if nxt is None:
                         break
                     group.append(nxt)
-                self._admit_bucket(group, free, finished, stats)
+                if not self._admit_bucket(group, free, finished, stats):
+                    return
             else:
-                self._prefill_into(free[0], req, finished, stats)
+                if not self._prefill_into(free[0], req, finished, stats):
+                    return
 
     def _pop_matching(self, bucket: int,
                       leader: Optional[Request] = None) -> Optional[Request]:
@@ -437,6 +744,8 @@ class BatchScheduler:
             return
         req = self.slots[victim]
         self.slots[victim] = None
+        if self._paged:
+            self._free_slot_blocks(victim)
         req.preemptions += 1
         stats["preempted"] += 1
         self._push(req)
@@ -449,15 +758,47 @@ class BatchScheduler:
         over the slot batch. Returns the requests that finished this
         step."""
         finished: List[Request] = []
-        stats = {"prefilled": 0, "preempted": 0}
+        stats = {"prefilled": 0, "preempted": 0, "prefix_hits": 0}
         self._preempt(stats)
         self._admit(finished, stats)
         live = [i for i in range(self.n_slots) if self.slots[i] is not None]
+        if self._paged:
+            # grow each live slot's table to cover its write position;
+            # a slot that cannot get a block self-preempts (resume later
+            # replays it bit-identically, so nothing is lost)
+            for i in list(live):
+                if not self._ensure_block(i):
+                    req = self.slots[i]
+                    self.slots[i] = None
+                    self._free_slot_blocks(i)
+                    req.preemptions += 1
+                    stats["preempted"] += 1
+                    self._push(req)
+                    live.remove(i)
         if live:
             tokens = jnp.asarray([[t] for t in self._tok], jnp.int32)
             pos = jnp.asarray(self._pos, jnp.int32)
-            logits, self._cache = self.engine._decode(
-                self.engine.params, cache=self._cache, token=tokens, pos=pos)
+            if self._paged:
+                # gather pool -> dense view, decode with the SAME jitted
+                # executable as the contiguous path (bit parity), scatter
+                # the freshly written rows back into the pool.  Only LIVE
+                # slots write back: a dead or chunk-reserved slot decodes
+                # junk at a stale position (exactly like the contiguous
+                # path), and its table may already hold SHARED prefix
+                # blocks — its row is redirected to the trash block.
+                tables = self._tables_device()
+                live_rows = jnp.asarray(
+                    [self.slots[i] is not None for i in range(self.n_slots)])
+                wtables = jnp.where(live_rows[:, None], tables, self._trash)
+                view = self._gather(self._pool, tables)
+                logits, view = self.engine._decode(
+                    self.engine.params, cache=view, token=tokens, pos=pos)
+                self._pool = self._scatter_rows(self._pool, view, wtables,
+                                                pos)
+            else:
+                logits, self._cache = self.engine._decode(
+                    self.engine.params, cache=self._cache, token=tokens,
+                    pos=pos)
             rids = [r.rid if (r := self.slots[i]) is not None else 0
                     for i in range(self.n_slots)]
             steps = [len(r.out_ids) if (r := self.slots[i]) is not None else 0
@@ -473,12 +814,17 @@ class BatchScheduler:
                     req.done = True
                     finished.append(req)
                     self.slots[i] = None   # slot freed -> next admission
+                    if self._paged:
+                        self._free_slot_blocks(i)
         self._steps += 1
         self._emit(EngineStepped(t=float(self._steps), live=len(live),
                                  queued=self.queue_depth(),
                                  generated=len(live),
                                  prefilled=stats["prefilled"],
-                                 preempted=stats["preempted"]))
+                                 preempted=stats["preempted"],
+                                 blocks_in_use=(self._alloc.in_use
+                                                if self._paged else 0),
+                                 prefix_hits=stats["prefix_hits"]))
         return finished
 
     # -- draining -----------------------------------------------------------

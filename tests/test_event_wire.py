@@ -46,7 +46,7 @@ SAMPLES = [
     PlanFallback(t=6.4, key="ab12" * 16, reason="node-failed:fetch",
                  stage=1),
     EngineStepped(t=7.0, live=3, queued=2, generated=3, prefilled=64,
-                  preempted=1),
+                  preempted=1, blocks_in_use=12, prefix_hits=2),
     RunDegraded(t=0.0, tenant="acme", reason="soft budget exhaustion",
                 from_pattern="agentx", to_pattern="agentx-compiled",
                 from_deployment="faas", to_deployment="local"),
@@ -96,6 +96,16 @@ def test_missing_newer_fields_default():
            "generated": 2}
     ev = from_wire(old)
     assert ev.prefilled == 0 and ev.preempted == 0
+
+
+def test_pre_paging_enginestepped_payload_defaults():
+    """A pre-paging EngineStepped payload (no paged-KV gauges) still
+    deserializes — blocks_in_use/prefix_hits default to 0, which is
+    exactly what the contiguous scheduler emits."""
+    old = {"type": "EngineStepped", "t": 1.0, "live": 2, "queued": 0,
+           "generated": 2, "prefilled": 16, "preempted": 0}
+    ev = from_wire(old)
+    assert ev.blocks_in_use == 0 and ev.prefix_hits == 0
 
 
 def test_pre_plan_toolevent_payload_defaults():

@@ -4,9 +4,11 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import (decode_attention_op, flash_attention_op,
-                           rmsnorm_op, ssd_scan_op)
+                           paged_decode_attention_op, rmsnorm_op,
+                           ssd_scan_op)
 from repro.kernels.ref import (decode_attention_ref, flash_attention_ref,
-                               rmsnorm_ref, ssd_scan_ref)
+                               paged_decode_attention_ref, rmsnorm_ref,
+                               ssd_scan_ref)
 
 TOL = {jnp.float32: 2e-4, jnp.bfloat16: 4e-2}
 
@@ -46,6 +48,70 @@ def test_decode_attention(b, c, hq, hkv, hd, dtype):
     ref = decode_attention_ref(q, k, v, lens)
     err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
     assert float(err) < TOL[dtype], float(err)
+
+
+def _paged_inputs(key, b, hq, hkv, hd, n_blocks, bs, mb, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    q = jax.random.normal(k1, (b, hq, hd), dtype)
+    kp = jax.random.normal(k2, (n_blocks, bs, hkv, hd), dtype)
+    vp = jax.random.normal(k3, (n_blocks, bs, hkv, hd), dtype)
+    # tables draw WITH junk: rows past the valid length point at random
+    # physical blocks, exactly like a scheduler table mid-flight
+    tables = jax.random.randint(k4, (b, mb), 0, n_blocks, jnp.int32)
+    return q, kp, vp, tables
+
+
+@pytest.mark.parametrize("b,hq,hkv,hd,bs,mb", [
+    (2, 8, 2, 64, 16, 4),       # GQA
+    (3, 4, 1, 64, 8, 6),        # MQA, small blocks
+    (1, 16, 16, 128, 32, 2),    # MHA, wide blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(b, hq, hkv, hd, bs, mb, dtype):
+    n_blocks = 2 * b * mb
+    q, kp, vp, tables = _paged_inputs(jax.random.key(7), b, hq, hkv, hd,
+                                      n_blocks, bs, mb, dtype)
+    lens = jnp.asarray([(i * mb * bs) // b + 1 for i in range(b)], jnp.int32)
+    out = paged_decode_attention_op(q, kp, vp, tables, lens, interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, tables, lens)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+    assert float(err) < TOL[dtype], float(err)
+
+
+@pytest.mark.parametrize("length", [
+    0,          # empty sequence: exact-zero output, no NaN
+    8,          # exactly one full block
+    13,         # last block partially filled
+    32,         # every table slot full (max-blocks)
+])
+def test_paged_decode_attention_edges(length):
+    b, hq, hkv, hd, bs, mb, n_blocks = 2, 8, 2, 64, 8, 4, 16
+    q, kp, vp, tables = _paged_inputs(jax.random.key(11), b, hq, hkv, hd,
+                                      n_blocks, bs, mb, jnp.float32)
+    lens = jnp.asarray([length, 32 - length], jnp.int32)
+    out = paged_decode_attention_op(q, kp, vp, tables, lens, interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, tables, lens)
+    assert not bool(jnp.any(jnp.isnan(out)))
+    err = jnp.max(jnp.abs(out - ref))
+    assert float(err) < TOL[jnp.float32], float(err)
+    if length == 0:
+        assert float(jnp.max(jnp.abs(out[0]))) == 0.0
+
+
+def test_paged_decode_matches_dense_gather():
+    """Gathering the pool through the table and running the dense decode
+    kernel must agree with the paged kernel reading through the table."""
+    b, hq, hkv, hd, bs, mb, n_blocks = 2, 8, 2, 64, 8, 4, 16
+    q, kp, vp, tables = _paged_inputs(jax.random.key(13), b, hq, hkv, hd,
+                                      n_blocks, bs, mb, jnp.float32)
+    lens = jnp.asarray([9, 25], jnp.int32)
+    paged = paged_decode_attention_op(q, kp, vp, tables, lens,
+                                      interpret=True)
+    kd = kp[tables].reshape(b, mb * bs, hkv, hd)
+    vd = vp[tables].reshape(b, mb * bs, hkv, hd)
+    dense = decode_attention_op(q, kd, vd, lens, block_k=bs, interpret=True)
+    err = jnp.max(jnp.abs(paged - dense))
+    assert float(err) < TOL[jnp.float32], float(err)
 
 
 @pytest.mark.parametrize("b,s,h,p,n,chunk", [

@@ -153,3 +153,52 @@ def test_ssd_state_neutral_padding(b, s):
     Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
     _, fin2 = ssd_scan_ref(xp, dtp, A, Bp, Cp)
     assert float(jnp.max(jnp.abs(fin - fin2))) < 1e-5
+
+
+# --- paged KV parity (the paging tentpole's property suite) -----------------
+#
+# Strategies draw a scenario SEED plus engine knobs; the scenario
+# generator/runner is shared with tests/test_paging.py, so the seeded
+# battery there and this wider search assert the exact same property:
+# paged (prefix on AND off) == contiguous == serial, request for request.
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([("gqa", 0.0, 0), ("gqa", 1.0, 8), ("mla", 1.0, 0)]))
+@settings(max_examples=6, deadline=None)
+def test_paged_parity_property(seed, knobs):
+    from paging_scenarios import assert_parity, gen_scenario, get_engine
+    arch, temp, chunk = knobs
+    rng = np.random.default_rng(seed)
+    eng = get_engine(arch, temp, chunk)
+    assert_parity(eng, gen_scenario(rng, n_req=int(rng.integers(2, 7))))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_paged_parity_tight_pool_property(seed):
+    """Random scenarios under a pool barely over one sequence wide:
+    eviction/exhaustion churn never changes a token."""
+    from paging_scenarios import (BLOCK, MAX_LEN, assert_parity,
+                                  gen_scenario, get_engine)
+    rng = np.random.default_rng(seed)
+    eng = get_engine("gqa", 1.0, 8)
+    assert_parity(eng, gen_scenario(rng, n_req=5),
+                  n_blocks=MAX_LEN // BLOCK + 2, check_serial=False)
+
+
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=24),
+       st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_prefix_chain_commits_to_whole_prefix(ids, block_size):
+    """A chained block key is a commitment to the entire token prefix:
+    perturbing ANY earlier token changes every key at or after it."""
+    from repro.serving import prefix_block_keys
+    keys = prefix_block_keys(ids, block_size, "salt")
+    assert len(keys) == len(ids) // block_size
+    if not keys:
+        return
+    mutated = list(ids)
+    mutated[0] += 1
+    assert all(a != b for a, b in
+               zip(keys, prefix_block_keys(mutated, block_size, "salt")))
