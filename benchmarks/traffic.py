@@ -328,6 +328,135 @@ def measure_tenancy(n_requests: int = 105, seed: int = 0,
     }
 
 
+def measure_telemetry(n_requests: int = 40, rate: float = 2.0,
+                      seed: int = 0, max_concurrency: int = 0) -> dict:
+    """The unified-telemetry section, with its invariants asserted:
+
+      * two independent virtual-clock replays of the same seeded
+        (faulted + retry + plan-cache) workload fold into BYTE-identical
+        Prometheus and OTLP exports;
+      * the key series are non-empty — tool latency, run latency,
+        plan-cache lookups — and a real (reduced) engine pass populates
+        the EngineStepped series;
+      * the jit profiler reports >= 1 profiled executable with a compile
+        count and call-time stats;
+      * the SLO monitor fires burn-rate alerts on the faulted workload,
+        identically across replays.
+    """
+    import hashlib
+
+    from repro.plans import PlanCache
+    from repro.telemetry import (EventMetricsBridge, JitProfiler,
+                                 MetricsRegistry, SloMonitor,
+                                 export_otlp_metrics_json, fold_report,
+                                 render_prometheus)
+    from repro.traffic.faults import FaultStats
+
+    slo = SLOTarget()
+
+    def one_replay():
+        stats = FaultStats()
+        wl = Workload(scenarios=_faulty_mix(stats), arrival="poisson",
+                      rate=rate, n_requests=n_requests, seed=seed,
+                      unique_seeds=max(4, n_requests // 8))
+        session = Session(retry=RETRY, plan_cache=PlanCache())
+        report = TrafficDriver(session,
+                               max_concurrency=max_concurrency).run(wl)
+        registry = MetricsRegistry()
+        fold_report(EventMetricsBridge(registry), report)
+        slo_mon = SloMonitor(slo, window_s=60.0, threshold=2.0,
+                             registry=registry)
+        slo_mon.observe_records(report.records)
+        return (render_prometheus(registry),
+                export_otlp_metrics_json(registry), registry, slo_mon)
+
+    text1, otlp1, registry, slo_mon = one_replay()
+    text2, otlp2, _, slo_mon2 = one_replay()
+    assert text1 == text2, \
+        "two virtual replays must render byte-identical Prometheus text"
+    assert otlp1 == otlp2, \
+        "two virtual replays must render byte-identical OTLP JSON"
+    assert len(slo_mon.alerts) == len(slo_mon2.alerts)
+
+    def total(name):
+        return int(registry.total(name))
+
+    assert total("repro_tool_latency_seconds") > 0, "tool series empty"
+    assert total("repro_run_latency_seconds") == n_requests
+    assert total("repro_cache_lookups_total") > 0, "cache series empty"
+    assert len(slo_mon.alerts) >= 1, \
+        "the faulted workload should burn error budget"
+
+    # -- a real (reduced) engine pass: EngineStepped series + profiler --
+    from repro.configs import get_config
+    from repro.serving import BatchScheduler, Engine, RunMonitor
+    engine = Engine(get_config("tinyllama-1.1b").reduced(), seed=seed)
+    profiler = JitProfiler()
+    profiler.wrap_engine(engine)
+    monitor = RunMonitor()
+    sched = BatchScheduler(engine, n_slots=4, max_len=64,
+                           on_event=monitor)
+    for i in range(4):
+        sched.submit(f"telemetry probe {i}: measure decode", max_new=8)
+    sched.run()
+    ereg = monitor.registry
+    assert int(ereg.total("repro_engine_steps_total")) > 0
+    assert int(ereg.total("repro_engine_decode_tokens_total")) > 0
+    assert int(ereg.total("repro_engine_prefill_tokens_total")) > 0
+    profiled = {name: s for name, s in profiler.stats().items()
+                if s["calls"] > 0}
+    assert profiled and any(s["compiles"] >= 1 for s in profiled.values()), \
+        "expected >= 1 profiled jit executable with a compile"
+
+    cache_gauge = registry.get("repro_cache_hit_rate")
+    return {
+        "config": {"n_requests": n_requests, "rate": rate, "seed": seed,
+                   "slo": slo.describe(), "burn_window_s": 60.0,
+                   "burn_threshold": 2.0},
+        "determinism": {
+            "replays": 2,
+            "prometheus_bytes": len(text1),
+            "prometheus_sha256":
+                hashlib.sha256(text1.encode()).hexdigest(),
+            "byte_identical_prometheus": text1 == text2,
+            "byte_identical_otlp": otlp1 == otlp2,
+        },
+        "series": {
+            "families": len(registry.names()),
+            "events_folded": total("repro_events_total"),
+            "llm_calls": total("repro_llm_calls_total"),
+            "tool_latency_observations":
+                total("repro_tool_latency_seconds"),
+            "tool_retries": total("repro_tool_retries_total"),
+            "run_latency_observations":
+                total("repro_run_latency_seconds"),
+            "cache_lookups": total("repro_cache_lookups_total"),
+            "plan_cache_hit_rate":
+                (cache_gauge.value(cache="plan")
+                 if cache_gauge is not None else 0.0),
+        },
+        "slo": dict(slo_mon.summary(),
+                    fired=[{"slo": a.slo, "window_start": a.window_start,
+                            "burn_rate": a.burn_rate, "bad": a.bad,
+                            "total": a.total} for a in slo_mon.alerts]),
+        "engine": {
+            "steps": int(ereg.total("repro_engine_steps_total")),
+            "decode_tokens":
+                int(ereg.total("repro_engine_decode_tokens_total")),
+            "prefill_tokens":
+                int(ereg.total("repro_engine_prefill_tokens_total")),
+            "peak_live": monitor.engine_peak_live,
+        },
+        "jit_profile": profiled,
+        "checks": {
+            "byte_identical_exports": True,
+            "engine_series_nonempty": True,
+            "slo_alerts_fired": len(slo_mon.alerts),
+            "profiled_jit_executables": len(profiled),
+        },
+    }
+
+
 def measure(n_requests: int = 100, rate: float = 2.0, seed: int = 0,
             arrival: str = "poisson", max_concurrency: int = 0) -> dict:
     from repro.traffic.faults import FaultStats
@@ -430,10 +559,24 @@ def main() -> None:
     ap.add_argument("--tenancy-only", action="store_true",
                     help="run only the multi-tenant passes and merge the "
                          "section into an existing artifact")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="skip the unified-telemetry passes")
+    ap.add_argument("--telemetry-only", action="store_true",
+                    help="run only the telemetry passes and merge the "
+                         "section into an existing artifact")
     ap.add_argument("--out", default=os.path.join(ART, "BENCH_traffic.json"))
     args = ap.parse_args()
 
-    if args.tenancy_only:
+    if args.telemetry_only:
+        rec = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                rec = json.load(f)
+        rec["telemetry"] = measure_telemetry(n_requests=args.requests,
+                                             rate=args.rate,
+                                             seed=args.seed,
+                                             max_concurrency=args.concurrency)
+    elif args.tenancy_only:
         rec = {}
         if os.path.exists(args.out):
             with open(args.out) as f:
@@ -465,6 +608,10 @@ def main() -> None:
         if not args.no_tenancy:
             rec["tenancy"] = measure_tenancy(n_requests=args.requests,
                                              seed=args.seed)
+        if not args.no_telemetry:
+            rec["telemetry"] = measure_telemetry(
+                n_requests=args.requests, rate=args.rate, seed=args.seed,
+                max_concurrency=args.concurrency)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
@@ -553,6 +700,31 @@ def main() -> None:
             failed = True
         if not te["budget_degrades_and_rejects"]:
             print("# FAIL: tight budget produced no degradation/rejection")
+            failed = True
+    if "telemetry" in rec:
+        tm = rec["telemetry"]
+        det, se, ck = tm["determinism"], tm["series"], tm["checks"]
+        print(f"telemetry.byte_identical_prometheus,"
+              f"{det['byte_identical_prometheus']},")
+        print(f"telemetry.byte_identical_otlp,"
+              f"{det['byte_identical_otlp']},")
+        print(f"telemetry.prometheus_bytes,{det['prometheus_bytes']},")
+        print(f"telemetry.events_folded,{se['events_folded']},")
+        print(f"telemetry.tool_latency_observations,"
+              f"{se['tool_latency_observations']},")
+        print(f"telemetry.cache_lookups,{se['cache_lookups']},")
+        print(f"telemetry.plan_cache_hit_rate,"
+              f"{se['plan_cache_hit_rate']:.3f},")
+        print(f"telemetry.engine_steps,{tm['engine']['steps']},")
+        print(f"telemetry.slo_alerts,{ck['slo_alerts_fired']},")
+        print(f"telemetry.profiled_jit_executables,"
+              f"{ck['profiled_jit_executables']},")
+        for fn, s in sorted(tm["jit_profile"].items()):
+            print(f"telemetry.jit.{fn},{s['calls']} calls,"
+                  f"{s['compiles']} compiles,{s['avg_ms']:.1f} ms avg")
+        if not (det["byte_identical_prometheus"]
+                and det["byte_identical_otlp"]):
+            print("# FAIL: replayed exports were not byte-identical")
             failed = True
     print(f"# wrote {args.out}")
     if failed:

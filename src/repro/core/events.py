@@ -182,6 +182,27 @@ class BudgetExceeded(RunEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class SloAlertFired(RunEvent):
+    """Telemetry-side alert: an :class:`repro.telemetry.SloMonitor`
+    window burned error budget faster than its threshold.  ``slo`` names
+    the objective (``"success"`` | ``"latency"`` | ``"ttft"``),
+    ``burn_rate`` the window's error rate divided by the SLO's error
+    budget (1.0 = burning exactly at budget), ``bad``/``total`` the
+    window's violating/observed run counts, and ``target`` the SLO value
+    the objective was checked against.  ``t`` is the end of the
+    (virtual-clock-aligned) window, so replaying a workload re-fires the
+    identical alerts at the identical instants."""
+    slo: str
+    window_start: float
+    window_s: float
+    burn_rate: float
+    threshold: float
+    bad: int
+    total: int
+    target: float
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineStepped(RunEvent):
     """Serving-side event: the continuous-batching scheduler advanced all
     live decode slots by one step.  Emitted by the *engine*, not a run —
@@ -243,7 +264,7 @@ _EVENT_TYPES: Dict[str, type] = {
                 ToolInvoked, OverheadIncurred, ReflectionEmitted,
                 StageCompleted, RunCompleted, ToolRetried, RunHedged,
                 PlanCompiled, PlanCacheMiss, PlanFallback, EngineStepped,
-                RunDegraded, BudgetExceeded)
+                RunDegraded, BudgetExceeded, SloAlertFired)
 }
 
 # events whose ``event`` field is a nested metrics dataclass

@@ -32,6 +32,12 @@ def main():
     ap.add_argument("--high-priority-every", type=int, default=0,
                     help="submit every Nth request at priority 1 to "
                          "exercise queue jumping / preemption")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the monitor registry's Prometheus text "
+                         "export here (plus <path>.otlp.json)")
+    ap.add_argument("--profile-jit", action="store_true",
+                    help="wrap the engine's jitted hot paths and print "
+                         "per-fn compile counts and call-time stats")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,6 +45,11 @@ def main():
         cfg = cfg.reduced()
     engine = Engine(cfg, seed=args.seed, prefill_chunk=args.prefill_chunk)
     monitor = RunMonitor()
+    profiler = None
+    if args.profile_jit:
+        from ..telemetry import JitProfiler
+        profiler = JitProfiler()
+        profiler.wrap_engine(engine)
     sched = BatchScheduler(engine, n_slots=args.slots, max_len=args.max_len,
                            on_event=monitor,
                            batched_prefill=not args.per_request_prefill)
@@ -60,6 +71,18 @@ def main():
           f"{monitor.engine_preemptions} preemptions")
     for rid in sorted(results)[:3]:
         print(f"req{rid}: {results[rid][:48]!r}")
+    if profiler is not None:
+        print("# jit profile (calls / compiles / wall time per fn):")
+        for row in profiler.table():
+            print(row)
+    if args.metrics_out:
+        from ..telemetry import export_otlp_metrics_json, render_prometheus
+        otlp_path = args.metrics_out + ".otlp.json"
+        with open(args.metrics_out, "w") as fh:
+            fh.write(render_prometheus(monitor.registry))
+        with open(otlp_path, "w") as fh:
+            fh.write(export_otlp_metrics_json(monitor.registry))
+        print(f"# wrote {args.metrics_out} + {otlp_path}")
 
 
 if __name__ == "__main__":

@@ -112,6 +112,69 @@ def _tenancy(args):
     return mults, registry, Tenancy(registry)
 
 
+def _export_metrics(args, report):
+    """Fold the finished report into a fresh registry, write the
+    Prometheus + OTLP exports, and return ``(registry, slo_monitor,
+    paths)`` for the summary tables."""
+    from ..telemetry import (EventMetricsBridge, MetricsRegistry,
+                             SloMonitor, export_otlp_metrics_json,
+                             fold_report, render_prometheus)
+    registry = MetricsRegistry()
+    fold_report(EventMetricsBridge(registry), report)
+    slo_mon = SloMonitor(SLOTarget(), window_s=args.slo_window,
+                         threshold=args.burn_threshold, registry=registry)
+    slo_mon.observe_records(report.records)
+    otlp_path = args.metrics_out + ".otlp.json"
+    with open(args.metrics_out, "w") as fh:
+        fh.write(render_prometheus(registry))
+    with open(otlp_path, "w") as fh:
+        fh.write(export_otlp_metrics_json(registry))
+    return registry, slo_mon, (args.metrics_out, otlp_path)
+
+
+def _print_telemetry(registry, slo_mon, paths) -> None:
+    def t(name):
+        return int(registry.total(name))
+
+    def hit_rate(cache):
+        g = registry.get("repro_cache_hit_rate")
+        return g.value(cache=cache) if g is not None else 0.0
+
+    print(f"# telemetry: {t('repro_events_total')} events folded into "
+          f"{len(registry.names())} families | wrote {paths[0]} + "
+          f"{paths[1]}")
+    rows = [
+        ("orchestration",
+         f"runs={t('repro_runs_started_total')} "
+         f"llm_calls={t('repro_llm_calls_total')} "
+         f"tool_calls={t('repro_tool_calls_total')} "
+         f"retries={t('repro_tool_retries_total')} "
+         f"hedges={t('repro_hedges_total')}"),
+        ("engine",
+         f"steps={t('repro_engine_steps_total')} "
+         f"decode_tokens={t('repro_engine_decode_tokens_total')} "
+         f"prefill_tokens={t('repro_engine_prefill_tokens_total')} "
+         f"prefix_hits={t('repro_engine_prefix_hits_total')}"),
+        ("tenancy",
+         f"spend_usd={registry.total('repro_tenant_spend_usd_total'):.5f} "
+         f"degraded={t('repro_tenant_degraded_total')} "
+         f"rejected={t('repro_tenant_rejected_total')}"),
+        ("caches",
+         f"plan_hit_rate={hit_rate('plan'):.0%} "
+         f"lookups={t('repro_cache_lookups_total')} "
+         f"plan_events={t('repro_plan_cache_events_total')}"),
+        ("durability",
+         f"crashes={t('repro_run_crashes_total')} "
+         f"resumes={t('repro_run_resumes_total')}"),
+        ("slo",
+         f"alerts={len(slo_mon.alerts)} " + " ".join(
+             f"{o}={n}" for o, n in
+             slo_mon.summary()["by_objective"].items())),
+    ]
+    for layer, detail in rows:
+        print(f"#   {layer:14s} {detail}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", action="append", default=[],
@@ -170,6 +233,16 @@ def main() -> None:
                          "arrival times (use with --llm jax-batched)")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="real mode: compress arrival time by this factor")
+    # unified telemetry (repro.telemetry)
+    ap.add_argument("--metrics-out", default="",
+                    help="fold the run into the metrics registry and "
+                         "write the Prometheus text export here (plus "
+                         "<path>.otlp.json), printing per-layer "
+                         "telemetry tables")
+    ap.add_argument("--slo-window", type=float, default=60.0,
+                    help="SLO burn-rate window (virtual s)")
+    ap.add_argument("--burn-threshold", type=float, default=2.0,
+                    help="burn-rate multiple that fires an alert")
     ap.add_argument("--json", action="store_true",
                     help="print the full aggregate as JSON")
     args = ap.parse_args()
@@ -226,6 +299,10 @@ def main() -> None:
     report = driver.run(wl)
     agg = aggregate_report(report, SLOTarget())
 
+    telemetry = None
+    if args.metrics_out:
+        telemetry = _export_metrics(args, report)
+
     if args.json:
         print(json.dumps(agg, indent=2))
         return
@@ -268,6 +345,8 @@ def main() -> None:
                   f"{t['cost_usd']:9.5f} {t['token_throughput']:7.1f} "
                   f"{a['queue_wait_s']['p95']:8.1f} "
                   f"{t['degraded_runs']:4d} {t['rejected_runs']:4d}")
+    if telemetry is not None:
+        _print_telemetry(*telemetry)
 
 
 if __name__ == "__main__":

@@ -103,6 +103,16 @@ class RunMonitor:
     mining. Thread-safe: ``Session.execute_many`` delivers events from
     worker threads.
 
+    Since the telemetry subsystem landed, the monitor is a *thin view*
+    over a :class:`repro.telemetry.MetricsRegistry`: every event is
+    folded by an :class:`repro.telemetry.EventMetricsBridge` and the
+    historical counters (``runs_started``, ``engine_steps``, ...) are
+    read-only properties derived from the registry's series, so the
+    same numbers are available as Prometheus/OTLP exports via
+    ``monitor.registry`` with zero double counting.  The public surface
+    — attribute names, ``snapshot()`` keys, ``wire_observer()`` — is
+    unchanged.
+
     ``runs_succeeded`` counts pattern-level completion
     (``RunCompleted.completed``); artifact location and judge gating
     happen after the run, so it can exceed the number of runs whose
@@ -123,88 +133,29 @@ class RunMonitor:
     tokens, cost_usd, degraded, rejected}.
     """
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.runs_started = 0
-        self.runs_completed = 0
-        self.runs_succeeded = 0
-        self.llm_calls = 0
-        self.input_tokens = 0
-        self.output_tokens = 0
-        self.tool_calls = 0
-        self.tool_errors = 0
-        self.framework_events = 0
-        self.calls_per_agent: Dict[str, int] = {}
-        # serving-side gauges (EngineStepped stream)
-        self.engine_steps = 0
-        self.engine_live = 0
-        self.engine_queued = 0
-        self.engine_peak_live = 0
-        self.engine_tokens = 0
-        self.engine_prefill_tokens = 0
-        self.engine_preemptions = 0
-        self.engine_blocks_in_use = 0
-        self.engine_prefix_hits = 0
-        # per-tenant gauges (multi-tenant serving)
-        self.tenants: Dict[str, Dict[str, Any]] = {}
-        self._tls = threading.local()
+    # tenant label values are unioned across these families so a tenant
+    # seen only at admission (degraded/rejected before any run) still
+    # gets a gauge row, exactly like the pre-registry monitor
+    _TENANT_FAMILIES = (
+        "repro_tenant_runs_total", "repro_tenant_completed_total",
+        "repro_tenant_llm_calls_total", "repro_tenant_tokens_total",
+        "repro_tenant_spend_usd_total", "repro_tenant_degraded_total",
+        "repro_tenant_rejected_total")
 
-    def _tenant(self, name: str) -> Dict[str, Any]:
-        g = self.tenants.get(name)
-        if g is None:
-            g = self.tenants[name] = {
-                "runs": 0, "completed": 0, "llm_calls": 0, "tokens": 0,
-                "cost_usd": 0.0, "degraded": 0, "rejected": 0}
-        return g
+    def __init__(self, registry=None, bridge=None):
+        # lazy import: telemetry stays un-imported until a monitor (or a
+        # bridge) is actually constructed — serving hot paths that never
+        # attach one run the exact pre-telemetry import graph
+        from ..telemetry.bridge import EventMetricsBridge
+        if bridge is not None:
+            self.bridge = bridge
+            self.registry = bridge.registry
+        else:
+            self.bridge = EventMetricsBridge(registry)
+            self.registry = self.bridge.registry
 
     def __call__(self, event) -> None:
-        ev = run_events   # alias: keep the isinstance chain readable
-        with self._lock:
-            if isinstance(event, ev.RunStarted):
-                self.runs_started += 1
-                self._tls.tenant = event.tenant
-                self._tenant(event.tenant)["runs"] += 1
-            elif isinstance(event, ev.RunCompleted):
-                self.runs_completed += 1
-                self.runs_succeeded += bool(event.completed)
-                tenant = getattr(self._tls, "tenant", None)
-                if tenant is not None:
-                    self._tenant(tenant)["completed"] += 1
-                self._tls.tenant = None
-            elif isinstance(event, ev.LLMCompleted):
-                self.llm_calls += 1
-                self.input_tokens += event.event.input_tokens
-                self.output_tokens += event.event.output_tokens
-                agent = event.event.agent
-                self.calls_per_agent[agent] = \
-                    self.calls_per_agent.get(agent, 0) + 1
-                tenant = getattr(self._tls, "tenant", None)
-                if tenant is not None:
-                    g = self._tenant(tenant)
-                    g["llm_calls"] += 1
-                    g["tokens"] += (event.event.input_tokens
-                                    + event.event.output_tokens)
-                    g["cost_usd"] += event.event.cost
-            elif isinstance(event, ev.ToolInvoked):
-                self.tool_calls += 1
-                self.tool_errors += not event.event.ok
-            elif isinstance(event, ev.OverheadIncurred):
-                self.framework_events += 1
-            elif isinstance(event, ev.RunDegraded):
-                self._tenant(event.tenant)["degraded"] += 1
-            elif isinstance(event, ev.BudgetExceeded):
-                self._tenant(event.tenant)["rejected"] += 1
-            elif isinstance(event, ev.EngineStepped):
-                self.engine_steps += 1
-                self.engine_live = event.live
-                self.engine_queued = event.queued
-                self.engine_peak_live = max(self.engine_peak_live,
-                                            event.live)
-                self.engine_tokens += event.generated
-                self.engine_prefill_tokens += event.prefilled
-                self.engine_preemptions += event.preempted
-                self.engine_blocks_in_use = event.blocks_in_use
-                self.engine_prefix_hits += event.prefix_hits
+        self.bridge(event)
 
     def wire_observer(self):
         """Observer accepting wire-serialized event dicts
@@ -215,25 +166,153 @@ class RunMonitor:
             self(run_events.from_wire(wire_dict))
         return observe
 
+    # -- derived counters (registry reads) -----------------------------------
+    def _total(self, name: str) -> int:
+        return int(self.registry.total(name))
+
+    def _gauge(self, name: str, **labels) -> int:
+        g = self.registry.get(name)
+        return int(g.value(**labels)) if g is not None else 0
+
+    @property
+    def runs_started(self) -> int:
+        return self._total("repro_runs_started_total")
+
+    @property
+    def runs_completed(self) -> int:
+        return self._total("repro_runs_completed_total")
+
+    @property
+    def runs_succeeded(self) -> int:
+        c = self.registry.get("repro_runs_completed_total")
+        return int(c.value(completed="true")) if c is not None else 0
+
     @property
     def in_flight(self) -> int:
-        with self._lock:
-            return self.runs_started - self.runs_completed
+        return self.runs_started - self.runs_completed
+
+    @property
+    def llm_calls(self) -> int:
+        return self._total("repro_llm_calls_total")
+
+    @property
+    def input_tokens(self) -> int:
+        c = self.registry.get("repro_llm_tokens_total")
+        return int(c.value(direction="input")) if c is not None else 0
+
+    @property
+    def output_tokens(self) -> int:
+        c = self.registry.get("repro_llm_tokens_total")
+        return int(c.value(direction="output")) if c is not None else 0
+
+    @property
+    def tool_calls(self) -> int:
+        return self._total("repro_tool_calls_total")
+
+    @property
+    def tool_errors(self) -> int:
+        series = self.registry.series_values("repro_tool_calls_total")
+        return int(sum(v for k, v in series.items()
+                       if dict(k).get("ok") == "false"))
+
+    @property
+    def framework_events(self) -> int:
+        return self._total("repro_framework_overhead_total")
+
+    @property
+    def calls_per_agent(self) -> Dict[str, int]:
+        series = self.registry.series_values("repro_llm_calls_total")
+        out: Dict[str, int] = {}
+        for key, v in series.items():
+            agent = dict(key).get("agent", "")
+            out[agent] = out.get(agent, 0) + int(v)
+        return out
+
+    # serving-side gauges (EngineStepped stream)
+    @property
+    def engine_steps(self) -> int:
+        return self._total("repro_engine_steps_total")
+
+    @property
+    def engine_live(self) -> int:
+        return self._gauge("repro_engine_live")
+
+    @property
+    def engine_queued(self) -> int:
+        return self._gauge("repro_engine_queue_depth")
+
+    @property
+    def engine_peak_live(self) -> int:
+        return self._gauge("repro_engine_peak_live")
+
+    @property
+    def engine_tokens(self) -> int:
+        return self._total("repro_engine_decode_tokens_total")
+
+    @property
+    def engine_prefill_tokens(self) -> int:
+        return self._total("repro_engine_prefill_tokens_total")
+
+    @property
+    def engine_preemptions(self) -> int:
+        return self._total("repro_engine_preemptions_total")
+
+    @property
+    def engine_blocks_in_use(self) -> int:
+        return self._gauge("repro_engine_blocks_in_use")
+
+    @property
+    def engine_prefix_hits(self) -> int:
+        return self._total("repro_engine_prefix_hits_total")
+
+    # per-tenant gauges (multi-tenant serving)
+    @property
+    def tenants(self) -> Dict[str, Dict[str, Any]]:
+        r = self.registry
+        names = set()
+        for fam in self._TENANT_FAMILIES:
+            names.update(r.label_values(fam, "tenant"))
+        rejected: Dict[str, int] = {}
+        for key, v in r.series_values(
+                "repro_tenant_rejected_total").items():
+            t = dict(key).get("tenant", "")
+            rejected[t] = rejected.get(t, 0) + int(v)
+        spend = r.get("repro_tenant_spend_usd_total")
+
+        def val(fam: str, tenant: str) -> int:
+            m = r.get(fam)
+            return int(m.value(tenant=tenant)) if m is not None else 0
+
+        return {
+            t: {
+                "runs": val("repro_tenant_runs_total", t),
+                "completed": val("repro_tenant_completed_total", t),
+                "llm_calls": val("repro_tenant_llm_calls_total", t),
+                "tokens": val("repro_tenant_tokens_total", t),
+                "cost_usd": (spend.value(tenant=t, eq="1")
+                             if spend is not None else 0.0),
+                "degraded": val("repro_tenant_degraded_total", t),
+                "rejected": rejected.get(t, 0),
+            }
+            for t in sorted(names)
+        }
 
     def snapshot(self) -> Dict[str, Any]:
-        with self._lock:
+        # the registry RLock makes the cross-family read atomic, like
+        # the single monitor lock did pre-refactor
+        with self.registry._lock:
             return {
                 "runs_started": self.runs_started,
                 "runs_completed": self.runs_completed,
                 "runs_succeeded": self.runs_succeeded,
-                "in_flight": self.runs_started - self.runs_completed,
+                "in_flight": self.in_flight,
                 "llm_calls": self.llm_calls,
                 "input_tokens": self.input_tokens,
                 "output_tokens": self.output_tokens,
                 "tool_calls": self.tool_calls,
                 "tool_errors": self.tool_errors,
                 "framework_events": self.framework_events,
-                "calls_per_agent": dict(self.calls_per_agent),
+                "calls_per_agent": self.calls_per_agent,
                 "engine_steps": self.engine_steps,
                 "engine_live": self.engine_live,
                 "engine_queued": self.engine_queued,
@@ -243,8 +322,7 @@ class RunMonitor:
                 "engine_preemptions": self.engine_preemptions,
                 "engine_blocks_in_use": self.engine_blocks_in_use,
                 "engine_prefix_hits": self.engine_prefix_hits,
-                "tenants": {name: dict(g)
-                            for name, g in self.tenants.items()},
+                "tenants": self.tenants,
             }
 
 

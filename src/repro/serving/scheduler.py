@@ -297,13 +297,21 @@ class BatchScheduler:
         ``priority``: higher-priority requests are admitted first and may
         preempt lower-priority live slots; within a class admission is
         FIFO. ``tenant``: under fair-share admission the request queues
-        with its tenant's peers and waits its tenant's DRR turn. The
-        prompt is truncated to half the slot context and ``max_new``
-        clamped so prompt+generation always fit the fixed cache."""
+        with its tenant's peers and waits its tenant's DRR turn.
+        ``max_new`` is clamped to the slot context minus one, then the
+        prompt keeps its last ``max_len - max_new`` ids — the requested
+        decode budget is always honored and prompt+generation always fit
+        the fixed cache.  Prompts that fit are admitted verbatim even
+        when their prefill bucket equals ``max_len``: the fixed-shape
+        prefill recipe masks the padded cache rows (``col <= q_pos``)
+        and decode overwrites them before they become visible, so
+        ``bucket == cache_len`` is exact — the historical half-context
+        clamp (which silently dropped prompt heads and desynced the
+        serial cross-check) is gone."""
         ids = (list(prompt_ids) if prompt_ids is not None
                else self.engine.tokenizer.encode(prompt))
-        ids = ids[-(self.max_len // 2):]
-        max_new = max(1, min(max_new, self.max_len - len(ids)))
+        max_new = max(1, min(max_new, self.max_len - 1))
+        ids = ids[-(self.max_len - max_new):]
         with self._qlock:
             req = Request(self._next_rid, ids, max_new, priority=priority,
                           tenant=tenant, seq=self._seq,

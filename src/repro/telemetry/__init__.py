@@ -1,0 +1,42 @@
+"""Unified telemetry: deterministic metrics, exports, profiling, alerts.
+
+One pipeline every layer feeds (ROADMAP "Observability"):
+
+  * :mod:`repro.telemetry.metrics` — Counter/Gauge/Histogram with fixed
+    log-spaced buckets, labeled series, scoped :class:`MetricsRegistry`;
+    deterministic by construction (sorted iteration, injected clock);
+  * :mod:`repro.telemetry.bridge` — :class:`EventMetricsBridge` folds
+    any ``RunEvent`` stream (in-process or wire-replayed, identically —
+    the ``fold_spans`` discipline) into series, with histogram exemplars
+    carrying the span ids of the matching span tree;
+  * :mod:`repro.telemetry.export` — Prometheus text and
+    OTLP-metrics-shaped JSON renderings; byte-identical across replays
+    of the same seeded workload under a virtual clock;
+  * :mod:`repro.telemetry.profile` — :class:`JitProfiler` wraps the
+    jitted hot paths (``decode_step``, ``prefill_batch_ids``, the Pallas
+    kernel ops) to count compiles and record per-call wall time;
+  * :mod:`repro.telemetry.alerts` — :class:`SloMonitor`: windowed
+    error-budget burn rate against :class:`repro.traffic.SLOTarget`,
+    emitting typed :class:`repro.core.events.SloAlertFired` events.
+
+Telemetry is strictly opt-in: nothing here is imported by the serving /
+session hot paths unless a caller attaches a bridge or profiler, and
+with telemetry off the stack is bit-identical to the pre-telemetry
+tree (tested).
+"""
+from .alerts import SloMonitor
+from .bridge import EventMetricsBridge, fold_report
+from .export import (export_otlp_metrics_json, parse_prometheus,
+                     render_prometheus, to_otlp_metrics)
+from .metrics import (DEFAULT_COUNT_BUCKETS, DEFAULT_LATENCY_BUCKETS,
+                      Counter, Gauge, Histogram, MetricsRegistry,
+                      log_buckets)
+from .profile import JitProfiler
+
+__all__ = [
+    "Counter", "DEFAULT_COUNT_BUCKETS", "DEFAULT_LATENCY_BUCKETS",
+    "EventMetricsBridge", "Gauge", "Histogram", "JitProfiler",
+    "MetricsRegistry", "SloMonitor", "export_otlp_metrics_json",
+    "fold_report", "log_buckets", "parse_prometheus", "render_prometheus",
+    "to_otlp_metrics",
+]

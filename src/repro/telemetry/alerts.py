@@ -1,0 +1,148 @@
+"""SloMonitor: windowed error-budget burn rate against ``SLOTarget``s.
+
+The classic SRE construction, made deterministic: runs are bucketed
+into tumbling windows of ``window_s`` *virtual* seconds aligned to the
+timeline origin (window k covers ``[k*window_s, (k+1)*window_s)``).
+When an observation arrives past a window's end, the window finalizes:
+
+    error budget  = 1 - target          (success objective)
+    burn rate     = window error rate / error budget
+
+A burn rate of 1.0 means the window spent budget exactly at the rate
+that exhausts it over the SLO period; ``threshold`` (default 2.0) is
+the multiple that fires an alert.  Latency and TTFT objectives treat a
+run over ``slo.latency_s`` / ``slo.ttft_s`` as an error against the
+same budget — one uniform burn-rate currency across objectives, so the
+alert stream is comparable across dimensions.
+
+Alerts are typed events (:class:`repro.core.events.SloAlertFired`)
+handed to ``on_alert`` and counted into the registry
+(``repro_slo_alerts_total{slo=...}``, ``repro_slo_burn_rate{slo=...}``)
+— replaying the same seeded workload re-fires byte-identical alerts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from ..core.events import SloAlertFired
+from .metrics import MetricsRegistry
+
+
+@dataclasses.dataclass
+class _Window:
+    index: int
+    bad: Dict[str, int] = dataclasses.field(default_factory=dict)
+    total: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+class SloMonitor:
+    """Feed one finished run per :meth:`observe` call (or a whole
+    traffic report via :meth:`observe_records`); call :meth:`finalize`
+    after the last observation to flush the open window."""
+
+    OBJECTIVES = ("success", "latency", "ttft")
+
+    def __init__(self, slo, window_s: float = 60.0,
+                 threshold: float = 2.0, min_count: int = 1,
+                 registry: Optional[MetricsRegistry] = None,
+                 on_alert: Optional[Callable] = None):
+        self.slo = slo
+        self.window_s = float(window_s)
+        self.threshold = float(threshold)
+        self.min_count = int(min_count)
+        self.on_alert = on_alert
+        self.alerts: List[SloAlertFired] = []
+        self._window: Optional[_Window] = None
+        self._registry = registry
+        if registry is not None:
+            self._alert_counter = registry.counter(
+                "repro_slo_alerts_total",
+                "SLO burn-rate alerts, by objective")
+            self._burn_gauge = registry.gauge(
+                "repro_slo_burn_rate",
+                "Last finalized window's burn rate, by objective")
+        else:
+            self._alert_counter = None
+            self._burn_gauge = None
+
+    # -- budgets -------------------------------------------------------------
+    def _budget(self, objective: str) -> float:
+        """Error budget for one objective: the tolerated error fraction.
+        The success target doubles as the attainment target for the
+        latency/TTFT objectives (the SLO says: ``success_rate`` of runs
+        succeed AND meet latency)."""
+        return max(1.0 - float(self.slo.success_rate), 1e-9)
+
+    # -- observation ---------------------------------------------------------
+    def observe(self, t: float, ok: bool, latency_s: float,
+                ttft_s: Optional[float] = None) -> None:
+        """One finished run at virtual time ``t``."""
+        idx = int(t // self.window_s) if self.window_s > 0 else 0
+        if self._window is None:
+            self._window = _Window(idx)
+        elif idx > self._window.index:
+            self._finalize_window()
+            self._window = _Window(idx)
+        w = self._window
+        checks = {
+            "success": not ok,
+            "latency": latency_s > float(self.slo.latency_s),
+        }
+        if ttft_s is not None:
+            checks["ttft"] = ttft_s > float(self.slo.ttft_s)
+        for objective, violated in checks.items():
+            w.total[objective] = w.total.get(objective, 0) + 1
+            if violated:
+                w.bad[objective] = w.bad.get(objective, 0) + 1
+
+    def observe_records(self, records) -> None:
+        """Fold traffic records in record-index order (deterministic)."""
+        for r in sorted(records, key=lambda r: r.index):
+            self.observe(r.end, r.result.success, r.latency, r.ttft)
+        self.finalize()
+
+    def finalize(self) -> None:
+        """Flush the open window (call once after the last run)."""
+        if self._window is not None:
+            self._finalize_window()
+            self._window = None
+
+    # -- the burn check ------------------------------------------------------
+    def _finalize_window(self) -> None:
+        w = self._window
+        start = w.index * self.window_s
+        end = start + self.window_s
+        for objective in self.OBJECTIVES:
+            total = w.total.get(objective, 0)
+            if total < self.min_count:
+                continue
+            bad = w.bad.get(objective, 0)
+            burn = (bad / total) / self._budget(objective)
+            if self._burn_gauge is not None:
+                self._burn_gauge.set(burn, slo=objective)
+            if burn >= self.threshold:
+                target = {"success": self.slo.success_rate,
+                          "latency": self.slo.latency_s,
+                          "ttft": self.slo.ttft_s}[objective]
+                alert = SloAlertFired(
+                    t=end, slo=objective, window_start=start,
+                    window_s=self.window_s, burn_rate=burn,
+                    threshold=self.threshold, bad=bad, total=total,
+                    target=float(target))
+                self.alerts.append(alert)
+                if self._alert_counter is not None:
+                    self._alert_counter.inc(slo=objective)
+                if self.on_alert is not None:
+                    self.on_alert(alert)
+
+    # -- summary -------------------------------------------------------------
+    def summary(self) -> Dict[str, object]:
+        return {
+            "window_s": self.window_s,
+            "threshold": self.threshold,
+            "alerts": len(self.alerts),
+            "by_objective": {
+                o: sum(1 for a in self.alerts if a.slo == o)
+                for o in self.OBJECTIVES},
+        }

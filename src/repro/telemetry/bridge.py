@@ -1,0 +1,422 @@
+"""EventMetricsBridge: fold any ``RunEvent`` stream into metric series.
+
+The discipline mirrors :func:`repro.tenancy.tracing.fold_spans`: the
+event stream is the run's complete history, so metrics are a *derived
+view*, never a second instrumentation path — folding an in-process
+stream and its wire round-trip (``events_from_wire(events_to_wire(...))``)
+writes the identical series (tested).  **Losslessness**: every event
+increments ``repro_events_total{type=...}``, so the bridge's totals
+always reconcile against the raw stream length — no accounting escapes.
+
+Exemplar linkage: tool/LLM latency observations carry
+``{"run": <ordinal>, "span": <id>}`` exemplars where ``span`` reproduces
+the deterministic sequence ids ``fold_spans`` assigns the SAME stream —
+the bridge replays the span-id counter (which events open spans, which
+are annotations) without building the tree, so a histogram exemplar
+points at the exact span in the PR-8 OTLP trace export.
+
+Usage::
+
+    registry = MetricsRegistry(clock=timeline.now)
+    bridge = EventMetricsBridge(registry)
+    bridge.feed(events, deployment="faas", tenant="acme")  # whole stream
+    session = Session(on_event=bridge)                     # or live
+    scheduler.subscribe(bridge)                            # engine gauges
+    bridge.observe_record(record)                          # traffic layer
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterable, List, Optional
+
+from ..core import events as run_events
+from .metrics import (DEFAULT_COUNT_BUCKETS, DEFAULT_LATENCY_BUCKETS,
+                      MetricsRegistry)
+
+
+class _RunContext:
+    """Per-run fold state: labels plus the replayed span-id counter."""
+
+    __slots__ = ("deployment", "tenant", "default_tenant", "run_label",
+                 "span_seq", "run_open", "stage_open")
+
+    def __init__(self, deployment: str = "", tenant: str = "",
+                 run_label: str = ""):
+        self.deployment = deployment
+        self.tenant = tenant
+        self.default_tenant = tenant
+        self.run_label = run_label
+        self.span_seq = 0
+        self.run_open = False
+        self.stage_open = False
+
+    def next_span(self) -> str:
+        self.span_seq += 1
+        return "%016x" % self.span_seq
+
+
+class EventMetricsBridge:
+    """Folds ``RunEvent``s into a :class:`MetricsRegistry`.
+
+    One bridge serves three subscription styles:
+
+      * ``feed(events, ...)`` — fold a complete (possibly wire-replayed)
+        stream under explicit labels; deterministic, the exporter path;
+      * ``__call__(event)`` — live observer (``Session(on_event=...)``,
+        ``scheduler.subscribe``); per-thread run contexts track the
+        current tenant exactly like the pre-telemetry ``RunMonitor``;
+      * ``wire_observer()`` — live observer accepting raw wire dicts.
+
+    ``observe_record`` / ``observe_result`` / ``observe_caches`` fold the
+    layers the stream cannot see: client-side queue wait and latency
+    (:class:`repro.traffic.TrafficRecord`), Eq. 2 FaaS spend and success
+    (``RunResult``), and run/plan-cache hit rates (their ``stats()``
+    dicts — run-cache hits emit no events at all, by design).
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._lock = threading.Lock()
+        self._runs_seen = 0
+        self._tls = threading.local()
+        r = self.registry
+        # -- families (created eagerly: export shape is stable) -------------
+        self.events = r.counter(
+            "repro_events_total", "Run events folded, by type")
+        self.runs_started = r.counter(
+            "repro_runs_started_total", "Runs started")
+        self.runs_completed = r.counter(
+            "repro_runs_completed_total",
+            "Runs completed, by pattern-level outcome")
+        self.runs_in_flight = r.gauge(
+            "repro_runs_in_flight", "Started-but-not-completed runs")
+        self.llm_calls = r.counter(
+            "repro_llm_calls_total", "LLM completions, by agent")
+        self.llm_tokens = r.counter(
+            "repro_llm_tokens_total", "LLM tokens, by direction")
+        self.llm_cost = r.counter(
+            "repro_llm_cost_usd_total", "Eq. 1 LLM spend", unit="USD")
+        self.llm_latency = r.histogram(
+            "repro_llm_latency_seconds", "LLM completion latency",
+            unit="s", buckets=DEFAULT_LATENCY_BUCKETS)
+        self.tool_calls = r.counter(
+            "repro_tool_calls_total",
+            "Tool invocations, by server/tool/deployment/outcome")
+        self.tool_latency = r.histogram(
+            "repro_tool_latency_seconds",
+            "Tool-call latency, by server/tool/deployment", unit="s",
+            buckets=DEFAULT_LATENCY_BUCKETS)
+        self.tool_retries = r.counter(
+            "repro_tool_retries_total", "Failed retryable tool attempts")
+        self.hedges = r.counter(
+            "repro_hedges_total", "Hedged tool calls, by winner")
+        self.hedge_saved = r.counter(
+            "repro_hedge_saved_seconds_total",
+            "Virtual latency shaved off by hedging", unit="s")
+        self.overhead = r.counter(
+            "repro_framework_overhead_total", "Framework overhead events")
+        self.overhead_s = r.counter(
+            "repro_framework_overhead_seconds_total",
+            "Framework overhead latency", unit="s")
+        self.stages = r.counter(
+            "repro_stages_total", "Stage completions, by outcome")
+        # plan-compiler lifecycle
+        self.plan_events = r.counter(
+            "repro_plan_cache_events_total",
+            "Plan-cache lifecycle events (miss/compiled/fallback/replay)")
+        # tenancy
+        self.tenant_runs = r.counter(
+            "repro_tenant_runs_total", "Runs per tenant")
+        self.tenant_completed = r.counter(
+            "repro_tenant_completed_total", "Completed runs per tenant")
+        self.tenant_llm_calls = r.counter(
+            "repro_tenant_llm_calls_total", "LLM calls per tenant")
+        self.tenant_tokens = r.counter(
+            "repro_tenant_tokens_total", "LLM tokens per tenant")
+        self.tenant_spend = r.counter(
+            "repro_tenant_spend_usd_total",
+            "Per-tenant spend (eq=1: LLM tokens, eq=2: FaaS)", unit="USD")
+        self.tenant_degraded = r.counter(
+            "repro_tenant_degraded_total", "Soft-budget degradations")
+        self.tenant_rejected = r.counter(
+            "repro_tenant_rejected_total", "Hard-budget rejections")
+        # serving engine (EngineStepped stream)
+        self.engine_steps = r.counter(
+            "repro_engine_steps_total", "Scheduler decode steps")
+        self.engine_decode_tokens = r.counter(
+            "repro_engine_decode_tokens_total", "Tokens decoded")
+        self.engine_prefill_tokens = r.counter(
+            "repro_engine_prefill_tokens_total",
+            "Prompt tokens prefilled at admission")
+        self.engine_preemptions = r.counter(
+            "repro_engine_preemptions_total", "Slot preemptions")
+        self.engine_prefix_hits = r.counter(
+            "repro_engine_prefix_hits_total",
+            "Admissions served from the prefix cache")
+        self.engine_live = r.gauge(
+            "repro_engine_live", "Decode-batch occupancy (last step)")
+        self.engine_queued = r.gauge(
+            "repro_engine_queue_depth", "Waiting requests (last step)")
+        self.engine_peak_live = r.gauge(
+            "repro_engine_peak_live", "Peak decode-batch occupancy")
+        self.engine_occupancy = r.histogram(
+            "repro_engine_occupancy", "Decode-batch occupancy per step",
+            buckets=DEFAULT_COUNT_BUCKETS)
+        self.engine_blocks = r.gauge(
+            "repro_engine_blocks_in_use",
+            "Paged-KV blocks allocated (last step)")
+        # SLO alerts (SloMonitor writes, the bridge folds replayed ones)
+        self.slo_alerts = r.counter(
+            "repro_slo_alerts_total", "SLO burn-rate alerts, by objective")
+        # traffic layer (observe_record)
+        self.run_latency = r.histogram(
+            "repro_run_latency_seconds",
+            "Client-side run latency (queueing included), by scenario",
+            unit="s", buckets=DEFAULT_LATENCY_BUCKETS)
+        self.queue_wait = r.histogram(
+            "repro_queue_wait_seconds",
+            "Arrival-to-start queue wait, by scenario", unit="s",
+            buckets=DEFAULT_LATENCY_BUCKETS)
+        self.ttft = r.histogram(
+            "repro_ttft_seconds", "Time to first LLM completion",
+            unit="s", buckets=DEFAULT_LATENCY_BUCKETS)
+        self.run_crashes = r.counter(
+            "repro_run_crashes_total", "Injected platform deaths absorbed")
+        self.run_resumes = r.counter(
+            "repro_run_resumes_total", "Journal-served restarts")
+        self.faas_cost = r.counter(
+            "repro_faas_cost_usd_total", "Eq. 2 FaaS spend", unit="USD")
+        self.runs_succeeded = r.counter(
+            "repro_runs_succeeded_total",
+            "Runs whose final RunResult.success is True")
+        # caches (observe_caches — hits emit no events)
+        self.cache_gauge = r.gauge(
+            "repro_cache_hit_rate", "Cache hit rate, by cache")
+        self.cache_lookups = r.counter(
+            "repro_cache_lookups_total", "Cache lookups, by cache/outcome")
+
+    # -- context plumbing ----------------------------------------------------
+    def _context(self) -> _RunContext:
+        ctx = getattr(self._tls, "ctx", None)
+        if ctx is None:
+            ctx = self._tls.ctx = _RunContext()
+        return ctx
+
+    def _new_run(self, ctx: _RunContext) -> None:
+        with self._lock:
+            self._runs_seen += 1
+            ctx.run_label = str(self._runs_seen)
+        ctx.span_seq = 0
+        ctx.run_open = False
+        ctx.stage_open = False
+
+    # -- entry points --------------------------------------------------------
+    def __call__(self, event) -> None:
+        self._fold(event, self._context())
+
+    def wire_observer(self):
+        """Observer accepting wire-serialized event dicts — the same
+        dicts ``fold_spans`` sees after ``events_from_wire``."""
+        def observe(wire_dict) -> None:
+            self(run_events.from_wire(wire_dict))
+        return observe
+
+    def feed(self, events: Iterable, deployment: str = "",
+             tenant: str = "", run_label: str = "") -> None:
+        """Fold a complete stream under explicit labels.  ``run_label``
+        overrides the automatic run ordinal (the traffic layer passes
+        the record index so exemplars match the record table)."""
+        ctx = _RunContext(deployment=deployment, tenant=tenant)
+        if run_label:
+            ctx.run_label = run_label
+        else:
+            self._new_run(ctx)
+        for ev in events:
+            if isinstance(ev, dict):
+                ev = run_events.from_wire(ev)
+            self._fold(ev, ctx)
+
+    # -- the fold ------------------------------------------------------------
+    def _fold(self, ev, ctx: _RunContext) -> None:
+        e = run_events
+        self.events.inc(type=type(ev).__name__)
+        if isinstance(ev, e.RunStarted):
+            self._new_run(ctx)
+            ctx.next_span()                          # the run span
+            ctx.run_open = True
+            # the event's tenant wins; an explicit feed() tenant backs
+            # it up when the run was billed without a tenancy config
+            ctx.tenant = ev.tenant or ctx.default_tenant
+            self.runs_started.inc(pattern=ev.pattern,
+                                  deployment=ctx.deployment)
+            self.runs_in_flight.add(1)
+            self.tenant_runs.inc(tenant=ev.tenant)
+            if ev.pattern == "agentx-compiled":
+                self.plan_events.inc(event="replay")
+        elif isinstance(ev, e.RunCompleted):
+            # tenant attribution only inside an open run (the historical
+            # RunMonitor tracked the billing context thread-locally
+            # between RunStarted and RunCompleted)
+            if ctx.run_open:
+                self.tenant_completed.inc(tenant=ctx.tenant)
+            ctx.run_open = False
+            ctx.stage_open = False
+            ctx.tenant = ctx.default_tenant
+            self.runs_completed.inc(
+                completed="true" if ev.completed else "false")
+            self.runs_in_flight.add(-1)
+        elif isinstance(ev, e.StageStarted):
+            ctx.next_span()
+            ctx.stage_open = True
+        elif isinstance(ev, e.StageCompleted):
+            ctx.stage_open = False
+            self.stages.inc(success="true" if ev.success else "false")
+        elif isinstance(ev, e.LLMCompleted):
+            span = ctx.next_span()
+            le = ev.event
+            self.llm_calls.inc(agent=le.agent)
+            self.llm_tokens.inc(le.input_tokens, direction="input")
+            self.llm_tokens.inc(le.output_tokens, direction="output")
+            self.llm_cost.inc(le.cost)
+            self.llm_latency.observe(
+                le.latency, agent=le.agent, t=ev.t,
+                exemplar={"run": ctx.run_label, "span": span})
+            if ctx.run_open:    # billing context, RunMonitor discipline
+                self.tenant_llm_calls.inc(tenant=ctx.tenant)
+                self.tenant_tokens.inc(le.input_tokens + le.output_tokens,
+                                       tenant=ctx.tenant)
+                self.tenant_spend.inc(le.cost, tenant=ctx.tenant, eq="1")
+        elif isinstance(ev, e.ToolInvoked):
+            span = ctx.next_span()
+            te = ev.event
+            self.tool_calls.inc(server=te.server, tool=te.tool,
+                                deployment=ctx.deployment,
+                                ok="true" if te.ok else "false")
+            self.tool_latency.observe(
+                te.latency, server=te.server, tool=te.tool,
+                deployment=ctx.deployment, t=ev.t,
+                exemplar={"run": ctx.run_label, "span": span})
+        elif isinstance(ev, e.ToolRetried):
+            ctx.next_span()
+            self.tool_retries.inc(server=ev.server, tool=ev.tool)
+        elif isinstance(ev, e.RunHedged):
+            ctx.next_span()
+            self.hedges.inc(server=ev.server, tool=ev.tool,
+                            winner=ev.winner)
+            self.hedge_saved.inc(ev.saved_s, server=ev.server,
+                                 tool=ev.tool)
+        elif isinstance(ev, e.OverheadIncurred):
+            self._annotation_span(ctx)
+            self.overhead.inc(what=ev.event.what)
+            self.overhead_s.inc(ev.event.latency, what=ev.event.what)
+        elif isinstance(ev, e.PlanCacheMiss):
+            self._annotation_span(ctx)
+            self.plan_events.inc(event="miss")
+        elif isinstance(ev, e.PlanCompiled):
+            self._annotation_span(ctx)
+            self.plan_events.inc(event="compiled")
+        elif isinstance(ev, e.PlanFallback):
+            self._annotation_span(ctx)
+            self.plan_events.inc(event="fallback")
+        elif isinstance(ev, e.RunDegraded):
+            if not ctx.run_open:
+                ctx.next_span()
+            self.tenant_degraded.inc(tenant=ev.tenant)
+        elif isinstance(ev, e.BudgetExceeded):
+            if not ctx.run_open:
+                ctx.next_span()
+            self.tenant_rejected.inc(tenant=ev.tenant, kind=ev.kind)
+        elif isinstance(ev, e.EngineStepped):
+            self.engine_steps.inc()
+            self.engine_decode_tokens.inc(ev.generated)
+            self.engine_prefill_tokens.inc(ev.prefilled)
+            self.engine_preemptions.inc(ev.preempted)
+            self.engine_prefix_hits.inc(ev.prefix_hits)
+            self.engine_live.set(ev.live)
+            self.engine_queued.set(ev.queued)
+            self.engine_peak_live.max_of(ev.live)
+            self.engine_occupancy.observe(float(ev.live))
+            self.engine_blocks.set(ev.blocks_in_use)
+        elif isinstance(ev, e.SloAlertFired):
+            self._annotation_span(ctx)
+            self.slo_alerts.inc(slo=ev.slo)
+        else:
+            # losslessness: unknown/annotation events (PlanProduced,
+            # ReflectionEmitted, future types) still counted above in
+            # events_total; mirror fold_spans' span-id bookkeeping
+            self._annotation_span(ctx)
+
+    def _annotation_span(self, ctx: _RunContext) -> None:
+        """fold_spans turns a non-span event into a zero-width root span
+        (consuming an id) only when NO container is open; replicate so
+        exemplar span ids keep matching the tree."""
+        if not ctx.run_open and not ctx.stage_open:
+            ctx.next_span()
+
+    # -- layers the stream cannot see ---------------------------------------
+    def observe_result(self, result, tenant: str = "") -> None:
+        """Fold one finished ``RunResult``: artifact-level success and
+        the Eq. 2 FaaS spend (events carry only Eq. 1)."""
+        if result.success:
+            self.runs_succeeded.inc()
+        if result.faas_cost:
+            self.faas_cost.inc(result.faas_cost,
+                               deployment=result.deployment)
+            self.tenant_spend.inc(result.faas_cost, tenant=tenant, eq="2")
+
+    def observe_record(self, record) -> None:
+        """Fold one :class:`repro.traffic.TrafficRecord`: client-side
+        latency/queue-wait/TTFT plus durability counters, and the
+        record's result via :meth:`observe_result`."""
+        scenario = record.scenario
+        label = str(record.index)
+        self.run_latency.observe(record.latency, scenario=scenario,
+                                 t=record.end, exemplar={"run": label})
+        self.queue_wait.observe(record.queue_wait, scenario=scenario,
+                                t=record.start, exemplar={"run": label})
+        if record.ttft is not None:
+            self.ttft.observe(record.ttft, scenario=scenario,
+                              t=record.start)
+        if record.crashes:
+            self.run_crashes.inc(record.crashes, scenario=scenario)
+        if record.resumes:
+            self.run_resumes.inc(record.resumes, scenario=scenario)
+        self.observe_result(record.result,
+                            tenant=getattr(record.spec, "tenant", ""))
+
+    def observe_caches(self, run_cache: Optional[dict] = None,
+                       plan_cache: Optional[dict] = None) -> None:
+        """Fold cache ``stats()`` dicts — run-cache hits return stored
+        results without emitting a single event, so hit rates can only
+        come from the caches themselves."""
+        for name, stats in (("run", run_cache), ("plan", plan_cache)):
+            if not stats:
+                continue
+            hits = float(stats.get("hits", 0))
+            misses = float(stats.get("misses", 0))
+            self.cache_lookups.inc(hits, cache=name, outcome="hit")
+            self.cache_lookups.inc(misses, cache=name, outcome="miss")
+            lookups = hits + misses
+            self.cache_gauge.set(hits / lookups if lookups else 0.0,
+                                 cache=name)
+            if "fallbacks" in stats:
+                self.cache_lookups.inc(float(stats["fallbacks"]),
+                                       cache=name, outcome="fallback")
+
+
+def fold_report(bridge: EventMetricsBridge, report,
+                run_cache: Optional[dict] = None,
+                plan_cache: Optional[dict] = None) -> None:
+    """Fold a whole :class:`repro.traffic.TrafficReport` in record-index
+    order (deterministic regardless of completion interleaving): each
+    record's event stream under its spec's deployment/tenant labels,
+    then the record itself, then the cache stats."""
+    for rec in sorted(report.records, key=lambda r: r.index):
+        bridge.feed(rec.result.extras.get("events", ()),
+                    deployment=getattr(rec.spec, "deployment", ""),
+                    tenant=getattr(rec.spec, "tenant", ""),
+                    run_label=str(rec.index))
+        bridge.observe_record(rec)
+    plan = plan_cache if plan_cache is not None else report.plan_cache
+    bridge.observe_caches(run_cache=run_cache, plan_cache=plan)

@@ -1,0 +1,199 @@
+"""Registry exporters: Prometheus text format and OTLP-metrics JSON.
+
+Both renderings are pure functions of the registry state plus the
+registry clock — metrics iterate in sorted name order, series in sorted
+label order, floats format through one canonical ``repr``-based helper —
+so two registries folded from the same deterministic stream export
+byte-identically (the telemetry CI smoke asserts exactly this).
+
+Histogram exemplars render in OpenMetrics style
+(``... # {run="3",span="000000000000000a"} value timestamp``), carrying
+the run/span ids the bridge assigned — the same deterministic sequence
+ids :func:`repro.tenancy.tracing.fold_spans` gives the matching span
+tree, so a latency outlier in a dashboard links straight back to its
+span.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+
+
+def _fmt(v: float) -> str:
+    """Canonical number rendering: integers without the trailing ``.0``,
+    everything else through ``repr`` (shortest round-trip form)."""
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def _escape(v: str) -> str:
+    return (str(v).replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
+
+
+def _labels_text(key, extra: Optional[Dict[str, str]] = None) -> str:
+    items = list(key)
+    if extra:
+        items += sorted(extra.items())
+    if not items:
+        return ""
+    body = ",".join(f'{k}="{_escape(v)}"' for k, v in items)
+    return "{" + body + "}"
+
+
+def _exemplar_text(labels: Dict[str, str], value: float, t: float) -> str:
+    body = ",".join(f'{k}="{_escape(v)}"'
+                    for k, v in sorted(labels.items()))
+    return f" # {{{body}}} {_fmt(value)} {_fmt(t)}"
+
+
+def render_prometheus(registry: MetricsRegistry,
+                      prefix: str = "") -> str:
+    """Render every family as Prometheus/OpenMetrics text.  ``prefix``
+    filters to names starting with it (e.g. ``"repro_jit_"`` for the
+    profiling subsection alone)."""
+    lines: List[str] = []
+    with registry._lock:
+        for name in registry.names():
+            if prefix and not name.startswith(prefix):
+                continue
+            m = registry.get(name)
+            lines.append(f"# HELP {name} {_escape(m.help)}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            if isinstance(m, (Counter, Gauge)):
+                for key in m.labelsets():
+                    lines.append(f"{name}{_labels_text(key)} "
+                                 f"{_fmt(m.series[key])}")
+            elif isinstance(m, Histogram):
+                for key in m.labelsets():
+                    s = m.series[key]
+                    cum = 0
+                    for i, bound in enumerate(m.buckets):
+                        cum += s.counts[i]
+                        line = (f"{name}_bucket"
+                                f"{_labels_text(key, {'le': _fmt(bound)})}"
+                                f" {cum}")
+                        ex = s.exemplars.get(i)
+                        if ex is not None:
+                            line += _exemplar_text(*ex)
+                        lines.append(line)
+                    cum += s.counts[-1]
+                    line = (f"{name}_bucket"
+                            f"{_labels_text(key, {'le': '+Inf'})} {cum}")
+                    ex = s.exemplars.get(len(m.buckets))
+                    if ex is not None:
+                        line += _exemplar_text(*ex)
+                    lines.append(line)
+                    lines.append(f"{name}_sum{_labels_text(key)} "
+                                 f"{_fmt(s.sum)}")
+                    lines.append(f"{name}_count{_labels_text(key)} "
+                                 f"{s.count}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def parse_prometheus(text: str) -> Dict[str, Dict[str, float]]:
+    """Minimal parser for the text format above (CI smoke + tests):
+    returns ``{metric_name: {label_text: value}}``.  Exemplars are
+    stripped; the ``le`` label stays part of the label text."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        if " # " in line:                      # strip exemplar
+            line = line.split(" # ", 1)[0].rstrip()
+        head, _, value = line.rpartition(" ")
+        if "{" in head:
+            name, labels = head.split("{", 1)
+            labels = "{" + labels
+        else:
+            name, labels = head, ""
+        out.setdefault(name, {})[labels] = float(value)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# OTLP-metrics-shaped JSON
+
+
+def _otlp_attr(k: str, v: str) -> Dict[str, Any]:
+    return {"key": k, "value": {"stringValue": str(v)}}
+
+
+def _otlp_point(key, value: float, t: float) -> Dict[str, Any]:
+    return {"attributes": [_otlp_attr(k, v) for k, v in key],
+            "timeUnixNano": str(int(round(t * 1e9))),
+            "asDouble": float(value)}
+
+
+def to_otlp_metrics(registry: MetricsRegistry,
+                    service: str = "repro") -> Dict[str, Any]:
+    """Render the registry as an OTLP/JSON ``ExportMetricsServiceRequest``
+    payload (``resourceMetrics → scopeMetrics → metrics``), mirroring the
+    span exporter's shape discipline (:func:`repro.tenancy.tracing.to_otlp`).
+    Timestamps come from the registry clock — deterministic under a
+    virtual timeline."""
+    t = registry.now()
+    metrics: List[Dict[str, Any]] = []
+    with registry._lock:
+        for name in registry.names():
+            m = registry.get(name)
+            entry: Dict[str, Any] = {"name": name, "description": m.help,
+                                     "unit": m.unit}
+            if isinstance(m, Counter):
+                entry["sum"] = {
+                    "aggregationTemporality": 2,   # CUMULATIVE
+                    "isMonotonic": True,
+                    "dataPoints": [_otlp_point(k, m.series[k], t)
+                                   for k in m.labelsets()]}
+            elif isinstance(m, Gauge):
+                entry["gauge"] = {
+                    "dataPoints": [_otlp_point(k, m.series[k], t)
+                                   for k in m.labelsets()]}
+            elif isinstance(m, Histogram):
+                points = []
+                for k in m.labelsets():
+                    s = m.series[k]
+                    point = {
+                        "attributes": [_otlp_attr(a, b) for a, b in k],
+                        "timeUnixNano": str(int(round(t * 1e9))),
+                        "count": str(s.count),
+                        "sum": s.sum,
+                        "bucketCounts": [str(c) for c in s.counts],
+                        "explicitBounds": list(m.buckets),
+                    }
+                    exemplars = []
+                    for idx in sorted(s.exemplars):
+                        labels, val, when = s.exemplars[idx]
+                        exemplars.append({
+                            "filteredAttributes": [
+                                _otlp_attr(a, b)
+                                for a, b in sorted(labels.items())],
+                            "timeUnixNano": str(int(round(when * 1e9))),
+                            "asDouble": val})
+                    if exemplars:
+                        point["exemplars"] = exemplars
+                    points.append(point)
+                entry["histogram"] = {"aggregationTemporality": 2,
+                                      "dataPoints": points}
+            metrics.append(entry)
+    return {"resourceMetrics": [{
+        "resource": {"attributes": [
+            {"key": "service.name", "value": {"stringValue": service}},
+        ]},
+        "scopeMetrics": [{
+            "scope": {"name": "repro.telemetry"},
+            "metrics": metrics,
+        }],
+    }]}
+
+
+def export_otlp_metrics_json(registry: MetricsRegistry,
+                             service: str = "repro",
+                             indent: Optional[int] = None) -> str:
+    return json.dumps(to_otlp_metrics(registry, service=service),
+                      indent=indent, sort_keys=True)

@@ -1,0 +1,311 @@
+"""Deterministic metrics core: Counter / Gauge / Histogram / Registry.
+
+The design constraint that shapes everything here is *reproducibility*:
+the same event stream folded twice — in-process or wire-replayed, under
+the virtual clock — must yield byte-identical exports.  So:
+
+  * bucket bounds are FIXED log-spaced constants (no adaptive buckets);
+  * series are keyed by sorted ``(label, value)`` tuples and exports
+    iterate metrics and series in sorted order (insertion order never
+    leaks into the output);
+  * timestamps come from the registry's injected ``clock`` — pass a
+    :class:`repro.traffic.driver.VirtualTimeline`'s ``now`` (or any
+    deterministic callable) and nothing in an export depends on wall
+    time.
+
+Thread-safe: one registry lock covers every mutation, so a registry can
+sit behind ``Session.execute_many``'s worker threads exactly like the
+pre-telemetry ``RunMonitor`` did.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def log_buckets(start: float, decades: int) -> List[float]:
+    """Fixed 1-2.5-5 log-spaced bounds: ``start`` scaled through
+    ``decades`` powers of ten.  The mantissa pattern keeps every bound
+    exactly representable and human-readable while staying (near-)
+    uniform in log space."""
+    out: List[float] = []
+    for d in range(decades):
+        for m in (1.0, 2.5, 5.0):
+            out.append(start * (10.0 ** d) * m)
+    return out
+
+
+# latency: 1ms .. 500s  (runs, tool calls, queue waits)
+DEFAULT_LATENCY_BUCKETS: Tuple[float, ...] = tuple(log_buckets(0.001, 6))
+# counts: 1 .. 50k  (tokens per call, batch sizes)
+DEFAULT_COUNT_BUCKETS: Tuple[float, ...] = tuple(log_buckets(1.0, 5))
+
+
+def _label_key(labels: Dict[str, str]) -> LabelKey:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class Metric:
+    """Base: one named family holding labeled series."""
+
+    kind = "untyped"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str,
+                 unit: str = ""):
+        self.registry = registry
+        self.name = name
+        self.help = help
+        self.unit = unit
+        self.series: Dict[LabelKey, Any] = {}
+
+    def _get(self, labels: Dict[str, str], default):
+        key = _label_key(labels)
+        if key not in self.series:
+            self.series[key] = default()
+        return key
+
+    def labelsets(self) -> List[LabelKey]:
+        return sorted(self.series)
+
+
+class Counter(Metric):
+    """Monotonic accumulator."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name} cannot decrease")
+        with self.registry._lock:
+            key = self._get(labels, float)
+            self.series[key] += amount
+
+    def value(self, **labels) -> float:
+        with self.registry._lock:
+            return self.series.get(_label_key(labels), 0.0)
+
+    def total(self) -> float:
+        with self.registry._lock:
+            return sum(self.series.values())
+
+
+class Gauge(Metric):
+    """Last-written value per series (plus ``add`` / ``max_of`` for
+    running gauges like peak occupancy)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        with self.registry._lock:
+            key = self._get(labels, float)
+            self.series[key] = float(value)
+
+    def add(self, amount: float, **labels) -> None:
+        with self.registry._lock:
+            key = self._get(labels, float)
+            self.series[key] += amount
+
+    def max_of(self, value: float, **labels) -> None:
+        with self.registry._lock:
+            key = self._get(labels, float)
+            self.series[key] = max(self.series[key], float(value))
+
+    def value(self, **labels) -> float:
+        with self.registry._lock:
+            return self.series.get(_label_key(labels), 0.0)
+
+
+class HistogramSeries:
+    """One labeled histogram series: per-bucket counts + sum + count,
+    with at most one exemplar per bucket (the LAST observation that
+    landed there — deterministic for a deterministic stream)."""
+
+    __slots__ = ("counts", "sum", "count", "exemplars")
+
+    def __init__(self, n_buckets: int):
+        self.counts = [0] * (n_buckets + 1)   # +1: the +Inf bucket
+        self.sum = 0.0
+        self.count = 0
+        self.exemplars: Dict[int, Tuple[Dict[str, str], float, float]] = {}
+
+
+class Histogram(Metric):
+    """Fixed-bound histogram.  ``le`` semantics match Prometheus: an
+    observation equal to a bound lands in that bound's bucket (bucket
+    counts are cumulative only at export time)."""
+
+    kind = "histogram"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str,
+                 unit: str = "",
+                 buckets: Tuple[float, ...] = DEFAULT_LATENCY_BUCKETS):
+        super().__init__(registry, name, help, unit)
+        self.buckets: Tuple[float, ...] = tuple(sorted(buckets))
+
+    def _bucket_index(self, value: float) -> int:
+        for i, b in enumerate(self.buckets):
+            if value <= b:
+                return i
+        return len(self.buckets)             # +Inf
+
+    def observe(self, value: float,
+                exemplar: Optional[Dict[str, str]] = None,
+                t: Optional[float] = None, **labels) -> None:
+        """Record one observation; ``exemplar`` (e.g. ``{"run": ...,
+        "span": ...}``) links this sample back to its span tree, stamped
+        at ``t`` (defaults to the registry clock)."""
+        with self.registry._lock:
+            key = self._get(labels,
+                            lambda: HistogramSeries(len(self.buckets)))
+            s: HistogramSeries = self.series[key]
+            idx = self._bucket_index(value)
+            s.counts[idx] += 1
+            s.sum += value
+            s.count += 1
+            if exemplar is not None:
+                when = t if t is not None else self.registry.now()
+                s.exemplars[idx] = (dict(exemplar), float(value),
+                                    float(when))
+
+    def snapshot(self, **labels) -> Dict[str, Any]:
+        with self.registry._lock:
+            s = self.series.get(_label_key(labels))
+            if s is None:
+                return {"count": 0, "sum": 0.0, "counts": []}
+            return {"count": s.count, "sum": s.sum,
+                    "counts": list(s.counts)}
+
+
+class Scope:
+    """A registry view that stamps constant labels on every write —
+    ``registry.scope(layer="engine")`` gives subsystem code its own
+    namespace without threading label dicts everywhere.  Metrics created
+    through a scope live in the parent registry (same families, same
+    export)."""
+
+    def __init__(self, registry: "MetricsRegistry",
+                 const_labels: Dict[str, str]):
+        self._registry = registry
+        self._const = dict(const_labels)
+
+    def _bind(self, metric):
+        const = self._const
+
+        class _Bound:
+            def __getattr__(self, item):
+                fn = getattr(metric, item)
+                if item in ("inc", "set", "add", "max_of", "observe",
+                            "value"):
+                    reserved = ("amount", "value", "exemplar", "t")
+
+                    def call(*a, **kw):
+                        merged = dict(const)
+                        merged.update({k: v for k, v in kw.items()
+                                       if k not in reserved})
+                        merged.update({k: kw[k] for k in reserved
+                                       if k in kw})
+                        return fn(*a, **merged)
+                    return call
+                return fn
+
+        return _Bound()
+
+    def counter(self, name: str, help: str = "", unit: str = ""):
+        return self._bind(self._registry.counter(name, help, unit))
+
+    def gauge(self, name: str, help: str = "", unit: str = ""):
+        return self._bind(self._registry.gauge(name, help, unit))
+
+    def histogram(self, name: str, help: str = "", unit: str = "",
+                  buckets: Tuple[float, ...] = DEFAULT_LATENCY_BUCKETS):
+        return self._bind(self._registry.histogram(name, help, unit,
+                                                   buckets))
+
+
+class MetricsRegistry:
+    """The scoped home of every metric family.
+
+    ``clock`` is the single time source for exemplar/export timestamps:
+    inject a virtual clock (``VirtualTimeline().now``) and exports are a
+    pure function of the folded stream — the byte-identical-replay
+    invariant the telemetry tests enforce.  Re-requesting a name returns
+    the existing family (kind mismatches raise)."""
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self._lock = threading.RLock()
+        self._metrics: Dict[str, Metric] = {}
+        self._clock = clock if clock is not None else (lambda: 0.0)
+
+    def now(self) -> float:
+        return float(self._clock())
+
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        self._clock = clock
+
+    # -- family constructors -------------------------------------------------
+    def _family(self, cls, name: str, help: str, unit: str, **kw) -> Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(self, name, help, unit, **kw)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{m.kind}, requested {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "", unit: str = "") -> Counter:
+        return self._family(Counter, name, help, unit)
+
+    def gauge(self, name: str, help: str = "", unit: str = "") -> Gauge:
+        return self._family(Gauge, name, help, unit)
+
+    def histogram(self, name: str, help: str = "", unit: str = "",
+                  buckets: Tuple[float, ...] = DEFAULT_LATENCY_BUCKETS
+                  ) -> Histogram:
+        return self._family(Histogram, name, help, unit, buckets=buckets)
+
+    def scope(self, **const_labels) -> Scope:
+        return Scope(self, {k: str(v) for k, v in const_labels.items()})
+
+    # -- reads ---------------------------------------------------------------
+    def get(self, name: str) -> Optional[Metric]:
+        with self._lock:
+            return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def total(self, name: str) -> float:
+        """Sum of a counter/gauge family across all its series (0.0 for
+        an unregistered name)."""
+        m = self.get(name)
+        if m is None:
+            return 0.0
+        with self._lock:
+            if isinstance(m, Histogram):
+                return float(sum(s.count for s in m.series.values()))
+            return float(sum(m.series.values()))
+
+    def series_values(self, name: str) -> Dict[LabelKey, Any]:
+        """Sorted {label key: value} snapshot of one family."""
+        m = self.get(name)
+        if m is None:
+            return {}
+        with self._lock:
+            if isinstance(m, Histogram):
+                return {k: {"count": s.count, "sum": s.sum}
+                        for k, s in sorted(m.series.items())}
+            return dict(sorted(m.series.items()))
+
+    def label_values(self, name: str, label: str) -> List[str]:
+        """Sorted distinct values of ``label`` across a family's series."""
+        m = self.get(name)
+        if m is None:
+            return []
+        with self._lock:
+            vals = {dict(k).get(label) for k in m.series}
+        return sorted(v for v in vals if v is not None)

@@ -15,10 +15,11 @@ from repro.core.events import (_EVENT_TYPES, MIN_WIRE_VERSION, WIRE_VERSION,
                                OverheadIncurred, PlanCacheMiss, PlanCompiled,
                                PlanFallback, PlanProduced, ReflectionEmitted,
                                RunCompleted, RunDegraded, RunHedged,
-                               RunStarted, StageCompleted, StageStarted,
-                               ToolInvoked, ToolRetried, WireVersionError,
-                               derive_trace, events_from_wire,
-                               events_to_wire, from_wire, to_wire)
+                               RunStarted, SloAlertFired, StageCompleted,
+                               StageStarted, ToolInvoked, ToolRetried,
+                               WireVersionError, derive_trace,
+                               events_from_wire, events_to_wire, from_wire,
+                               to_wire)
 from repro.core.metrics import FrameworkEvent, LLMEvent, ToolEvent
 
 # one concrete instance of every wire-registered event type
@@ -52,6 +53,9 @@ SAMPLES = [
                 from_deployment="faas", to_deployment="local"),
     BudgetExceeded(t=0.0, tenant="acme", kind="tokens", used=1_000_001.0,
                    budget=1_000_000.0),
+    SloAlertFired(t=120.0, slo="success", window_start=60.0, window_s=60.0,
+                  burn_rate=5.0, threshold=2.0, bad=2, total=4,
+                  target=0.9),
 ]
 
 
@@ -191,3 +195,59 @@ def test_wire_version_error_is_value_error():
     """Callers already catching ValueError on corrupt payloads keep
     working."""
     assert issubclass(WireVersionError, ValueError)
+
+
+# -- telemetry PR: the SLO alert event --------------------------------------
+
+
+def test_slo_alert_roundtrips_and_is_json_safe():
+    import json
+    ev = SloAlertFired(t=120.0, slo="latency", window_start=60.0,
+                       window_s=60.0, burn_rate=3.5, threshold=2.0,
+                       bad=7, total=20, target=120.0)
+    wire = to_wire(ev)
+    assert json.loads(json.dumps(wire)) == wire
+    assert from_wire(wire) == ev
+
+
+def test_pre_telemetry_peer_alert_payload_forward_compat():
+    """A NEWER monitor may stamp extra alert context (e.g. a runbook
+    URL) — a pre-telemetry-schema peer must drop it, not raise, and the
+    known burn-rate fields must survive the trip."""
+    ev = SloAlertFired(t=60.0, slo="success", window_start=0.0,
+                       window_s=60.0, burn_rate=10.0, threshold=2.0,
+                       bad=6, total=6, target=0.9)
+    wire = to_wire(ev)
+    wire["runbook_url"] = "https://example.invalid/runbooks/slo-burn"
+    wire["severity"] = "page"
+    back = from_wire(wire)
+    assert back == ev
+    assert back.burn_rate == 10.0 and back.bad == 6
+
+
+def test_run_monitor_snapshot_gauges_on_paged_backend():
+    """RunMonitor (now a thin view over the telemetry registry) must
+    keep its historical snapshot() keys populated when subscribed to the
+    paged serving backend's EngineStepped stream."""
+    from repro.serving import get_llm_backend, reset_llm_backends
+    from repro.serving.engine import RunMonitor
+
+    reset_llm_backends()
+    try:
+        backend = get_llm_backend("jax-batched-paged")
+        monitor = RunMonitor()
+        backend.subscribe(monitor)      # before the client exists
+        out = backend.client().generate("count to three", 6)
+        assert out.new_tokens > 0
+        snap = monitor.snapshot()
+        assert snap["engine_steps"] > 0
+        # prefill yields the first token; decode steps produce the rest
+        assert snap["engine_tokens"] >= out.new_tokens - 1
+        assert snap["engine_prefill_tokens"] > 0
+        assert snap["engine_peak_live"] >= 1
+        assert snap["engine_blocks_in_use"] >= 0
+        # the same numbers must be live on the registry the monitor wraps
+        assert monitor.registry.total("repro_engine_steps_total") == \
+            snap["engine_steps"]
+    finally:
+        reset_llm_backends()

@@ -353,8 +353,8 @@ def test_generate_async_parity_with_serial_engine():
     cfg = get_config("tinyllama-1.1b").reduced()
     engine = Engine(cfg, temperature=0.0)
     client = EngineClient(BatchScheduler(engine, n_slots=4, max_len=64))
-    # short prompts: submit() clips to max_len//2 ids, which would
-    # desync the serial comparison
+    # short prompts: submit() clips to the max_len - max_new tail, which
+    # would desync the serial comparison for overlong prompts
     prompts = [f"request {i}: agents" for i in range(6)]
 
     async def fan_out():
